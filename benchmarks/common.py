@@ -1,0 +1,56 @@
+"""Shared harness: one trace + one cached parameter sweep reused by all the
+figure benchmarks (figs 3,4,5,6,8 are different views of the same sweep, as
+in the paper)."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+from repro.core.cluster import Cluster
+from repro.core.eventsim import EventSim, SimConfig
+from repro.core.metrics import Metrics, compute
+from repro.core.policies import AsyncConcurrencyPolicy, SyncKeepalivePolicy
+from repro.core.trace import TraceConfig, synthesize
+
+# the "400-function" experiment, scaled to bench runtime on 1 CPU core:
+# 200 functions x 40 min; warmup = first half (paper: 80 min, discard 40).
+TRACE_CFG = TraceConfig(num_functions=200, duration_s=2400,
+                        target_total_rps=31.25, seed=0)
+
+KEEPALIVES = [30, 60, 120, 300, 600, 1200, 1800]
+WINDOWS = [30, 60, 120, 300, 600, 1200, 1800]
+TARGETS = [0.5, 0.7, 1.0]
+
+
+@functools.lru_cache(maxsize=1)
+def trace():
+    return synthesize(TRACE_CFG)
+
+
+def run_policy(policy_factory, num_nodes: int = 8, failures=None) -> tuple[Metrics, float]:
+    t0 = time.time()
+    res = EventSim(trace(), Cluster(num_nodes), policy_factory, SimConfig(),
+                   failures=failures).run()
+    return compute(res), time.time() - t0
+
+
+@functools.lru_cache(maxsize=1)
+def sweep_sync() -> dict:
+    return {ka: run_policy(lambda f, k=ka: SyncKeepalivePolicy(keepalive_s=k))[0]
+            for ka in KEEPALIVES}
+
+
+@functools.lru_cache(maxsize=1)
+def sweep_async() -> dict:
+    out = {}
+    for w in WINDOWS:
+        for tgt in TARGETS:
+            out[(w, tgt)] = run_policy(
+                lambda f, w_=w, t_=tgt: AsyncConcurrencyPolicy(
+                    window_s=w_, target=t_))[0]
+    return out
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

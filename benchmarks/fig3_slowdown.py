@@ -1,0 +1,27 @@
+"""Fig 3: geomean p99 slowdown vs keepalive (sync) / window x target (async).
+Paper: saturation beyond 600 s; sync 18.9 -> 3.8; async ~6.4-7.1 at 600 s."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import KEEPALIVES, TARGETS, WINDOWS, emit, sweep_async, sweep_sync
+
+
+def run():
+    t0 = time.time()
+    sy = sweep_sync()
+    asy = sweep_async()
+    dt = (time.time() - t0) * 1e6
+    for ka in KEEPALIVES:
+        emit(f"fig3_sync_ka{ka}", dt / (len(KEEPALIVES) + len(asy)),
+             f"slowdown={sy[ka].slowdown_geomean_p99:.2f}")
+    for tgt in TARGETS:
+        for w in WINDOWS:
+            emit(f"fig3_async_w{w}_t{tgt}", dt / (len(KEEPALIVES) + len(asy)),
+                 f"slowdown={asy[(w, tgt)].slowdown_geomean_p99:.2f}")
+    return sy, asy
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,21 @@
+"""Fig 4: normalized memory usage vs keepalive / window x target.
+Paper: sync 2.9 -> 10 over 30 s -> 1800 s; async 2.7 -> 7.4 (target 0.7)."""
+
+from __future__ import annotations
+
+from benchmarks.common import KEEPALIVES, TARGETS, WINDOWS, emit, sweep_async, sweep_sync
+
+
+def run():
+    sy, asy = sweep_sync(), sweep_async()
+    for ka in KEEPALIVES:
+        emit(f"fig4_sync_ka{ka}", 0.0, f"norm_mem={sy[ka].normalized_memory:.2f}")
+    for tgt in TARGETS:
+        for w in WINDOWS:
+            emit(f"fig4_async_w{w}_t{tgt}", 0.0,
+                 f"norm_mem={asy[(w, tgt)].normalized_memory:.2f}")
+    return sy, asy
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Fig 6: normalized CPU overhead vs keepalive / window x target (+ the
+worker/master split).  Paper: sync 30% -> 12%; async 43% -> 15% -> 12%;
+~80% of overhead on workers."""
+
+from __future__ import annotations
+
+from benchmarks.common import KEEPALIVES, TARGETS, WINDOWS, emit, sweep_async, sweep_sync
+
+
+def run():
+    sy, asy = sweep_sync(), sweep_async()
+    for ka in KEEPALIVES:
+        m = sy[ka]
+        emit(f"fig6_sync_ka{ka}", 0.0,
+             f"cpu={m.cpu_overhead*100:.1f}%;worker_share={m.worker_share*100:.0f}%")
+    for tgt in TARGETS:
+        for w in WINDOWS:
+            m = asy[(w, tgt)]
+            emit(f"fig6_async_w{w}_t{tgt}", 0.0,
+                 f"cpu={m.cpu_overhead*100:.1f}%;worker_share={m.worker_share*100:.0f}%")
+    return sy, asy
+
+
+if __name__ == "__main__":
+    run()

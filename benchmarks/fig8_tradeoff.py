@@ -1,0 +1,34 @@
+"""Fig 8: the memory-performance trade-off space (slowdown vs normalized
+memory for every swept config) + Pareto set.  Paper (small scale): async
+target=1.0 is the most cost-efficient."""
+
+from __future__ import annotations
+
+from benchmarks.common import KEEPALIVES, TARGETS, WINDOWS, emit, sweep_async, sweep_sync
+
+
+def pareto(points):
+    """points: list of (mem, slow, name); returns non-dominated subset."""
+    out = []
+    for m, s, n in points:
+        if not any(m2 <= m and s2 <= s and (m2 < m or s2 < s)
+                   for m2, s2, _ in points):
+            out.append((m, s, n))
+    return sorted(out)
+
+
+def run():
+    sy, asy = sweep_sync(), sweep_async()
+    pts = [(sy[ka].normalized_memory, sy[ka].slowdown_geomean_p99, f"sync_ka{ka}")
+           for ka in KEEPALIVES]
+    pts += [(asy[(w, t)].normalized_memory, asy[(w, t)].slowdown_geomean_p99,
+             f"async_w{w}_t{t}") for w in WINDOWS for t in TARGETS]
+    front = pareto(pts)
+    for m, s, n in pts:
+        tag = "PARETO" if (m, s, n) in front else "dom"
+        emit(f"fig8_{n}", 0.0, f"mem={m:.2f};slowdown={s:.2f};{tag}")
+    return pts, front
+
+
+if __name__ == "__main__":
+    run()

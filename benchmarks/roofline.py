@@ -1,0 +1,96 @@
+"""Roofline report: reads the dry-run artifacts (artifacts/dryrun/*.json) and
+prints the three terms + bottleneck + MODEL_FLOPS/HLO_FLOPs per cell."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import ARTIFACTS, HBM_BW, LINK_BW, PEAK_FLOPS
+
+
+def _attn_flops_fwd(cfg, batch: int, seq: int, kind: str) -> float:
+    """Forward score+output matmul FLOPs summed over layers (causal halved;
+    sliding windows bound the key span; decode sees one query against the
+    mean context seq/2).  SSM/linear-attention layers have no score matmul."""
+    if cfg.family == "ssm":
+        return 0.0
+    from repro.models.stack import layer_windows
+    h, dh = cfg.num_heads, cfg.head_dim
+    if cfg.use_mla:
+        dh = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    total = 0.0
+    for w in layer_windows(cfg):
+        if kind == "decode":
+            span = min(w or seq, seq / 2)
+            total += 4.0 * batch * h * span * dh          # qlen = 1
+        else:
+            span = min(w or seq, seq)
+            causal = 0.5 if span == seq else 1.0
+            total += 4.0 * batch * seq * span * dh * h * causal
+    return total
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic 'useful' FLOPs: parameter matmuls (6ND train / 2ND inference)
+    + attention score/output matmuls.  Remat recompute, MoE dispatch einsums
+    and capacity padding are deliberately excluded — the HLO/model ratio
+    exposes them as overhead."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * b * s + 3.0 * _attn_flops_fwd(cfg, b, s, "train")
+    if shape.kind == "prefill":
+        return 2.0 * n * b * s + _attn_flops_fwd(cfg, b, s, "prefill")
+    return 2.0 * n * b + _attn_flops_fwd(cfg, b, s, "decode")
+
+
+def load_cells(mesh: str = "16x16") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, f"*__{mesh}.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("error") or d.get("skipped"):
+            continue
+        out.append(d)
+    return out
+
+
+def report(mesh: str = "16x16") -> list[dict]:
+    rows = []
+    for d in load_cells(mesh):
+        arch, shape = d["arch"], d["shape"]
+        per_dev = d["per_device"]
+        n_chips = d["n_chips"]
+        terms = d["roofline_s"]
+        mf = model_flops(arch, shape)
+        hlo_global = per_dev["flops"] * n_chips
+        useful = mf / max(hlo_global, 1e-9)
+        step_time = max(terms.values())
+        mfu = (mf / n_chips / step_time) / PEAK_FLOPS if step_time > 0 else 0.0
+        row = dict(arch=arch, shape=shape, mesh=mesh,
+                   compute_s=terms["compute"], memory_s=terms["memory"],
+                   collective_s=terms["collective"],
+                   bottleneck=d["bottleneck"], useful_ratio=useful, mfu=mfu)
+        rows.append(row)
+        emit(f"roofline_{arch}_{shape}_{mesh}", d.get("compile_s", 0) * 1e6,
+             f"compute={terms['compute']*1e3:.2f}ms;memory={terms['memory']*1e3:.2f}ms;"
+             f"collective={terms['collective']*1e3:.2f}ms;bound={d['bottleneck']};"
+             f"useful={useful:.2f};roofline_frac={mfu:.3f}")
+    return rows
+
+
+def run():
+    rows = report("16x16")
+    if not rows:
+        emit("roofline", 0.0, "NO_ARTIFACTS_RUN_DRYRUN_FIRST")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

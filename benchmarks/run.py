@@ -1,0 +1,26 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import importlib
+
+MODULES = [
+    "benchmarks.fig2_queueing_cdf",
+    "benchmarks.fig3_slowdown",
+    "benchmarks.fig4_memory",
+    "benchmarks.fig5_creation_rate",
+    "benchmarks.fig6_cpu_overhead",
+    "benchmarks.fig7_container_concurrency",
+    "benchmarks.fig8_tradeoff",
+    "benchmarks.fig9_large_scale",
+    "benchmarks.table1_trends",
+    "benchmarks.roofline",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for mod_name in MODULES:
+        mod = importlib.import_module(mod_name)
+        mod.run()
+
+
+if __name__ == '__main__':
+    main()

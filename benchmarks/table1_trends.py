@@ -1,0 +1,61 @@
+"""Table 1: the sign of each d(metric)/d(parameter) — the paper's summary.
+
+Expected (paper):
+  keepalive+   -> slowdown DOWN, memory UP,  overhead DOWN
+  window+      -> slowdown DOWN, memory UP,  overhead DOWN
+  target+      -> slowdown UP,   memory DOWN, overhead DOWN
+  concurrency+ -> slowdown ~,    memory DOWN, overhead DOWN
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, run_policy, sweep_async, sweep_sync
+from repro.core.policies import AsyncConcurrencyPolicy
+
+
+def _sign(lo, hi, tol=0.02):
+    if hi > lo * (1 + tol):
+        return "UP"
+    if hi < lo * (1 - tol):
+        return "DOWN"
+    return "~"
+
+
+def run():
+    sy, asy = sweep_sync(), sweep_async()
+    rows = {}
+
+    rows["keepalive"] = (
+        _sign(sy[1800].slowdown_geomean_p99, sy[30].slowdown_geomean_p99),
+        _sign(sy[30].normalized_memory, sy[1800].normalized_memory),
+        _sign(sy[1800].cpu_overhead, sy[30].cpu_overhead))
+    # report as effect of INCREASING the parameter:
+    rows["keepalive"] = (
+        _sign(sy[30].slowdown_geomean_p99, sy[1800].slowdown_geomean_p99),
+        _sign(sy[30].normalized_memory, sy[1800].normalized_memory),
+        _sign(sy[30].cpu_overhead, sy[1800].cpu_overhead))
+    rows["window"] = (
+        _sign(asy[(30, 0.7)].slowdown_geomean_p99, asy[(1800, 0.7)].slowdown_geomean_p99),
+        _sign(asy[(30, 0.7)].normalized_memory, asy[(1800, 0.7)].normalized_memory),
+        _sign(asy[(30, 0.7)].cpu_overhead, asy[(1800, 0.7)].cpu_overhead))
+    rows["target"] = (
+        _sign(asy[(600, 0.5)].slowdown_geomean_p99, asy[(600, 1.0)].slowdown_geomean_p99),
+        _sign(asy[(600, 0.5)].normalized_memory, asy[(600, 1.0)].normalized_memory),
+        _sign(asy[(600, 0.5)].cpu_overhead, asy[(600, 1.0)].cpu_overhead))
+
+    cc1, _ = run_policy(lambda f: AsyncConcurrencyPolicy(
+        window_s=60, target=0.7, container_concurrency=1))
+    cc4, _ = run_policy(lambda f: AsyncConcurrencyPolicy(
+        window_s=60, target=0.7, container_concurrency=4))
+    rows["container_conc"] = (
+        _sign(cc1.slowdown_geomean_p99, cc4.slowdown_geomean_p99, tol=0.3),
+        _sign(cc1.normalized_memory, cc4.normalized_memory),
+        _sign(cc1.cpu_overhead, cc4.cpu_overhead))
+
+    for param, (slow, mem, ovh) in rows.items():
+        emit(f"table1_{param}", 0.0, f"slowdown={slow};memory={mem};overhead={ovh}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

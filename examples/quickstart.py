@@ -1,0 +1,36 @@
+"""Quickstart: replay a synthetic Azure-like trace through both autoscaling
+policy families and print the paper's four metrics.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.cluster import Cluster
+from repro.core.eventsim import EventSim, SimConfig
+from repro.core.metrics import compute
+from repro.core.policies import (AsyncConcurrencyPolicy, HybridHistogramPolicy,
+                                 SyncKeepalivePolicy)
+from repro.core.trace import TraceConfig, synthesize
+
+
+def main():
+    trace = synthesize(TraceConfig(num_functions=150, duration_s=1800,
+                                   target_total_rps=25, seed=0))
+    print(f"trace: {len(trace):,} invocations over {trace.duration_s/60:.0f} min, "
+          f"{trace.num_functions} functions\n")
+    print(f"{'policy':34s} {'slowdown':>9s} {'norm_mem':>9s} {'create/s':>9s} "
+          f"{'cpu_ovh':>8s} {'worker%':>8s}")
+    for name, pf in [
+        ("Kn-Sync keepalive=30s", lambda f: SyncKeepalivePolicy(30)),
+        ("Kn-Sync keepalive=600s", lambda f: SyncKeepalivePolicy(600)),
+        ("Kn async w=60s target=0.7", lambda f: AsyncConcurrencyPolicy(window_s=60)),
+        ("Kn async w=600s target=0.7", lambda f: AsyncConcurrencyPolicy(window_s=600)),
+        ("HybridHistogram (beyond-paper)", lambda f: HybridHistogramPolicy()),
+    ]:
+        m = compute(EventSim(trace, Cluster(8), pf, SimConfig()).run())
+        print(f"{name:34s} {m.slowdown_geomean_p99:9.2f} {m.normalized_memory:9.2f} "
+              f"{m.creation_rate:9.3f} {m.cpu_overhead*100:7.1f}% "
+              f"{m.worker_share*100:7.0f}%")
+
+
+if __name__ == "__main__":
+    main()

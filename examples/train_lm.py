@@ -1,0 +1,31 @@
+"""Train a small LM for a few hundred steps with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+Interrupt it at any point and re-run: it resumes from the latest
+step-atomic checkpoint with an identical data stream.
+"""
+
+import argparse
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hymba-1.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+    train.main([
+        "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps),
+        "--seq-len", "128", "--batch", "8",
+        "--lr", "3e-3", "--warmup", "20",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+        "--log-every", "10",
+    ])
+
+
+if __name__ == "__main__":
+    main()

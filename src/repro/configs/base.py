@@ -1,0 +1,159 @@
+"""Config system: one dataclass describes every architecture in the zoo.
+
+Family selects the model implementation in ``repro.models``:
+  dense   - decoder-only transformer (GQA/sliding-window/softcap variants)
+  moe     - dense attention (or MLA) + mixture-of-experts FFN
+  ssm     - RWKV6 (attention-free)
+  hybrid  - Hymba (parallel attention + SSM heads)
+  encdec  - Whisper (encoder-decoder, stub audio frontend)
+  vlm     - InternVL2 (stub vision frontend + decoder LM)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None   # default d_model // num_heads
+
+    # -- attention variants ------------------------------------------------
+    rope_theta: float = 10_000.0
+    sliding_window: int = 4096       # window for "L" layers
+    # layer pattern, repeated over depth: "G"=global attn, "L"=local/sliding.
+    attn_pattern: str = "G"
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+
+    # -- MLA (deepseek-v2) ---------------------------------------------------
+    use_mla: bool = False
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    # -- MoE -----------------------------------------------------------------
+    num_experts: int = 0             # routed experts (0 = dense FFN)
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim
+    first_dense_layers: int = 0      # leading dense layers (deepseek)
+    capacity_factor: float = 1.25
+    moe_impl: str = "dispatch"       # dispatch (GShard einsum) | ragged (sort)
+    aux_loss_coef: float = 0.01
+
+    # -- SSM / RWKV / hybrid ---------------------------------------------------
+    ssm_state: int = 16              # mamba d_state (hymba)
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    rwkv_head_dim: int = 64
+    # hybrid: indices of full-attention layers (others sliding window)
+    full_attn_layers: tuple[int, ...] = ()
+    num_meta_tokens: int = 0
+
+    # -- enc-dec / multimodal ---------------------------------------------------
+    num_encoder_layers: int = 0
+    encoder_seq: int = 0             # frames (whisper) / patches (internvl)
+    num_patches: int = 0
+
+    # -- numerics / execution ---------------------------------------------------
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # dtype of materialized attention score blocks in the jnp path.  fp32 is
+    # the safe default; bf16 halves score HBM traffic at ~1e-2 softmax
+    # precision (the Pallas kernel keeps fp32 accumulation in VMEM for free).
+    attn_scores_dtype: str = "float32"
+    remat: str = "full"              # none | full | dots
+    attn_impl: str = "ref"           # ref | pallas | pallas_interpret
+    scan_layers: bool = True
+    norm_eps: float = 1e-6
+
+    source: str = ""                 # provenance note
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- analytic parameter counts (for roofline MODEL_FLOPS) -------------------
+    def param_count(self) -> int:
+        from repro.models import registry
+        return registry.param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.models import registry
+        return registry.param_count(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str, full: Callable[[], ModelConfig], smoke: Callable[[], ModelConfig]):
+    _REGISTRY[name] = full
+    _SMOKE[name] = smoke
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _SMOKE[name]()
+
+
+def list_archs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# Which (arch, shape) cells are exercised. long_500k only for archs with
+# sub-quadratic/local attention (see DESIGN.md §Arch-applicability).
+LONG_CTX_ARCHS = {"gemma3-4b", "gemma2-27b", "rwkv6-3b", "hymba-1.5b"}
+
+
+def cells(arch: str) -> list[str]:
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in LONG_CTX_ARCHS:
+        out.append("long_500k")
+    return out

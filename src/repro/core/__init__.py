@@ -1,0 +1,11 @@
+# The paper's primary contribution: serverless autoscaling policies, the
+# control plane that runs them, trace synthesis, metrics, and the two
+# simulators (discrete-event oracle + vectorized lax.scan fleet simulator).
+from repro.core.policies import (  # noqa: F401
+    AsyncConcurrencyPolicy,
+    HybridHistogramPolicy,
+    Policy,
+    PolicyDecision,
+    SyncKeepalivePolicy,
+    make_policy,
+)

@@ -1,0 +1,66 @@
+"""Cluster model: nodes, placement, failures, stragglers.
+
+Nodes hold instances (bin-packed by memory).  A failure kills a node: its
+instances vanish and their in-flight requests are re-queued — the control
+plane must recreate capacity (fault tolerance is exercised in tests and the
+large-scale example).  Straggler nodes multiply execution latency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Node:
+    node_id: int
+    memory_mb: float
+    slowdown: float = 1.0          # >1 = straggler
+    alive: bool = True
+    used_mb: float = 0.0
+
+    def fits(self, mb: float) -> bool:
+        return self.alive and self.used_mb + mb <= self.memory_mb
+
+
+class Cluster:
+    def __init__(self, num_nodes: int, node_memory_mb: float = 192_000.0,
+                 straggler_frac: float = 0.0, straggler_slowdown: float = 3.0,
+                 seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.nodes = []
+        for i in range(num_nodes):
+            slow = straggler_slowdown if rng.uniform() < straggler_frac else 1.0
+            self.nodes.append(Node(i, node_memory_mb, slow))
+        self._rr = 0
+
+    def place(self, memory_mb: float) -> Optional[Node]:
+        """Round-robin first-fit (spreads churn across workers, like the
+        default kube-scheduler LeastAllocated behavior)."""
+        n = len(self.nodes)
+        for k in range(n):
+            node = self.nodes[(self._rr + k) % n]
+            if node.fits(memory_mb):
+                self._rr = (self._rr + k + 1) % n
+                node.used_mb += memory_mb
+                return node
+        return None
+
+    def release(self, node: Node, memory_mb: float) -> None:
+        node.used_mb = max(0.0, node.used_mb - memory_mb)
+
+    def fail_node(self, node_id: int) -> Node:
+        node = self.nodes[node_id]
+        node.alive = False
+        node.used_mb = 0.0
+        return node
+
+    def recover_node(self, node_id: int) -> None:
+        self.nodes[node_id].alive = True
+
+    @property
+    def total_memory_mb(self) -> float:
+        return sum(n.memory_mb for n in self.nodes if n.alive)

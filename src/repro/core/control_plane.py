@@ -1,0 +1,261 @@
+"""The REAL control plane: router + queue + autoscaler reconciler.
+
+This is the production-style implementation of the same policy objects used
+by the simulators.  Workers are pluggable (paper §3.4's KWOK methodology):
+
+* ``SimWorkerBackend``  — virtual-clock workers (instance creation latency,
+  per-request service times); the control plane logic is real, the workers
+  are simulated.  This scales the control plane to thousands of instances.
+* ``JaxWorkerBackend``  — real ``ModelReplica``s running actual JAX model
+  decode steps on the local device(s); cold start = real init + compile.
+
+The control plane is tick-driven and clock-agnostic: pass wall-clock now for
+real serving, virtual now for simulation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from collections import deque
+from typing import Optional, Protocol
+
+from repro.core.policies import Policy
+from repro.serving.engine import ModelReplica, ServeRequest
+
+
+class WorkerBackend(Protocol):
+    def create_instance(self, fn: int, now: float) -> int: ...
+    def poll_ready(self, now: float) -> list[int]: ...
+    def dispatch(self, iid: int, req: ServeRequest, now: float) -> None: ...
+    def poll_completions(self, now: float) -> list[tuple[int, ServeRequest]]: ...
+    def teardown(self, iid: int, now: float) -> None: ...
+    def memory_bytes(self, iid: int) -> int: ...
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+class SimWorkerBackend:
+    """KWOK-style simulated workers under a virtual clock."""
+
+    def __init__(self, cold_start_s: float = 1.0, instance_mem_bytes: int = 256 << 20,
+                 service_time: Optional[dict] = None, default_service_s: float = 0.5):
+        self._iid = itertools.count()
+        self._ready_at: dict[int, float] = {}
+        self._ready: set[int] = set()
+        self._running: list[tuple[float, int, ServeRequest]] = []
+        self.cold_start_s = cold_start_s
+        self.mem = instance_mem_bytes
+        self.service_time = service_time or {}
+        self.default_service_s = default_service_s
+        self.creations = 0
+        self.teardowns = 0
+
+    def create_instance(self, fn, now):
+        iid = next(self._iid)
+        self._ready_at[iid] = now + self.cold_start_s
+        self.creations += 1
+        return iid
+
+    def poll_ready(self, now):
+        out = [i for i, t in self._ready_at.items() if t <= now]
+        for i in out:
+            del self._ready_at[i]
+            self._ready.add(i)
+        return out
+
+    def dispatch(self, iid, req, now):
+        dur = self.service_time.get(req.fn, self.default_service_s)
+        self._running.append((now + dur, iid, req))
+
+    def poll_completions(self, now):
+        done = [(i, r) for t, i, r in self._running if t <= now]
+        self._running = [(t, i, r) for t, i, r in self._running if t > now]
+        for _, r in done:
+            r.done_t = now
+        return done
+
+    def teardown(self, iid, now):
+        self._ready.discard(iid)
+        self._ready_at.pop(iid, None)
+        self.teardowns += 1
+
+    def memory_bytes(self, iid):
+        return self.mem
+
+
+class JaxWorkerBackend:
+    """Real replicas running real models (cold start = init + compile)."""
+
+    def __init__(self, cfg, *, max_slots: int = 4, max_seq: int = 128):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self._iid = itertools.count()
+        self.replicas: dict[int, ModelReplica] = {}
+        self._fresh: list[int] = []
+        self.creations = 0
+        self.teardowns = 0
+        self.cold_start_times: list[float] = []
+
+    def create_instance(self, fn, now):
+        iid = next(self._iid)
+        rep = ModelReplica(self.cfg, max_slots=self.max_slots, max_seq=self.max_seq,
+                           seed=iid)
+        self.replicas[iid] = rep
+        self._fresh.append(iid)
+        self.creations += 1
+        self.cold_start_times.append(rep.cold_start_s)
+        return iid
+
+    def poll_ready(self, now):
+        out, self._fresh = self._fresh, []
+        return out
+
+    def dispatch(self, iid, req, now):
+        assert self.replicas[iid].add(req, now)
+
+    def poll_completions(self, now):
+        done = []
+        for iid, rep in self.replicas.items():
+            for r in rep.step(now):
+                done.append((iid, r))
+        return done
+
+    def teardown(self, iid, now):
+        self.replicas.pop(iid, None)
+        self.teardowns += 1
+
+    def memory_bytes(self, iid):
+        rep = self.replicas.get(iid)
+        return rep.memory_bytes() if rep else 0
+
+
+# ---------------------------------------------------------------------------
+# control plane
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Inst:
+    iid: int
+    fn: int
+    state: str = "starting"        # starting | up
+    in_flight: int = 0
+    idle_since: float = math.nan
+
+
+class ControlPlane:
+    def __init__(self, backend: WorkerBackend, policy_factory, num_functions: int,
+                 tick_s: float = 0.5):
+        self.backend = backend
+        self.tick_s = tick_s
+        self.policies: list[Policy] = [policy_factory(f) for f in range(num_functions)]
+        self.queues: list[deque] = [deque() for _ in range(num_functions)]
+        self.instances: dict[int, _Inst] = {}
+        self.by_fn: list[list[_Inst]] = [[] for _ in range(num_functions)]
+        self.completed: list[ServeRequest] = []
+        self._last_tick = -math.inf
+
+    # -- helpers ------------------------------------------------------------------
+
+    def _idle(self, fn):
+        return [i for i in self.by_fn[fn] if i.state == "up" and i.in_flight == 0]
+
+    def _free_slot_inst(self, fn):
+        cc = self.policies[fn].container_concurrency
+        for i in self.by_fn[fn]:
+            if i.state == "up" and i.in_flight < cc:
+                return i
+        return None
+
+    def _create(self, fn, now):
+        iid = self.backend.create_instance(fn, now)
+        inst = _Inst(iid, fn)
+        self.instances[iid] = inst
+        self.by_fn[fn].append(inst)
+
+    def _teardown(self, inst, now):
+        self.backend.teardown(inst.iid, now)
+        self.instances.pop(inst.iid, None)
+        self.by_fn[inst.fn].remove(inst)
+
+    # -- API ------------------------------------------------------------------------
+
+    def submit(self, req: ServeRequest, now: float):
+        fn = req.fn
+        pol = self.policies[fn]
+        starting = sum(1 for i in self.by_fn[fn] if i.state == "starting")
+        dec = pol.on_arrival(now, len(self._idle(fn)), 0, starting,
+                             len(self.queues[fn]))
+        for _ in range(dec.create):
+            self._create(fn, now)
+        inst = self._free_slot_inst(fn)
+        if inst is not None:
+            inst.in_flight += 1
+            self.backend.dispatch(inst.iid, req, now)
+        else:
+            req.cold = True
+            self.queues[fn].append(req)
+
+    def tick(self, now: float):
+        # 1. newly ready instances
+        for iid in self.backend.poll_ready(now):
+            inst = self.instances.get(iid)
+            if inst is None:
+                continue
+            inst.state = "up"
+            inst.idle_since = now
+        # 2. completions free slots
+        for iid, req in self.backend.poll_completions(now):
+            self.completed.append(req)
+            inst = self.instances.get(iid)
+            if inst is not None:
+                inst.in_flight = max(0, inst.in_flight - 1)
+                if inst.in_flight == 0:
+                    inst.idle_since = now
+        # 3. drain queues into free slots
+        for fn, q in enumerate(self.queues):
+            while q:
+                inst = self._free_slot_inst(fn)
+                if inst is None:
+                    break
+                req = q.popleft()
+                inst.in_flight += 1
+                self.backend.dispatch(inst.iid, req, now)
+        # 4. policy reconciliation + keepalive expiry
+        for fn, pol in enumerate(self.policies):
+            conc = sum(i.in_flight for i in self.by_fn[fn]) + len(self.queues[fn])
+            starting = sum(1 for i in self.by_fn[fn] if i.state == "starting")
+            up = sum(1 for i in self.by_fn[fn] if i.state == "up")
+            idle = self._idle(fn)
+            dec = pol.on_tick(now, conc, up, starting, len(idle))
+            for _ in range(dec.create):
+                self._create(fn, now)
+            for inst in sorted(idle, key=lambda i: i.idle_since)[:dec.retire]:
+                self._teardown(inst, now)
+            ka = pol.keepalive(now)
+            if not math.isinf(ka):
+                for inst in list(self._idle(fn)):
+                    if now - inst.idle_since > ka \
+                            and pol.on_idle_expired(now, now - inst.idle_since):
+                        self._teardown(inst, now)
+        self._last_tick = now
+
+    # -- observability -----------------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        total_mem = sum(self.backend.memory_bytes(i) for i in self.instances)
+        busy_mem = sum(self.backend.memory_bytes(iid)
+                       for iid, inst in self.instances.items() if inst.in_flight > 0)
+        return {
+            "instances": len(self.instances),
+            "starting": sum(1 for i in self.instances.values() if i.state == "starting"),
+            "queued": sum(len(q) for q in self.queues),
+            "memory_bytes": total_mem,
+            "busy_memory_bytes": busy_mem,
+        }

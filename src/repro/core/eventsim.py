@@ -1,0 +1,345 @@
+"""Discrete-event cluster simulator — the oracle for the paper's experiments.
+
+Replays a Trace against a Cluster under a Policy (per function), modelling:
+  instance lifecycle (cold start, busy/idle, keepalive expiry, teardown),
+  container concurrency slots, request queueing (sync buffers per new
+  instance, async queues until any instance frees), node failures with
+  re-queued requests, straggler nodes, and the CPU/memory accounting behind
+  the paper's four metrics.
+
+CPU overhead model (calibrated against the paper's Fig. 5/6 in
+EXPERIMENTS.md):  churn dominates — a create+teardown pair costs ~8 CPU-s
+(80% on the worker: sandbox setup, CNI, queue-proxy, probes; 20% master),
+plus a small per-request data-plane cost, a per-idle-instance keepalive cost
+(probes/metrics), and a constant control-plane floor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.cluster import Cluster
+from repro.core.policies import Policy
+from repro.core.trace import Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    cold_start_s: float = 1.0            # Knative-like; 0.3 approximates Lambda
+    cold_start_jitter: float = 0.15
+    warm_latency_s: float = 0.008        # data-plane hop on every dispatch
+    teardown_s: float = 0.2
+    tick_s: float = 2.0
+    # CPU accounting (cpu-seconds)
+    cpu_create_worker_s: float = 5.2
+    cpu_create_master_s: float = 1.3
+    cpu_teardown_worker_s: float = 1.2
+    cpu_teardown_master_s: float = 0.3
+    cpu_request_s: float = 0.02          # activator/queue-proxy per request
+    cpu_idle_per_s: float = 0.002        # probes+metrics per warm instance
+    cpu_master_floor_per_s: float = 1.5  # apiserver/controllers/prometheus
+    cpu_worker_floor_per_node_s: float = 0.3   # kubelet/containerd/node-exporter
+    num_worker_nodes_hint: int = 8
+    instance_overhead_mb: float = 10.0   # per-sandbox memory overhead
+    seed: int = 0
+    warmup_s: Optional[float] = None     # measurement starts here (default T/2)
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    fn: int
+    arrival: float
+    start: float = math.nan
+    end: float = math.nan
+    dur: float = 0.0
+    cold: bool = False
+    requeued: int = 0
+
+
+class _Instance:
+    __slots__ = ("iid", "fn", "node", "cc", "in_flight", "state", "idle_since",
+                 "expire_version", "memory_mb")
+
+    def __init__(self, iid, fn, node, cc, memory_mb):
+        self.iid, self.fn, self.node, self.cc = iid, fn, node, cc
+        self.in_flight = 0
+        self.state = "starting"            # starting | up | dead
+        self.idle_since = math.nan
+        self.expire_version = 0
+        self.memory_mb = memory_mb
+
+
+class _FnState:
+    __slots__ = ("instances", "queue", "starting", "policy")
+
+    def __init__(self, policy: Policy):
+        self.instances: list[_Instance] = []
+        self.queue: deque = deque()
+        self.starting = 0
+        self.policy = policy
+
+    @property
+    def idle_count(self):
+        return sum(1 for i in self.instances if i.state == "up" and i.in_flight == 0)
+
+    @property
+    def free_slots(self):
+        return sum(i.cc - i.in_flight for i in self.instances if i.state == "up")
+
+    @property
+    def concurrency(self):
+        return sum(i.in_flight for i in self.instances) + len(self.queue)
+
+
+@dataclasses.dataclass
+class SimResult:
+    records: list[RequestRecord]
+    creations: int
+    teardowns: int
+    cpu_useful_s: float
+    cpu_worker_overhead_s: float
+    cpu_master_overhead_s: float
+    mem_samples_total_mb: np.ndarray
+    mem_samples_busy_mb: np.ndarray
+    sample_times: np.ndarray
+    measure_window_s: float
+    dropped: int = 0
+
+
+class EventSim:
+    def __init__(self, trace: Trace, cluster: Cluster, policy_factory: Callable[[int], Policy],
+                 cfg: SimConfig = SimConfig(),
+                 failures: Optional[list[tuple[float, int]]] = None):
+        self.trace = trace
+        self.cluster = cluster
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.fns = [_FnState(policy_factory(f)) for f in range(trace.num_functions)]
+        self.failures = sorted(failures or [])
+        self._events: list = []
+        self._counter = itertools.count()
+        self._iid = itertools.count()
+        self.records: list[RequestRecord] = []
+        self.creations = 0
+        self.teardowns = 0
+        self.cpu_useful = 0.0
+        self.cpu_worker = 0.0
+        self.cpu_master = 0.0
+        self.mem_total: list[float] = []
+        self.mem_busy: list[float] = []
+        self.sample_t: list[float] = []
+        self.dropped = 0
+        self._measure_from = cfg.warmup_s if cfg.warmup_s is not None \
+            else trace.duration_s / 2
+
+    # -- event machinery -----------------------------------------------------------
+
+    def _push(self, t: float, kind: str, payload=None):
+        heapq.heappush(self._events, (t, next(self._counter), kind, payload))
+
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        for t, fn, dur in zip(self.trace.t, self.trace.fn, self.trace.dur):
+            rec = RequestRecord(int(fn), float(t), dur=float(dur))
+            self._push(float(t), "arrival", rec)
+        for t in np.arange(0, self.trace.duration_s, cfg.tick_s):
+            self._push(float(t), "tick")
+        for t, node in self.failures:
+            self._push(t, "fail", node)
+        end_t = self.trace.duration_s
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            if t > end_t and kind in ("tick",):
+                continue
+            getattr(self, f"_on_{kind}")(t, payload)
+        return SimResult(
+            self.records, self.creations, self.teardowns, self.cpu_useful,
+            self.cpu_worker, self.cpu_master,
+            np.asarray(self.mem_total), np.asarray(self.mem_busy),
+            np.asarray(self.sample_t), end_t - self._measure_from, self.dropped)
+
+    def _measuring(self, t) -> bool:
+        return t >= self._measure_from
+
+    # -- instance lifecycle ----------------------------------------------------------
+
+    def _create_instance(self, t: float, fn: int):
+        fs = self.fns[fn]
+        mem = self.trace.profile.memory_mb[fn] + self.cfg.instance_overhead_mb
+        node = self.cluster.place(mem)
+        if node is None:
+            self.dropped += 1          # cluster full: creation fails
+            return
+        inst = _Instance(next(self._iid), fn, node, fs.policy.container_concurrency, mem)
+        fs.instances.append(inst)
+        fs.starting += 1
+        if self._measuring(t):
+            self.creations += 1
+            self.cpu_worker += self.cfg.cpu_create_worker_s
+            self.cpu_master += self.cfg.cpu_create_master_s
+        delay = self.cfg.cold_start_s * (1 + self.cfg.cold_start_jitter * self.rng.uniform(-1, 1))
+        delay *= inst.node.slowdown
+        self._push(t + delay, "ready", inst)
+
+    def _teardown(self, t: float, inst: _Instance):
+        if inst.state == "dead":
+            return
+        inst.state = "dead"
+        fs = self.fns[inst.fn]
+        if inst in fs.instances:
+            fs.instances.remove(inst)
+        self.cluster.release(inst.node, inst.memory_mb)
+        if self._measuring(t):
+            self.teardowns += 1
+            self.cpu_worker += self.cfg.cpu_teardown_worker_s
+            self.cpu_master += self.cfg.cpu_teardown_master_s
+
+    def _schedule_expire(self, t: float, inst: _Instance):
+        fs = self.fns[inst.fn]
+        ka = fs.policy.keepalive(t)
+        if math.isinf(ka):
+            return
+        inst.expire_version += 1
+        self._push(t + ka, "expire", (inst, inst.expire_version))
+
+    # -- dispatch ----------------------------------------------------------------------
+
+    def _dispatch(self, t: float, inst: _Instance, rec: RequestRecord):
+        rec.start = t + self.cfg.warm_latency_s
+        inst.in_flight += 1
+        inst.idle_since = math.nan
+        service = rec.dur * inst.node.slowdown + self.cfg.warm_latency_s
+        self._push(t + service, "done", (inst, rec))
+        if self._measuring(t):
+            self.cpu_master += self.cfg.cpu_request_s
+
+    def _drain_queue(self, t: float, fs: _FnState):
+        while fs.queue:
+            inst = next((i for i in fs.instances
+                         if i.state == "up" and i.in_flight < i.cc), None)
+            if inst is None:
+                return
+            self._dispatch(t, inst, fs.queue.popleft())
+
+    # -- event handlers ----------------------------------------------------------------
+
+    def _on_arrival(self, t: float, rec: RequestRecord):
+        fs = self.fns[rec.fn]
+        decision = fs.policy.on_arrival(
+            t, fs.idle_count, fs.free_slots - fs.idle_count * 0, fs.starting,
+            len(fs.queue))
+        for _ in range(decision.create):
+            self._create_instance(t, rec.fn)
+        inst = next((i for i in fs.instances
+                     if i.state == "up" and i.in_flight < i.cc), None)
+        if inst is not None:
+            self._dispatch(t, inst, rec)
+        else:
+            rec.cold = True
+            fs.queue.append(rec)
+
+    def _on_ready(self, t: float, inst: _Instance):
+        if inst.state == "dead":
+            return
+        fs = self.fns[inst.fn]
+        inst.state = "up"
+        fs.starting -= 1
+        inst.idle_since = t
+        self._drain_queue(t, fs)
+        if inst.in_flight == 0:
+            self._schedule_expire(t, inst)
+
+    def _on_done(self, t: float, payload):
+        inst, rec = payload
+        rec.end = t
+        if self._measuring(rec.arrival) and not math.isnan(rec.start):
+            self.cpu_useful += rec.dur
+        if self._measuring(rec.arrival):
+            self.records.append(rec)
+        if inst.state == "dead":
+            return
+        inst.in_flight -= 1
+        fs = self.fns[inst.fn]
+        self._drain_queue(t, fs)
+        if inst.in_flight == 0 and inst.state == "up":
+            inst.idle_since = t
+            self._schedule_expire(t, inst)
+
+    def _on_expire(self, t: float, payload):
+        inst, version = payload
+        if inst.state != "up" or inst.in_flight > 0 or inst.expire_version != version:
+            return
+        idle_for = t - inst.idle_since
+        if self.fns[inst.fn].policy.on_idle_expired(t, idle_for):
+            self._teardown(t, inst)
+
+    def _on_tick(self, t: float, _):
+        total_mb = busy_mb = 0.0
+        n_idle = 0
+        for fs in self.fns:
+            conc = fs.concurrency
+            dec = fs.policy.on_tick(t, conc, len(fs.instances) - fs.starting,
+                                    fs.starting, fs.idle_count)
+            fn = fs.instances[0].fn if fs.instances else None
+            for _ in range(dec.create):
+                fidx = self.fns.index(fs) if fn is None else fn
+                self._create_instance(t, fidx)
+            if dec.retire:
+                idles = sorted((i for i in fs.instances
+                                if i.state == "up" and i.in_flight == 0),
+                               key=lambda i: i.idle_since)
+                for inst in idles[:dec.retire]:
+                    self._teardown(t, inst)
+            for i in fs.instances:
+                total_mb += i.memory_mb
+                if i.in_flight > 0:
+                    busy_mb += i.memory_mb
+                elif i.state == "up":
+                    n_idle += 1
+        if self._measuring(t):
+            alive_nodes = sum(1 for n in self.cluster.nodes if n.alive)
+            self.cpu_worker += (n_idle * self.cfg.cpu_idle_per_s
+                                + alive_nodes * self.cfg.cpu_worker_floor_per_node_s
+                                ) * self.cfg.tick_s
+            self.cpu_master += self.cfg.cpu_master_floor_per_s * self.cfg.tick_s
+            self.mem_total.append(total_mb)
+            self.mem_busy.append(busy_mb)
+            self.sample_t.append(t)
+
+    def _on_fail(self, t: float, node_id: int):
+        node = self.cluster.fail_node(node_id)
+        for fs in self.fns:
+            dead = [i for i in fs.instances if i.node is node]
+            for inst in dead:
+                inst.state = "dead"
+                fs.instances.remove(inst)
+                if self._measuring(t):
+                    self.teardowns += 1
+        # in-flight requests on the dead node are re-queued when their 'done'
+        # fires: mark via node.alive in _on_done? simpler: scan outstanding
+        # events is O(E); instead requeue at fail time:
+        new_events = []
+        for ev in self._events:
+            tt, c, kind, payload = ev
+            if kind == "done" and payload[0].node is node and payload[0].state == "dead":
+                rec = payload[1]
+                rec.requeued += 1
+                fs = self.fns[rec.fn]
+                dec = fs.policy.on_arrival(t, fs.idle_count, 0, fs.starting,
+                                           len(fs.queue))
+                for _ in range(dec.create):
+                    self._create_instance(t, rec.fn)
+                fs.queue.append(rec)
+            else:
+                new_events.append(ev)
+        heapq.heapify(new_events)
+        self._events = new_events
+        for fs in self.fns:
+            self._drain_queue(t, fs)

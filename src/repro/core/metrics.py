@@ -1,0 +1,93 @@
+"""The paper's metric suite (§3.6).
+
+* end-to-end performance: geometric mean over functions of the per-function
+  99th-percentile slowdown ((end - arrival) / pure duration); 1.0 = unloaded.
+* normalized memory usage: time-averaged total instance memory / time-averaged
+  memory of instances actively serving a request.
+* instance creation rate (events/s over the measurement window).
+* normalized CPU overhead: system CPU (worker + master) / useful function CPU,
+  plus the worker/master breakdown (paper: ~80/20).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.eventsim import SimResult
+
+
+@dataclasses.dataclass
+class Metrics:
+    slowdown_geomean_p99: float
+    normalized_memory: float
+    creation_rate: float
+    cpu_overhead: float
+    cpu_overhead_worker: float
+    cpu_overhead_master: float
+    worker_share: float
+    queueing_p50: float
+    queueing_p99: float
+    cold_fraction: float
+    completed: int
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def per_function_p99_slowdown(result: SimResult, min_requests: int = 5) -> np.ndarray:
+    by_fn: dict[int, list[float]] = {}
+    for r in result.records:
+        if math.isnan(r.end):
+            continue
+        slow = max((r.end - r.arrival) / max(r.dur, 1e-6), 1.0)
+        by_fn.setdefault(r.fn, []).append(slow)
+    out = []
+    for fn, v in by_fn.items():
+        if len(v) >= min_requests:
+            out.append(float(np.percentile(v, 99)))
+    return np.asarray(out)
+
+
+def compute(result: SimResult) -> Metrics:
+    slows = per_function_p99_slowdown(result)
+    geo = float(np.exp(np.mean(np.log(np.maximum(slows, 1.0))))) if len(slows) else math.nan
+
+    total = result.mem_samples_total_mb
+    busy = result.mem_samples_busy_mb
+    norm_mem = float(total.mean() / max(busy.mean(), 1e-9)) if len(total) else math.nan
+
+    window = max(result.measure_window_s, 1e-9)
+    rate = result.creations / window
+
+    useful = max(result.cpu_useful_s, 1e-9)
+    w = result.cpu_worker_overhead_s
+    m = result.cpu_master_overhead_s
+    qd = np.asarray([r.start - r.arrival for r in result.records
+                     if not math.isnan(r.start)])
+    colds = np.asarray([r.cold for r in result.records], dtype=bool)
+
+    return Metrics(
+        slowdown_geomean_p99=geo,
+        normalized_memory=norm_mem,
+        creation_rate=rate,
+        cpu_overhead=(w + m) / useful,
+        cpu_overhead_worker=w / useful,
+        cpu_overhead_master=m / useful,
+        worker_share=w / max(w + m, 1e-9),
+        queueing_p50=float(np.percentile(qd, 50)) if len(qd) else math.nan,
+        queueing_p99=float(np.percentile(qd, 99)) if len(qd) else math.nan,
+        cold_fraction=float(colds.mean()) if len(colds) else math.nan,
+        completed=len(result.records),
+    )
+
+
+def queueing_cdf(result: SimResult, points: int = 200):
+    qd = np.sort(np.asarray([r.start - r.arrival for r in result.records
+                             if not math.isnan(r.start)]))
+    if len(qd) == 0:
+        return np.zeros(0), np.zeros(0)
+    idx = np.linspace(0, len(qd) - 1, points).astype(int)
+    return qd[idx], (idx + 1) / len(qd)

@@ -1,0 +1,154 @@
+"""Autoscaling policies — the paper's primary subject.
+
+Two families (paper §2.1) plus one beyond-paper baseline:
+
+* ``SyncKeepalivePolicy`` (AWS-Lambda-like, §2.1.1): instance creation on the
+  request critical path; idle instances retained for ``keepalive_s``.
+* ``AsyncConcurrencyPolicy`` (Knative/GCR-like, §2.1.2): a dedicated
+  autoscaler computes ``desired_f = ceil(avg_concurrency_f(window) /
+  (utilization_target * container_concurrency))`` and reconciles.
+* ``HybridHistogramPolicy`` (Shahrad'20, beyond-paper): per-function idle-time
+  histogram decides a pre-warm delay + adaptive keepalive window.
+
+Policies are deliberately tiny pure-state machines so the SAME object drives
+(a) the discrete-event oracle, (b) the vectorized lax.scan simulator (via
+their jnp twin in ``simjax``), and (c) the real JAX serving control plane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PolicyDecision:
+    create: int = 0            # instances to create now
+    retire: int = 0            # idle instances to retire now
+
+
+class Policy:
+    """Per-function autoscaling policy instance."""
+
+    #: synchronous policies gate request handling on instance creation
+    synchronous: bool = False
+    container_concurrency: int = 1
+
+    def on_arrival(self, t: float, idle: int, busy_slots: int, starting: int,
+                   queued: int) -> PolicyDecision:
+        return PolicyDecision()
+
+    def on_tick(self, t: float, concurrency: float, instances: int,
+                starting: int, idle: int) -> PolicyDecision:
+        return PolicyDecision()
+
+    def keepalive(self, t: float) -> float:
+        """How long an idle instance is retained."""
+        return math.inf
+
+    def on_idle_expired(self, t: float, idle_for: float) -> bool:
+        """True -> tear the instance down."""
+        return True
+
+
+@dataclasses.dataclass
+class SyncKeepalivePolicy(Policy):
+    """Fixed-keepalive synchronous scaling (paper's Kn-Sync / AWS Lambda)."""
+    keepalive_s: float = 600.0
+    container_concurrency: int = 1
+    synchronous: bool = True
+
+    def __post_init__(self):
+        Policy.__init__(self)
+
+    def on_arrival(self, t, idle, busy_slots, starting, queued):
+        # no free slot anywhere -> create exactly one instance for this request
+        if idle == 0 and busy_slots == 0:
+            return PolicyDecision(create=1)
+        return PolicyDecision()
+
+    def keepalive(self, t):
+        return self.keepalive_s
+
+
+@dataclasses.dataclass
+class AsyncConcurrencyPolicy(Policy):
+    """Knative KPA-style window-averaged concurrency scaling.
+
+    desired = ceil(window_avg(concurrency) / (target * container_concurrency))
+    Scale-down is damped by the window average itself (longer window = more
+    inertia), mirroring Knative's stable mode; panic mode is disabled in the
+    paper's setup and here.
+    """
+    window_s: float = 60.0
+    target: float = 0.7
+    container_concurrency: int = 1
+    tick_s: float = 2.0
+    synchronous: bool = False
+
+    def __post_init__(self):
+        Policy.__init__(self)
+        n = max(1, int(round(self.window_s / self.tick_s)))
+        self._buf: deque[float] = deque(maxlen=n)
+
+    def on_tick(self, t, concurrency, instances, starting, idle):
+        self._buf.append(concurrency)
+        avg = sum(self._buf) / len(self._buf)
+        desired = math.ceil(avg / (self.target * self.container_concurrency) - 1e-9)
+        desired = max(desired, 0)
+        have = instances + starting
+        if desired > have:
+            return PolicyDecision(create=desired - have)
+        if desired < have:
+            return PolicyDecision(retire=min(have - desired, idle))
+        return PolicyDecision()
+
+    def keepalive(self, t):
+        return math.inf  # teardown is driven by on_tick retire decisions
+
+
+@dataclasses.dataclass
+class HybridHistogramPolicy(Policy):
+    """Beyond-paper: Shahrad'20 hybrid histogram keepalive.
+
+    Tracks the function's idle-time distribution; keeps instances warm for the
+    99th percentile of observed idle times (within [min_s, max_s]).  Behaves
+    like a short keepalive for chatty functions and avoids wasting memory on
+    rarely-invoked ones.
+    """
+    min_s: float = 30.0
+    max_s: float = 1800.0
+    quantile: float = 0.99
+    container_concurrency: int = 1
+    synchronous: bool = True
+
+    def __post_init__(self):
+        Policy.__init__(self)
+        self._idle_samples: deque[float] = deque(maxlen=256)
+        self._last_arrival: Optional[float] = None
+
+    def on_arrival(self, t, idle, busy_slots, starting, queued):
+        if self._last_arrival is not None:
+            self._idle_samples.append(t - self._last_arrival)
+        self._last_arrival = t
+        if idle == 0 and busy_slots == 0:
+            return PolicyDecision(create=1)
+        return PolicyDecision()
+
+    def keepalive(self, t):
+        if not self._idle_samples:
+            return self.min_s
+        q = float(np.quantile(np.asarray(self._idle_samples), self.quantile))
+        return float(np.clip(q * 1.1, self.min_s, self.max_s))
+
+
+def make_policy(name: str, **kw) -> Policy:
+    return {
+        "sync": SyncKeepalivePolicy,
+        "async": AsyncConcurrencyPolicy,
+        "hybrid": HybridHistogramPolicy,
+    }[name](**kw)

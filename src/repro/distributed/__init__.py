@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (  # noqa: F401
+    LOGICAL_RULES,
+    current_mesh,
+    logical_to_spec,
+    set_mesh,
+    shard,
+    sharding_for,
+    spec_tree_to_shardings,
+)

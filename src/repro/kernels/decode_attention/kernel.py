@@ -1,0 +1,106 @@
+"""Single-token decode attention (FlashDecoding-style), Pallas TPU.
+
+One grid row per (batch, kv-head); the G grouped q-heads form the row
+dimension of the MXU matmul (G x block_k scores per step), so GQA decode
+keeps the MXU busy even at query length 1.  The kv axis is the innermost
+sequential grid dim; online-softmax accumulators (m, l, acc) live in VMEM
+scratch and the output is written on the last kv block.
+
+kv blocks beyond the current position (pos is a per-batch s32 scalar in
+SMEM) are skipped entirely with @pl.when — decode cost is O(pos), not
+O(T_max), which is what makes the 500k-context decode shapes viable.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                scale: float, softcap: Optional[float], block_k: int,
+                n_kv: int, kv_heads: int):
+    bk = pl.program_id(0)
+    kj = pl.program_id(1)
+    b = bk // kv_heads
+    pos = pos_ref[b]
+    k_start = kj * block_k
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k_start <= pos)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (G, D)
+        k = k_ref[0].astype(jnp.float32)          # (block_k, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos <= pos
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k, v, pos, *, softcap: Optional[float] = None,
+                         block_k: int = 512, interpret: bool = False):
+    """q: (BK, G, D); k, v: (BK, T, D); pos: (B,) s32.  BK = B * kv_heads."""
+    bk_total, g, d = q.shape
+    t = k.shape[1]
+    b = pos.shape[0]
+    kv_heads = bk_total // b
+    block_k = min(block_k, t)
+    assert t % block_k == 0
+    n_kv = t // block_k
+    grid = (bk_total, n_kv)
+
+    kernel = functools.partial(
+        _dec_kernel, scale=1.0 / math.sqrt(d), softcap=softcap,
+        block_k=block_k, n_kv=n_kv, kv_heads=kv_heads)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, g, d), lambda bkh, j, pos_ref: (bkh, 0, 0)),
+                pl.BlockSpec((1, block_k, d), lambda bkh, j, pos_ref: (bkh, j, 0)),
+                pl.BlockSpec((1, block_k, d), lambda bkh, j, pos_ref: (bkh, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, g, d), lambda bkh, j, pos_ref: (bkh, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bk_total, g, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos, q, k, v)

@@ -1,0 +1,34 @@
+"""Jit'd wrapper: model layout (B, 1, H, D) + cache (B, T, K, D) -> kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_fwd
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_k", "interpret", "impl"))
+def decode_attention(q, k, v, pos, *, softcap: Optional[float] = None,
+                     block_k: int = 512, interpret: bool = False,
+                     impl: str = "pallas"):
+    """q: (B, 1, H, D); k, v: (B, T, K, D); pos: (B,).  -> (B, 1, H, D)."""
+    b, _, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q[:, 0].reshape(b, kh, g, d)
+    if impl == "ref":
+        out = decode_attention_ref(qg, k.transpose(0, 2, 1, 3),
+                                   v.transpose(0, 2, 1, 3), pos, softcap=softcap)
+        return out.reshape(b, 1, h, d)
+    qk = qg.reshape(b * kh, g, d)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * kh, t, d)
+    vv = v.transpose(0, 2, 1, 3).reshape(b * kh, t, d)
+    out = decode_attention_fwd(qk, kk, vv, pos.astype(jnp.int32),
+                               softcap=softcap, block_k=block_k,
+                               interpret=interpret)
+    return out.reshape(b, 1, h, d)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for single-token GQA decode attention.
+
+q: (B, K, G, D) one query token per sequence (G q-heads per kv head);
+k, v: (B, K, T, D) full cache; pos: (B,) current absolute positions
+(keys at indices > pos are masked).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos, *, softcap: Optional[float] = None):
+    b, kh, g, d = q.shape
+    t = k.shape[2]
+    scores = jnp.einsum("bkgd,bktd->bkgt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    mask = jnp.arange(t)[None, :] <= pos[:, None]          # (B, T)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    probs = jnp.exp(scores - scores.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bkgt,bktd->bkgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

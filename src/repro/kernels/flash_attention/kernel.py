@@ -1,0 +1,134 @@
+"""Flash attention forward, Pallas TPU.
+
+Layout: q (BH, S, D); k, v (BK, T, D) — batch and heads flattened so the
+grid's first dim is one (batch, q-head) pair; the GQA group mapping
+(q head -> kv head) happens in the BlockSpec index_maps.
+
+Grid: (BH, S // block_q, T // block_k), dimension semantics
+(parallel, parallel, arbitrary): the innermost kv dim runs sequentially per
+(bh, qi) so the online-softmax accumulators can live in VMEM scratch:
+  m (block_q, 1) running max, l (block_q, 1) running denominator,
+  acc (block_q, D) fp32 running numerator.
+Output is written once, on the last kv block (standard revisiting pattern).
+
+VMEM budget per step (bf16, block_q = block_k = 512, D = 128):
+  q 128KB + k 128KB + v 128KB + acc 256KB + scores 1MB(f32) ~= 1.7MB << 16MB.
+MXU alignment: block_q/block_k multiples of 128; D padded by Mosaic if < 128.
+
+Sliding windows skip fully-masked kv blocks via @pl.when (no FLOPs issued on
+TPU for those grid points beyond the branch).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, window: Optional[int],
+               softcap: Optional[float], block_q: int, block_k: int,
+               n_kv: int, q_offset: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    q_start = qi * block_q + q_offset
+    k_start = kj * block_k
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level relevance: causal -> kv block must start at/before the last
+    # q row; window -> kv block must end after the first q row's window start
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + block_q - 1
+    if window is not None:
+        relevant = relevant & (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (block_q, D)
+        k = k_ref[0].astype(jnp.float32)          # (block_k, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # (block_q, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        q_offset: int = 0,
+                        block_q: int = 512, block_k: int = 512,
+                        interpret: bool = False):
+    """q: (BH, S, D); k, v: (BK, T, D); BH = BK * G.  Returns (BH, S, D)."""
+    bh, s, d = q.shape
+    bk, t, _ = k.shape
+    g = bh // bk
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0
+    n_kv = t // block_k
+    grid = (bh, s // block_q, n_kv)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=1.0 / math.sqrt(d), causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, n_kv=n_kv,
+        q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j, _g=g: (b // _g, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j, _g=g: (b // _g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

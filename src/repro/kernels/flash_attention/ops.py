@@ -1,0 +1,43 @@
+"""Jit'd public wrapper: (B, S, H, D) model layout -> kernel layout."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "q_offset", "block_q", "block_k",
+    "interpret", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    q_offset: int = 0,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False, impl: str = "pallas"):
+    """q: (B, S, H, D); k, v: (B, T, K, D).  Returns (B, S, H, D)."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    if impl == "ref":
+        out = flash_attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, window=window,
+            softcap=softcap, q_offset=q_offset)
+        return out.transpose(0, 2, 1, 3)
+    # (B, S, H, D) -> (B*H, S, D) with q heads grouped by kv head so that the
+    # kernel's index_map b // g lands on the right kv head
+    qk = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * kh, t, d)
+    vv = v.transpose(0, 2, 1, 3).reshape(b * kh, t, d)
+    out = flash_attention_fwd(qk, kk, vv, causal=causal, window=window,
+                              softcap=softcap, q_offset=q_offset,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+q: (B, H, S, D); k, v: (B, K, T, D) with H = K * G (GQA).
+Supports causal masking, sliding windows and gemma-style logit softcap.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        q_offset: int = 0):
+    b, h, s, d = q.shape
+    kheads, t = k.shape[1], k.shape[2]
+    g = h // kheads
+    qr = q.reshape(b, kheads, g, s, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qr, k.astype(jnp.float32))
+    scores = scores / math.sqrt(d)
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = q_offset + jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jnp.exp(scores - scores.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)

@@ -1,0 +1,20 @@
+"""Jit'd wrapper for the grouped expert FFN kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_gemm.kernel import moe_expert_ffn_fwd
+from repro.kernels.moe_gemm.ref import moe_expert_ffn_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "interpret", "impl"))
+def moe_expert_ffn(x, wg, wu, wo, *, block_c: int = 128, block_f: int = 128,
+                   interpret: bool = False, impl: str = "pallas"):
+    """x: (E, C, d); wg, wu: (E, d, f); wo: (E, f, d) -> (E, C, d)."""
+    if impl == "ref":
+        return moe_expert_ffn_ref(x, wg, wu, wo)
+    return moe_expert_ffn_fwd(x, wg, wu, wo, block_c=block_c, block_f=block_f,
+                              interpret=interpret)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the grouped expert FFN (SwiGLU per expert).
+
+x: (E, C, d) capacity buffers; wg, wu: (E, d, f); wo: (E, f, d).
+out = silu(x @ wg) * (x @ wu) @ wo, per expert.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_expert_ffn_ref(x, wg, wu, wo):
+    xf = x.astype(jnp.float32)
+    gate = jnp.einsum("ecd,edf->ecf", xf, wg.astype(jnp.float32))
+    up = jnp.einsum("ecd,edf->ecf", xf, wu.astype(jnp.float32))
+    h = jax.nn.silu(gate) * up
+    return jnp.einsum("ecf,efd->ecd", h, wo.astype(jnp.float32)).astype(x.dtype)

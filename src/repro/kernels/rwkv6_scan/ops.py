@@ -1,0 +1,35 @@
+"""Jit'd wrapper for the RWKV6 wkv kernel (model layout (B, T, H, D))."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_fwd
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "impl"))
+def rwkv6_scan(r, k, v, logw, u, *, chunk: int = 16, interpret: bool = False,
+               impl: str = "pallas"):
+    """r/k/v/logw: (B, T, H, D); u: (H, D).
+    Returns (y (B, T, H, D) fp32, S (B, H, D, D) fp32)."""
+    b, t, h, d = r.shape
+    fold = lambda a: a.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    uu = jnp.tile(u[None], (b, 1, 1)).reshape(b * h, d)
+    if impl == "ref":
+        s0 = jnp.zeros((b * h, d, d), jnp.float32)
+        y, s = rwkv6_scan_ref(fold(r), fold(k), fold(v), fold(logw), uu, s0)
+    else:
+        pad = (-t) % chunk
+        args = [fold(r), fold(k), fold(v), fold(logw)]
+        if pad:
+            args = [jnp.pad(a, ((0, 0), (0, pad), (0, 0))) for a in args[:3]] + \
+                   [jnp.pad(args[3], ((0, 0), (0, pad), (0, 0)),
+                            constant_values=-1e-4)]
+        y, s = rwkv6_scan_fwd(*args, uu, chunk=chunk, interpret=interpret)
+        y = y[:, :t]
+    y = y.reshape(b, h, t, d).transpose(0, 2, 1, 3)
+    return y, s.reshape(b, h, d, d)

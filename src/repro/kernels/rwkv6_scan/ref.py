@@ -1,0 +1,28 @@
+"""Naive per-token oracle for the RWKV6 wkv recurrence.
+
+r/k/v/logw: (BH, T, D); u: (BH, D); s0: (BH, D, D) fp32.
+  S_t = diag(exp(logw_t)) S_{t-1} + k_t^T v_t
+  y_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+Returns (y (BH, T, D) fp32, S_final).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, logw, u, s0):
+    r, k, v, logw = (a.astype(jnp.float32) for a in (r, k, v, logw))
+    u = u.astype(jnp.float32)
+
+    def step(S, ts):
+        r_t, k_t, v_t, w_t = ts                       # (BH, D) each
+        kv = k_t[..., :, None] * v_t[..., None, :]    # (BH, Dk, Dv)
+        y = jnp.einsum("bd,bdv->bv", r_t, S + u[..., None] * kv)
+        S = jnp.exp(w_t)[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, logw))
+    S, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), S

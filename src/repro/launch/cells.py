@@ -1,0 +1,159 @@
+"""Build the (step_fn, abstract inputs) pair for every (arch x shape) cell.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs with
+NamedShardings attached — shardable stand-ins, no device allocation — so a
+cell can be ``jit(...).lower(*specs).compile()``d on any mesh without
+materializing a single parameter.
+
+Cell kinds:
+  train    -> full train_step (fwd + bwd + AdamW update), params fp32 master
+  prefill  -> serving prefill: logits + KV-cache fill, params bf16, no remat
+  decode   -> serving decode: one token against a seq_len cache, params bf16
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+from repro.distributed import sharding as shlib
+from repro.models import registry
+from repro.training import optimizer as opt
+from repro.training.train_step import TrainConfig, train_step
+
+
+def _with_shardings(shape_tree, spec_tree, mesh: Mesh):
+    is_spec = lambda l: l is None or isinstance(l, tuple)
+
+    def conv(sd, spec):
+        pspec = shlib.logical_to_spec(spec or (), mesh)
+        pspec = shlib.sanitize_spec(pspec, sd.shape, mesh)
+        return jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=NamedSharding(mesh, pspec))
+
+    return jax.tree.map(conv, shape_tree, spec_tree, is_leaf=lambda l: is_spec(l) and not isinstance(l, jax.ShapeDtypeStruct))
+
+
+def _abstract_params(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = False):
+    shapes = jax.eval_shape(lambda: registry.init_params(cfg, jax.random.PRNGKey(0)))
+    with shlib.use_mesh(mesh):
+        specs = registry.param_specs(cfg)
+        if fsdp:
+            specs = shlib.fsdp_specs(specs, shapes)
+    return _with_shardings(shapes, specs, mesh), shapes, specs
+
+
+def _sd(mesh, shape, dtype, *logical):
+    spec = shlib.sanitize_spec(shlib.logical_to_spec(logical, mesh), shape, mesh)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *, train: bool):
+    b, s = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {"tokens": _sd(mesh, (b, s), jnp.int32, "batch", None)}
+    if train:
+        batch["targets"] = _sd(mesh, (b, s), jnp.int32, "batch", None)
+        batch["loss_mask"] = _sd(mesh, (b, s), jnp.float32, "batch", None)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = _sd(mesh, (b, cfg.num_patches, cfg.d_model),
+                                    jnp.bfloat16, "batch", None, "embed")
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = _sd(mesh, (b, cfg.encoder_seq, cfg.d_model),
+                                  jnp.bfloat16, "batch", None, "embed")
+    return batch
+
+
+def serving_config(cfg: ModelConfig, kind: str = "decode") -> ModelConfig:
+    """Serving cells: bf16 weights, no remat.  DECODE additionally unrolls
+    layers — a scan-carried KV cache is restacked (fully rewritten) every
+    token, which the §Perf iteration measured at 13x the decode memory term;
+    unrolled layers give per-layer donated caches that update in place.
+    PREFILL keeps the scan: its one restack per layer is amortized over the
+    whole sequence, and unrolling blows up live-buffer footprint."""
+    return cfg.replace(param_dtype="bfloat16", remat="none",
+                       scan_layers=(kind != "decode"))
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> int:
+    """Pick gradient-accumulation depth so per-device microbatch activations
+    stay bounded (~8k tokens/device) while the microbatch stays shardable."""
+    dp = shlib.mesh_axis_size("batch", mesh)
+    tokens_per_dev = shape.global_batch * shape.seq_len // max(dp, 1)
+    target = 4096 if cfg.d_model >= 6144 else 8192   # wide models: smaller slabs
+    n = 1
+    while tokens_per_dev // n > target and shape.global_batch // (2 * n) >= dp:
+        n *= 2
+    return n
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh, *,
+               fsdp: bool = True, n_microbatches: Optional[int] = None,
+               overrides: Optional[dict] = None):
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return _build_cell(cfg, shape_name, mesh, fsdp=fsdp,
+                       n_microbatches=n_microbatches)
+
+
+def _build_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh, *,
+                fsdp: bool = True, n_microbatches: Optional[int] = None):
+    """-> (fn, args_tree, donate_argnums). jit as:
+    jax.jit(fn, donate_argnums=...).lower(*args).compile()."""
+    shape = SHAPES[shape_name]
+
+    if shape.kind == "train":
+        aparams, pshapes, pspecs = _abstract_params(cfg, mesh, fsdp=fsdp)
+        oshapes = jax.eval_shape(opt.adamw_init, pshapes)
+        with shlib.use_mesh(mesh):
+            ospecs = opt.opt_specs(pspecs, pshapes)
+        aopt = _with_shardings(oshapes, ospecs, mesh)
+        batch = _batch_specs(cfg, shape, mesh, train=True)
+        n_micro = n_microbatches or default_microbatches(cfg, shape, mesh)
+        tcfg = TrainConfig(n_microbatches=n_micro)
+
+        def fn(params, opt_state, b):
+            with shlib.use_mesh(mesh):
+                return train_step(cfg, tcfg, params, opt_state, b)
+
+        return fn, (aparams, aopt, batch), (0, 1)
+
+    scfg = serving_config(cfg, shape.kind)
+    aparams, _, _ = _abstract_params(scfg, mesh)
+    b = shape.global_batch
+
+    if shape.kind == "prefill":
+        cshapes = registry.cache_shapes(scfg, b, shape.seq_len)
+        with shlib.use_mesh(mesh):
+            cspecs = registry.cache_specs(scfg)
+        acache = _with_shardings(cshapes, cspecs, mesh)
+        batch = _batch_specs(scfg, shape, mesh, train=False)
+
+        def fn(params, cache, bt):
+            with shlib.use_mesh(mesh):
+                return registry.prefill(scfg, params, cache, bt)
+
+        return fn, (aparams, acache, batch), (1,)
+
+    # decode: one new token against a seq_len-deep cache
+    cshapes = registry.cache_shapes(scfg, b, shape.seq_len)
+    with shlib.use_mesh(mesh):
+        cspecs = registry.cache_specs(scfg)
+    acache = _with_shardings(cshapes, cspecs, mesh)
+    tokens = _sd(mesh, (b, 1), jnp.int32, "batch", None)
+    pos = _sd(mesh, (b,), jnp.int32, "batch")
+
+    def fn(params, cache, tok, p):
+        with shlib.use_mesh(mesh):
+            return registry.decode_step(scfg, params, cache, tok, p)
+
+    return fn, (aparams, acache, tokens, pos), (1,)
+
+
+def input_specs(arch_cfg: ModelConfig, shape_name: str, mesh: Mesh):
+    """Deliverable (e): ShapeDtypeStruct stand-ins for every model input."""
+    _, args, _ = build_cell(arch_cfg, shape_name, mesh)
+    return args

@@ -1,0 +1,437 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+Why not ``compiled.cost_analysis()``?  XLA's HloCostAnalysis counts a
+``while`` body ONCE, so any scanned layer stack (the only way to keep compile
+time sane at 80+ layers) under-counts FLOPs/bytes/collectives by the trip
+count.  Optimized HLO text carries ``known_trip_count`` in each while's
+backend_config; this module walks the computation graph, costs each op from
+its printed shapes, and multiplies through loops.
+
+Conventions:
+* flops: dot = 2*prod(out)*prod(contracted); conv = 2*prod(out)*kernel/groups;
+  elementwise/reduce ~= 1 op per input element (coarse, like XLA's own
+  accounting for non-dot ops).
+* bytes: per *materializing* op = operand bytes + output bytes.  Fusion
+  computations contribute their inner dot flops but only their call-site
+  bytes (fused intermediates never touch HBM) — this approximates post-fusion
+  HBM traffic, which is what the memory roofline term needs.
+* collective bytes: summed operand sizes of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute (async *-start counted,
+  *-done free), multiplied through loops.
+
+Shapes in the per-device HLO are shard shapes, so every number reported here
+is PER DEVICE; multiply by chip count for global totals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "reshape", "iota",
+    "get-dimension-size", "opt-barrier", "add-dependency",
+}
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "ragged-all-to-all",
+}
+_ASYNC_DONE = {"all-reduce-done", "all-gather-done", "collective-permute-done"}
+
+
+def _shape_info(type_str: str) -> tuple[float, list[list[int]]]:
+    """Total bytes + list of dims-lists for (possibly tuple) type string."""
+    total = 0.0
+    dims_list = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(x) for x in dims.split(",") if x] if dims else []
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        dims_list.append(dims)
+    return total, dims_list
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    type_str: str
+    operands: list[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.collectives.items():
+            slot = self.collectives.setdefault(k, {"count": 0.0, "bytes": 0.0})
+            slot["count"] += v["count"] * mult
+            slot["bytes"] += v["bytes"] * mult
+
+
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+
+
+def _parse_computations(txt: str) -> dict[str, list[Op]]:
+    comps: dict[str, list[Op]] = {}
+    current: Optional[str] = None
+    for line in txt.splitlines():
+        stripped = line.strip()
+        if stripped.startswith(("%", "ENTRY")) and stripped.endswith("{"):
+            m = re.match(r"(?:ENTRY\s+)?%([\w\.\-]+)", stripped)
+            current = m.group(1)
+            comps[current] = []
+            if stripped.startswith("ENTRY"):
+                comps["__entry__"] = comps[current]
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        rest = line[m.end():]
+        # type: balanced if tuple, else token
+        if rest.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rest):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    break
+            type_str, rest2 = rest[:i + 1], rest[i + 1:].lstrip()
+        else:
+            sp = rest.index(" ")
+            type_str, rest2 = rest[:sp], rest[sp + 1:].lstrip()
+        om = re.match(r"([\w\-]+)\(", rest2)
+        if not om:
+            continue
+        opcode = om.group(1)
+        depth, start = 0, om.end() - 1
+        for i in range(start, len(rest2)):
+            depth += rest2[i] == "("
+            depth -= rest2[i] == ")"
+            if depth == 0:
+                break
+        operand_str = rest2[start + 1:i]
+        attrs = rest2[i + 1:]
+        operands = re.findall(r"%([\w\.\-]+)", operand_str)
+        if opcode == "parameter":
+            attrs = operand_str.strip() + " " + attrs   # keep the index
+        comps[current].append(Op(m.group(1), opcode, type_str, operands, attrs))
+    return comps
+
+
+class HloCostModel:
+    def __init__(self, txt: str):
+        self.comps = _parse_computations(txt)
+        self._memo: dict[str, Cost] = {}
+
+    # -- per-op flop models ----------------------------------------------------
+
+    def _dot_flops(self, op: Op, shapes: dict[str, str]) -> float:
+        out_bytes, out_dims = _shape_info(op.type_str)
+        lhs_type = shapes.get(op.operands[0], "")
+        _, lhs_dims = _shape_info(lhs_type)
+        if not lhs_dims or not out_dims:
+            return 0.0
+        cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+        contract = 1
+        if cdims and cdims.group(1):
+            for i in (int(x) for x in cdims.group(1).split(",")):
+                if i < len(lhs_dims[0]):
+                    contract *= lhs_dims[0][i]
+        out_elems = 1
+        for d in out_dims[0]:
+            out_elems *= d
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(self, op: Op, shapes: dict[str, str]) -> float:
+        _, out_dims = _shape_info(op.type_str)
+        _, k_dims = _shape_info(shapes.get(op.operands[1], ""))
+        if not out_dims or not k_dims:
+            return 0.0
+        out_elems = 1
+        for d in out_dims[0]:
+            out_elems *= d
+        kernel = 1
+        for d in k_dims[0]:
+            kernel *= d
+        groups = 1
+        g = re.search(r"feature_group_count=(\d+)", op.attrs)
+        if g:
+            groups = int(g.group(1))
+        # kernel product includes in_ch*out_ch; flops = 2*out*kernel/out_ch/groups
+        dl = re.search(r"dim_labels=\S*_(\S*?)->", op.attrs)
+        out_ch = out_dims[0][-1] if out_dims[0] else 1
+        if dl and "o" in dl.group(1):
+            out_ch = k_dims[0][dl.group(1).index("o")]
+        return 2.0 * out_elems * kernel / max(out_ch, 1) / max(groups, 1)
+
+    # -- computation costing -----------------------------------------------------
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # break cycles defensively
+        total = Cost()
+        ops = self.comps.get(name, [])
+        shapes = {op.name: op.type_str for op in ops}
+        for op in ops:
+            total.add(self._op_cost(op, shapes))
+        self._memo[name] = total
+        return total
+
+    def _called(self, attrs: str, key: str) -> list[str]:
+        m = re.search(key + r"=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?", attrs)
+        if not m:
+            return []
+        return [x.strip().lstrip("%") for x in m.group(1).split(",")]
+
+    def _op_cost(self, op: Op, shapes: dict[str, str]) -> Cost:
+        c = Cost()
+        out_bytes, _ = _shape_info(op.type_str)
+        opc = op.opcode
+
+        if opc in _FREE_OPS or opc in _ASYNC_DONE:
+            return c
+
+        if opc == "while":
+            trip = 1.0
+            m = re.search(r'known_trip_count\D*?(\d+)', op.attrs)
+            if m:
+                trip = float(m.group(1))
+            for key in ("body", "condition"):
+                for callee in self._called(op.attrs, key):
+                    c.add(self.comp_cost(callee), trip)
+            return c
+
+        if opc in ("call", "async-start"):
+            for callee in self._called(op.attrs, "to_apply") + self._called(op.attrs, "called_computations"):
+                c.add(self.comp_cost(callee))
+            return c
+
+        if opc == "conditional":
+            for callee in self._called(op.attrs, "branch_computations") \
+                    + self._called(op.attrs, "true_computation") \
+                    + self._called(op.attrs, "false_computation"):
+                c.add(self.comp_cost(callee))
+            c.bytes += out_bytes
+            return c
+
+        in_bytes = sum(_shape_info(shapes.get(o, ""))[0] for o in op.operands)
+
+        # slice-granular memory ops: hardware touches the slice, not the
+        # whole buffer (in-place DUS / windowed DS) — without this, scan
+        # residual stacking is over-counted by the stack depth.
+        if opc == "dynamic-slice":
+            c.bytes += 2 * out_bytes
+            return c
+        if opc == "dynamic-update-slice":
+            upd = _shape_info(shapes.get(op.operands[1], ""))[0] if len(op.operands) > 1 else out_bytes
+            c.bytes += 2 * upd
+            return c
+        if opc == "gather":
+            c.bytes += 2 * out_bytes
+            return c
+        if opc == "scatter":
+            upd = _shape_info(shapes.get(op.operands[-1], ""))[0] if op.operands else out_bytes
+            c.bytes += 2 * upd
+            return c
+
+        if opc == "fusion":
+            for callee in self._called(op.attrs, "calls"):
+                inner = self.comp_cost(callee)
+                c.flops += inner.flops
+                c.coll_bytes += inner.coll_bytes
+                for k, v in inner.collectives.items():
+                    slot = c.collectives.setdefault(k, {"count": 0.0, "bytes": 0.0})
+                    slot["count"] += v["count"]
+                    slot["bytes"] += v["bytes"]
+            c.bytes += self._fusion_bytes(op, shapes, in_bytes, out_bytes)
+            return c
+
+        if opc in _COLLECTIVES:
+            base = opc.replace("-start", "")
+            cb = in_bytes if base in ("reduce-scatter", "all-to-all") else max(in_bytes, out_bytes)
+            slot = c.collectives.setdefault(base, {"count": 0.0, "bytes": 0.0})
+            slot["count"] += 1
+            slot["bytes"] += cb
+            c.coll_bytes += cb
+            c.bytes += in_bytes + out_bytes
+            return c
+
+        if opc == "dot":
+            c.flops += self._dot_flops(op, shapes)
+        elif opc == "convolution":
+            c.flops += self._conv_flops(op, shapes)
+        elif opc in ("reduce", "reduce-window", "scatter", "select-and-scatter", "sort"):
+            c.flops += in_bytes / 4.0  # ~1 op per input element
+        elif opc in ("custom-call", "rng", "rng-bit-generator", "infeed", "outfeed",
+                     "send", "recv", "copy-start", "copy-done", "domain"):
+            pass
+        else:
+            c.flops += out_bytes / 4.0  # elementwise-ish: 1 op per output element
+
+        c.bytes += in_bytes + out_bytes
+        return c
+
+    def _fusion_bytes(self, op: Op, shapes: dict, in_bytes: float,
+                      out_bytes: float) -> float:
+        """Fusion call-site bytes with slice-granular access accounting.
+
+        Inside a loop body, fusions often take a big loop-invariant buffer as
+        a parameter and read only a dynamic-slice of it (scan xs / saved remat
+        stacks), or alias it and write only a dynamic-update-slice (scan ys /
+        stacking).  Hardware touches the slice; charging the full buffer per
+        iteration over-counts by the trip count.  Parameters consumed
+        exclusively by dynamic-slice are charged at slice size; a root
+        dynamic-update-slice charges 2x the update and the aliased output
+        charges nothing.
+        """
+        callees = self._called(op.attrs, "calls")
+        if not callees:
+            return in_bytes + out_bytes
+        ops = self.comps.get(callees[0], [])
+        if not ops:
+            return in_bytes + out_bytes
+        # dtype-conversion-only fusions are an XLA:CPU artifact: the CPU
+        # backend upcasts bf16 dot operands to f32 through materialized
+        # converts; the TPU MXU consumes bf16 directly and such converts fuse
+        # into producers/consumers.  Charge zero.
+        _layout_ops = {"convert", "copy", "bitcast", "reshape", "broadcast",
+                       "parameter", "tuple", "get-tuple-element", "constant"}
+        if all(o.opcode in _layout_ops for o in ops):
+            return 0.0
+        inner_shapes = {o.name: o.type_str for o in ops}
+        # parameter index -> inner op name (index kept in attrs by the parser)
+        param_by_idx: dict[int, str] = {}
+        for o in ops:
+            if o.opcode == "parameter":
+                m = re.match(r"(\d+)", o.attrs)
+                if m:
+                    param_by_idx[int(m.group(1))] = o.name
+        consumers: dict[str, list] = {}
+        for o in ops:
+            for ref in o.operands:
+                consumers.setdefault(ref, []).append(o)
+
+        def _elems(ts):
+            _, dims = _shape_info(ts)
+            n = 1
+            for d in (dims[0] if dims else []):
+                n *= d
+            return n
+
+        total = 0.0
+        out_elems = _elems(op.type_str)
+        # match on element count, not bytes: XLA:CPU sometimes round-trips a
+        # bf16 buffer through f32 around the DUS (dtype differs, dims match)
+        dus_root = next((o for o in ops if o.opcode == "dynamic-update-slice"
+                         and _elems(o.type_str) == out_elems), None)
+        aliased_param = dus_root.operands[0] if dus_root and dus_root.operands else None
+
+        for k, operand in enumerate(op.operands):
+            pname = param_by_idx.get(k)
+            if pname is None:
+                total += _shape_info(shapes.get(operand, ""))[0]
+                continue
+            cons = consumers.get(pname, [])
+            if pname == aliased_param:
+                continue  # aliased in-place buffer: charged via the update
+            if cons and all(c.opcode == "dynamic-slice" for c in cons):
+                total += sum(_shape_info(c.type_str)[0] for c in cons)
+            else:
+                total += _shape_info(shapes.get(operand, ""))[0]
+
+        if dus_root is not None:
+            upd = _shape_info(inner_shapes.get(dus_root.operands[1], ""))[0] \
+                if len(dus_root.operands) > 1 else out_bytes
+            total += 2 * upd
+        else:
+            total += out_bytes
+        return total
+
+    def entry_cost(self) -> Cost:
+        return self.comp_cost("__entry__")
+
+
+def breakdown(txt: str, top: int = 20, key: str = "bytes") -> list[tuple[float, str]]:
+    """Attribute per-device bytes/flops to op_name tags (for perf iteration)."""
+    model = HloCostModel(txt)
+    mult: dict[str, float] = {"__entry__": 1.0}
+    seen = {"__entry__"}
+    q = ["__entry__"]
+    while q:
+        c = q.pop(0)
+        for op in model.comps.get(c, []):
+            tgts, f = [], 1.0
+            if op.opcode == "while":
+                m = re.search(r'known_trip_count\D*?(\d+)', op.attrs)
+                f = float(m.group(1)) if m else 1.0
+                tgts = model._called(op.attrs, "body") + model._called(op.attrs, "condition")
+            elif op.opcode == "call":
+                tgts = model._called(op.attrs, "to_apply")
+            for t in tgts:
+                mult[t] = mult.get(t, 0.0) + mult[c] * f
+                if t not in seen:
+                    seen.add(t)
+                    q.append(t)
+    acc: dict[str, float] = {}
+    for cname, ops in model.comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m == 0:
+            continue
+        shapes = {op.name: op.type_str for op in ops}
+        for op in ops:
+            if op.opcode == "while":
+                continue  # bodies counted via their own computations
+            c = model._op_cost(op, shapes)
+            val = getattr(c, key if key != "bytes" else "bytes")
+            if val:
+                meta = re.search(r'op_name="([^"]*)"', op.attrs)
+                tag = meta.group(1) if meta else op.opcode
+                tag = re.sub(r"\[.*?\]", "", tag)
+                tag = f"{op.opcode}:{'/'.join(tag.split('/')[-2:])[:70]}"
+                acc[tag] = acc.get(tag, 0.0) + val * m
+    return sorted(((v, k) for k, v in acc.items()), reverse=True)[:top]
+
+
+def analyze_hlo_text(txt: str) -> dict:
+    cost = HloCostModel(txt).entry_cost()
+    return {
+        "flops_per_device": cost.flops,
+        "bytes_per_device": cost.bytes,
+        "collective_bytes_per_device": cost.coll_bytes,
+        "collectives": cost.collectives,
+    }

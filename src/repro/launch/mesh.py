@@ -1,0 +1,22 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+does not touch jax device state.  The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE importing jax;
+smoke tests and benchmarks see the single real CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh on the real local device (for smoke/e2e runs)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

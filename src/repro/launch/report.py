@@ -1,0 +1,62 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.dryrun import ARTIFACTS, HBM_BW, LINK_BW, PEAK_FLOPS
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, f"*__{mesh}.json"))):
+        d = json.load(open(path))
+        if d.get("error"):
+            rows.append(f"| {d['arch']} | {d['shape']} | ERROR | | | | |")
+            continue
+        if d.get("skipped"):
+            continue
+        mem = d["memory"]
+        per = d["per_device"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['compile_s']:.0f}s "
+            f"| {_fmt_bytes(mem['argument_bytes'])} | {_fmt_bytes(mem['temp_bytes'])} "
+            f"| {per['flops']:.2e} | {per['collective_bytes']:.2e} |")
+    head = (f"| arch | shape | compile | args GiB/dev | temp GiB/dev "
+            f"| HLO FLOPs/dev | coll B/dev |\n|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def roofline_table(mesh: str = "16x16") -> str:
+    import benchmarks.roofline as rl
+    rows = []
+    for r in rl.report(mesh):
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.1f} "
+            f"| {r['memory_s']*1e3:.1f} | {r['collective_s']*1e3:.1f} "
+            f"| {r['bottleneck']} | {r['useful_ratio']:.2f} | {r['mfu']*100:.1f}% |")
+    head = ("| arch | shape | compute ms | memory ms | collective ms "
+            "| bound | MODEL/HLO | roofline frac |\n|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import io
+    import sys
+    from contextlib import redirect_stdout
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    buf = io.StringIO()
+    with redirect_stdout(buf):   # suppress emit() noise from roofline.report
+        if which == "dryrun":
+            out = dryrun_table(sys.argv[2] if len(sys.argv) > 2 else "16x16")
+        else:
+            out = roofline_table(sys.argv[2] if len(sys.argv) > 2 else "16x16")
+    print(out)

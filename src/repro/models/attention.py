@@ -1,0 +1,190 @@
+"""GQA attention block: init / train apply / decode against full or ring KV.
+
+Cache layouts
+-------------
+* global layers: full cache  k,v: (B, T, K, D); new tokens written at ``pos``.
+* local (sliding window) layers: ring cache k,v: (B, W, K, D); slot = pos % W.
+  Slot s holds position p - ((p - s) mod W); unwritten slots map to negative
+  positions and are masked.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import div_axis, shard
+from repro.models import layers
+from repro.models.layers import NEG_INF
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    h, k_, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(kq, cfg.d_model, (h, d), cfg.pdtype),
+        "wk": layers.dense_init(kk, cfg.d_model, (k_, d), cfg.pdtype),
+        "wv": layers.dense_init(kv, cfg.d_model, (k_, d), cfg.pdtype),
+        "wo": layers.dense_init(ko, h * d, cfg.d_model, cfg.pdtype).reshape(h, d, cfg.d_model),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((d,), cfg.pdtype)
+        p["k_norm"] = jnp.zeros((d,), cfg.pdtype)
+    return p
+
+
+def specs(cfg: ModelConfig) -> dict:
+    qh = div_axis("heads", cfg.num_heads)
+    kh = div_axis("kv_heads", cfg.num_kv_heads)
+    s = {
+        "wq": ("embed", qh, None),
+        "wk": ("embed", kh, None),
+        "wv": ("embed", kh, None),
+        "wo": (qh, None, "embed"),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = (None,)
+        s["k_norm"] = (None,)
+    return s
+
+
+def _project_qkv(cfg: ModelConfig, p, x, positions):
+    cd = cfg.cdtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if cfg.qk_norm:
+        q = layers.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    qh = div_axis("heads", cfg.num_heads)
+    kh = div_axis("kv_heads", cfg.num_kv_heads)
+    q = shard(q, "batch", None, qh, None)
+    k = shard(k, "batch", None, kh, None)
+    v = shard(v, "batch", None, kh, None)
+    return q, k, v
+
+
+def _attn_core(cfg: ModelConfig, q, k, v, *, causal: bool, window, q_offset=0):
+    """Dispatch between the jnp reference path and the Pallas kernel."""
+    if cfg.attn_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.flash_attention import flash_attention
+        s, t = q.shape[1], k.shape[1]
+        bq = min(512, s)
+        while s % bq:
+            bq -= 1
+        bk = min(512, t)
+        while t % bk:
+            bk -= 1
+        return flash_attention(
+            q, k, v, causal=causal, window=window,
+            softcap=cfg.attn_logit_softcap, q_offset=q_offset,
+            block_q=bq, block_k=bk,
+            interpret=(cfg.attn_impl == "pallas_interpret"))
+    return layers.attention(q, k, v, causal=causal, window=window,
+                            logit_softcap=cfg.attn_logit_softcap,
+                            q_block=min(512, q.shape[1]),
+                            score_dtype=jnp.dtype(cfg.attn_scores_dtype))
+
+
+def apply(cfg: ModelConfig, p, x, *, window: Optional[int], positions=None,
+          causal: bool = True) -> jax.Array:
+    """Training / prefill path. x: (B, S, d)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    out = _attn_core(cfg, q, k, v, causal=causal, window=window)
+    qh = div_axis("heads", cfg.num_heads)
+    out = shard(out, "batch", None, qh, None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.cdtype))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def cache_shape(cfg: ModelConfig, batch: int, seq_len: int, window: Optional[int]):
+    t = seq_len if window is None else min(window, seq_len)
+    shp = (batch, t, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shp, cfg.cdtype),
+            "v": jax.ShapeDtypeStruct(shp, cfg.cdtype)}
+
+
+def cache_specs(cfg: ModelConfig):
+    kh = div_axis("kv_heads", cfg.num_kv_heads)
+    seq = None if kh is not None else "kv_seq"   # split-K only when heads can't shard
+    return {"k": ("batch", seq, kh, None), "v": ("batch", seq, kh, None)}
+
+
+def prefill(cfg: ModelConfig, p, cache: dict, x, *, window: Optional[int]):
+    """Full-sequence forward from position 0 that also fills the KV cache.
+
+    x: (B, S, d).  Full cache gets k/v at [0, S); ring caches get the last
+    min(W, S) tokens scattered at position % W.
+    """
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    out = _attn_core(cfg, q, k, v, causal=True, window=window)
+    t = cache["k"].shape[1]
+    if window is None:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k[:, :t], 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v[:, :t], 0, axis=1)
+    else:
+        w = min(t, s)
+        tail_pos = jnp.arange(s - w, s)
+        slots = tail_pos % t
+        ck = cache["k"].at[:, slots].set(k[:, s - w:])
+        cv = cache["v"].at[:, slots].set(v[:, s - w:])
+    qh = div_axis("heads", cfg.num_heads)
+    out = shard(out, "batch", None, qh, None)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.cdtype))
+    return out, {"k": ck, "v": cv}
+
+
+def decode(cfg: ModelConfig, p, cache: dict, x, pos, *, window: Optional[int]):
+    """One-token decode. x: (B, 1, d); pos: (B,) int32. Returns (out, cache)."""
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(cfg, p, x, pos[:, None])
+    t = cache["k"].shape[1]
+    slot = pos if window is None else pos % t
+    bidx = jnp.arange(b)
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0])
+
+    if window is None and cfg.attn_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.decode_attention import decode_attention
+        bk = min(512, t)
+        while t % bk:
+            bk -= 1
+        out = decode_attention(
+            q, k, v, pos, softcap=cfg.attn_logit_softcap, block_k=bk,
+            interpret=(cfg.attn_impl == "pallas_interpret")).astype(cfg.cdtype)
+        qh = div_axis("heads", cfg.num_heads)
+        out = shard(out, "batch", None, qh, None)
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.cdtype))
+        return out, {"k": k, "v": v}
+
+    key_idx = jnp.arange(t)
+    if window is None:
+        # full cache: positions are 0..t-1; mask future
+        mask = key_idx[None, :] <= pos[:, None]
+    else:
+        # ring cache: slot s holds position p - ((p - s) mod W)
+        kpos = pos[:, None] - ((pos[:, None] - key_idx[None, :]) % t)
+        mask = kpos >= 0
+
+    scores = layers._gqa_scores(q, k, cfg.attn_logit_softcap)  # (B,K,G,1,T)
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = layers._gqa_out(probs, v).astype(cfg.cdtype)          # (B,1,H,D)
+    qh = div_axis("heads", cfg.num_heads)
+    out = shard(out, "batch", None, qh, None)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.cdtype))
+    return out, {"k": k, "v": v}

@@ -1,0 +1,92 @@
+"""Embedding / LM-head helpers shared by all families."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    ke, kh = jax.random.split(key)
+    p = {"embed": layers.embed_init(ke, cfg.vocab_size, cfg.d_model, cfg.pdtype),
+         "final_norm": jnp.zeros((cfg.d_model,), cfg.pdtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(kh, cfg.d_model, cfg.vocab_size, cfg.pdtype)
+    return p
+
+
+def specs(cfg: ModelConfig) -> dict:
+    s = {"embed": ("vocab", "embed"), "final_norm": (None,)}
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ("embed", "vocab")
+    return s
+
+
+def embed(cfg: ModelConfig, p, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["embed"], tokens, axis=0).astype(cfg.cdtype)
+    x = x * math.sqrt(cfg.d_model)
+    return shard(x, "batch", None, "embed")
+
+
+def logits(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    x = layers.rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    out = jnp.einsum("bsd,dv->bsv", x, w.astype(cfg.cdtype))
+    out = layers.softcap(out, cfg.final_logit_softcap)
+    return shard(out, "batch", None, "vocab")
+
+
+def loss_from_logits(lgts: jax.Array, batch: dict) -> jax.Array:
+    return layers.cross_entropy(lgts, batch["targets"], batch.get("loss_mask"))
+
+
+def chunked_loss(cfg: ModelConfig, p, x: jax.Array, batch: dict,
+                 chunk: int = 512) -> jax.Array:
+    """CE without ever materializing full-sequence logits.
+
+    Scans the LM head over sequence chunks (checkpointed, so the backward
+    recomputes each chunk's logits).  At 262k vocab the full fp32 logits for
+    a 4k x 16 per-device slab are ~17 GB; chunked they are ~0.5 GB.
+    """
+    s = x.shape[1]
+    targets, mask = batch["targets"], batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(targets.shape, jnp.float32)
+    x = layers.rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+
+    cb = min(chunk, s)
+    while s % cb != 0:
+        cb -= 1
+    n = s // cb
+
+    @jax.checkpoint
+    def body(carry, i):
+        nll_sum, msum = carry
+        xc = jax.lax.dynamic_slice_in_dim(x, i * cb, cb, axis=1)
+        tc = jax.lax.dynamic_slice_in_dim(targets, i * cb, cb, axis=1)
+        mc = jax.lax.dynamic_slice_in_dim(mask, i * cb, cb, axis=1)
+        lg = jnp.einsum("bsd,dv->bsv", xc, w.astype(cfg.cdtype))
+        lg = layers.softcap(lg, cfg.final_logit_softcap)
+        lg = shard(lg, "batch", None, "vocab").astype(jnp.float32)
+        v = lg.shape[-1]
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        onehot = (tc[..., None] == jnp.arange(v, dtype=tc.dtype)).astype(jnp.float32)
+        gold = jnp.sum(lg * onehot, axis=-1)
+        nll = (lse - gold) * mc
+        return (nll_sum + nll.sum(), msum + mc.sum()), None
+
+    if n == 1:
+        (nll_sum, msum), _ = body((jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                                  jnp.asarray(0))
+    else:
+        (nll_sum, msum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            jnp.arange(n))
+    return nll_sum / jnp.maximum(msum, 1.0)

@@ -1,0 +1,273 @@
+"""Hymba: every layer runs an attention head-group and a Mamba (selective
+SSM) head-group IN PARALLEL on the same normed input; their normalized
+outputs are averaged (learnable per-branch scale), then a SwiGLU FFN.
+
+Full attention only in ``cfg.full_attn_layers`` (3 layers), sliding window
+elsewhere; 128 learnable meta tokens are prepended to the sequence.
+[arXiv:2411.13676]
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention, head, layers, stack
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    dt_rank = -(-cfg.d_model // 16)
+    return di, dt_rank, cfg.ssm_state, cfg.ssm_conv
+
+
+# ---------------------------------------------------------------------------
+# mamba branch
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    di, dt_rank, n, k = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * di, cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[1], (k, di)) * 0.1).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((di,), cfg.pdtype),
+        "x_proj": layers.dense_init(ks[2], di, dt_rank + 2 * n, cfg.pdtype),
+        "dt_proj": layers.dense_init(ks[3], dt_rank, di, cfg.pdtype),
+        "dt_bias": jnp.full((di,), -4.6, cfg.pdtype),   # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))).astype(cfg.pdtype),
+        "D": jnp.ones((di,), cfg.pdtype),
+        "out_proj": layers.dense_init(ks[4], di, d, cfg.pdtype),
+    }
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    return {
+        "in_proj": ("embed", "ffn"), "conv_w": (None, "ffn"), "conv_b": ("ffn",),
+        "x_proj": ("ffn", None), "dt_proj": (None, "ffn"), "dt_bias": ("ffn",),
+        "A_log": ("ffn", None), "D": ("ffn",), "out_proj": ("ffn", "embed"),
+    }
+
+
+def _conv1d(xin, w, b, conv_state=None):
+    """Causal depthwise conv. xin: (B,S,di); w: (k,di).  If conv_state
+    (B,k-1,di) is given it is the left context (decode)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xin.shape[0], k - 1, xin.shape[2]), xin.dtype)
+    else:
+        pad = conv_state.astype(xin.dtype)
+    xp = jnp.concatenate([pad, xin], axis=1)          # (B, S+k-1, di)
+    out = sum(xp[:, i:i + xin.shape[1]] * w[i] for i in range(k))
+    return out + b, xp[:, -(k - 1):]
+
+
+def _ssm_params(cfg, p, xc):
+    di, dt_rank, n, _ = _dims(cfg)
+    xdb = jnp.einsum("bsd,de->bse", xc, p["x_proj"].astype(xc.dtype))
+    dt_raw, b_, c_ = jnp.split(xdb, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_raw, p["dt_proj"].astype(xc.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))      # (di, N)
+    return dt, a, b_.astype(jnp.float32), c_.astype(jnp.float32)
+
+
+def selective_scan(dt, a, b_, c_, xc, d_skip, h0):
+    """dt: (B,S,di) fp32; a: (di,N); b_/c_: (B,S,N); xc: (B,S,di).
+    h: (B,di,N).  Returns (y (B,S,di) fp32, h)."""
+    xf = xc.astype(jnp.float32)
+
+    def step(h, ts):
+        dt_t, b_t, c_t, x_t = ts
+        da = jnp.exp(dt_t[..., None] * a)                      # (B,di,N)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(b_, 1, 0),
+          jnp.moveaxis(c_, 1, 0), jnp.moveaxis(xf, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * d_skip
+    return y, h
+
+
+def mamba_apply(cfg: ModelConfig, p, x, h0=None, conv_state=None):
+    """x: (B,S,d) -> (y (B,S,d), (h, conv_state))."""
+    di, dt_rank, n, k = _dims(cfg)
+    b = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cfg.cdtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, "batch", None, "ffn")
+    xc, conv_state = _conv1d(xin, p["conv_w"].astype(cfg.cdtype),
+                             p["conv_b"].astype(cfg.cdtype), conv_state)
+    xc = jax.nn.silu(xc)
+    dt, a, b_, c_ = _ssm_params(cfg, p, xc)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+    y, h = selective_scan(dt, a, b_, c_, xc, p["D"].astype(jnp.float32), h0)
+    y = y.astype(cfg.cdtype) * jax.nn.silu(z)
+    y = shard(y, "batch", None, "ffn")
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cfg.cdtype)), (h, conv_state)
+
+
+# ---------------------------------------------------------------------------
+# fused layer
+# ---------------------------------------------------------------------------
+
+
+def layer_init(cfg: ModelConfig, key, kind: str) -> dict:
+    ka, km, kf = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "attn": attention.init(cfg, ka),
+        "mamba": mamba_init(cfg, km),
+        "norm_attn": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "norm_ssm": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "mlp": layers.swiglu_init(kf, cfg.d_model, cfg.d_ff, cfg.pdtype),
+    }
+
+
+def layer_specs(cfg: ModelConfig, kind: str) -> dict:
+    return {
+        "ln1": (None,), "attn": attention.specs(cfg), "mamba": mamba_specs(cfg),
+        "norm_attn": (None,), "norm_ssm": (None,),
+        "ln2": (None,), "mlp": layers.swiglu_specs(),
+    }
+
+
+def layer_apply(cfg: ModelConfig, p, x, *, window, kind):
+    h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a = attention.apply(cfg, p["attn"], h, window=window)
+    m, _ = mamba_apply(cfg, p["mamba"], h)
+    fused = 0.5 * (layers.rmsnorm(a, p["norm_attn"], cfg.norm_eps)
+                   + layers.rmsnorm(m, p["norm_ssm"], cfg.norm_eps))
+    x = shard(x + fused, "batch", None, "embed")
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + layers.swiglu_apply(p["mlp"], h, cfg.cdtype)
+    return shard(x, "batch", None, "embed")
+
+
+def layer_cache_shape(cfg: ModelConfig, kind, window, batch, seq_len):
+    di, dt_rank, n, k = _dims(cfg)
+    c = attention.cache_shape(cfg, batch, seq_len + cfg.num_meta_tokens, window)
+    c["ssm_h"] = jax.ShapeDtypeStruct((batch, di, n), jnp.float32)
+    c["conv"] = jax.ShapeDtypeStruct((batch, k - 1, di), cfg.cdtype)
+    return c
+
+
+def layer_cache_specs(cfg: ModelConfig, kind):
+    s = attention.cache_specs(cfg)
+    s["ssm_h"] = ("batch", "ffn", None)
+    s["conv"] = ("batch", None, "ffn")
+    return s
+
+
+def layer_decode(cfg: ModelConfig, p, cache, x, pos, *, window, kind):
+    h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    attn_cache = {"k": cache["k"], "v": cache["v"]}
+    a, attn_cache = attention.decode(cfg, p["attn"], attn_cache, h, pos, window=window)
+    m, (ssm_h, conv) = mamba_apply(cfg, p["mamba"], h, h0=cache["ssm_h"],
+                                   conv_state=cache["conv"])
+    fused = 0.5 * (layers.rmsnorm(a, p["norm_attn"], cfg.norm_eps)
+                   + layers.rmsnorm(m, p["norm_ssm"], cfg.norm_eps))
+    x = x + fused
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + layers.swiglu_apply(p["mlp"], h, cfg.cdtype)
+    return x, {"k": attn_cache["k"], "v": attn_cache["v"], "ssm_h": ssm_h, "conv": conv}
+
+
+# -- model -------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kh, kl, km = jax.random.split(key, 3)
+    p = {"head": head.init(cfg, kh), "runs": stack.init_runs(cfg, kl, layer_init)}
+    if cfg.num_meta_tokens:
+        p["meta"] = (jax.random.normal(km, (cfg.num_meta_tokens, cfg.d_model))
+                     * 0.02).astype(cfg.pdtype)
+    return p
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    s = {"head": head.specs(cfg), "runs": stack.run_specs(cfg, layer_specs)}
+    if cfg.num_meta_tokens:
+        s["meta"] = (None, "embed")
+    return s
+
+
+def _hidden(cfg: ModelConfig, params, batch, remat=None):
+    x = head.embed(cfg, params["head"], batch["tokens"])
+    if cfg.num_meta_tokens:
+        meta = jnp.broadcast_to(params["meta"].astype(cfg.cdtype),
+                                (x.shape[0], cfg.num_meta_tokens, cfg.d_model))
+        x = jnp.concatenate([meta, x], axis=1)
+    remat = (cfg.remat != "none") if remat is None else remat
+    x = stack.apply_runs(cfg, params["runs"], x, layer_apply, remat=remat)
+    if cfg.num_meta_tokens:
+        x = x[:, cfg.num_meta_tokens:]
+    return x
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat=None):
+    return head.logits(cfg, params["head"], _hidden(cfg, params, batch, remat)), {}
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    x = _hidden(cfg, params, batch)
+    return head.chunked_loss(cfg, params["head"], x, batch), {}
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq_len: int):
+    return stack.cache_shapes(cfg, batch, seq_len, layer_cache_shape)
+
+
+def cache_specs(cfg: ModelConfig):
+    return stack.cache_run_specs(cfg, layer_cache_specs)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch, seq_len))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    x = head.embed(cfg, params["head"], tokens)
+    # positions are offset by the meta-token prefix
+    x, cache = stack.decode_runs(cfg, params["runs"], cache, x,
+                                 pos + cfg.num_meta_tokens, layer_decode)
+    return head.logits(cfg, params["head"], x), cache
+
+
+def layer_prefill(cfg: ModelConfig, p, cache, x, *, window, kind):
+    h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    attn_cache = {"k": cache["k"], "v": cache["v"]}
+    a, attn_cache = attention.prefill(cfg, p["attn"], attn_cache, h, window=window)
+    m, (ssm_h, conv) = mamba_apply(cfg, p["mamba"], h)
+    fused = 0.5 * (layers.rmsnorm(a, p["norm_attn"], cfg.norm_eps)
+                   + layers.rmsnorm(m, p["norm_ssm"], cfg.norm_eps))
+    x = shard(x + fused, "batch", None, "embed")
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + layers.swiglu_apply(p["mlp"], h, cfg.cdtype)
+    return shard(x, "batch", None, "embed"), {
+        "k": attn_cache["k"], "v": attn_cache["v"], "ssm_h": ssm_h, "conv": conv}
+
+
+def prefill(cfg: ModelConfig, params, cache, batch):
+    """Prefill including the meta-token prefix (positions [0, M))."""
+    x = head.embed(cfg, params["head"], batch["tokens"])
+    if cfg.num_meta_tokens:
+        meta = jnp.broadcast_to(params["meta"].astype(cfg.cdtype),
+                                (x.shape[0], cfg.num_meta_tokens, cfg.d_model))
+        x = jnp.concatenate([meta, x], axis=1)
+    x, cache = stack.prefill_runs(cfg, params["runs"], cache, x, layer_prefill)
+    if cfg.num_meta_tokens:
+        x = x[:, cfg.num_meta_tokens:]
+    return head.logits(cfg, params["head"], x), cache

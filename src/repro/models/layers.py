@@ -1,0 +1,253 @@
+"""Shared model building blocks (pure JAX, functional, pytree params).
+
+Everything here is written to be lowered at production scale:
+* attention never materializes a full (S, T) score matrix — prefill uses a
+  ``lax.scan`` over query blocks (flash-style, fp32 online accumulation),
+  local layers additionally bound the key range to the sliding window;
+* all activations carry logical sharding constraints (see
+  ``repro.distributed.sharding``);
+* layer stacks are scanned, so HLO size is O(1) in depth.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import current_mesh, shard
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_shape, dtype) -> jax.Array:
+    """Fan-in scaled normal init; out_shape may be a tuple (fused heads)."""
+    if isinstance(out_shape, int):
+        out_shape = (out_shape,)
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, *out_shape)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]               # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, dim: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((seq, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# attention (jnp reference path; the Pallas kernels in repro.kernels implement
+# the same contract for TPU runtime)
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores(q, k, softcap_val, score_dtype=jnp.float32):
+    # q: (B, qb, H, D) ; k: (B, T, K, D) ; H = K*G
+    b, s, h, d = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    q = q.reshape(b, s, kheads, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k, preferred_element_type=score_dtype)
+    scores = scores / math.sqrt(d)
+    return softcap(scores, softcap_val)  # (B, K, G, qb, T)
+
+
+def _gqa_out(probs, v):
+    # probs: (B, K, G, qb, T), v: (B, T, K, D) -> (B, qb, H, D)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    b, s, kh, g, d = out.shape
+    return out.reshape(b, s, kh * g, d)
+
+
+NEG_INF = -1e30
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    q_block: int = 512,
+    q_offset: int = 0,
+    score_dtype=jnp.float32,
+) -> jax.Array:
+    """Memory-bounded multi-head attention with GQA.
+
+    q: (B, S, H, D); k, v: (B, T, K, D).  Returns (B, S, H, D) in q.dtype.
+    ``q_offset`` is the absolute position of q[0] (for decode/chunked prefill).
+    Scans over query blocks; local (windowed) layers slice the key range so
+    compute is O(S*window) instead of O(S*T).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    dv = v.shape[-1]          # may differ from d (e.g. MLA: qk 192, v 128)
+    out_dtype = q.dtype
+
+    if s == 1:
+        # decode fast-path: single query token, full-row softmax
+        scores = _gqa_scores(q, k, logit_softcap, score_dtype)  # (B,K,G,1,T)
+        pos = q_offset
+        key_idx = jnp.arange(t)
+        mask = key_idx <= pos if causal else jnp.ones((t,), bool)
+        if window is not None:
+            mask = mask & (key_idx > pos - window)
+        scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return _gqa_out(probs, v).astype(out_dtype)
+
+    qb = min(q_block, s)
+    while s % qb != 0:   # largest divisor of s <= q_block (trace-time)
+        qb -= 1
+    n_blocks = s // qb
+
+    # local layers: restrict keys per q block to [blk_start - window, blk_end)
+    key_span = t if window is None else min(t, qb + int(window))
+
+    @jax.checkpoint  # flash-style backward: recompute per-block scores, never
+    def body(_, blk):  # stack (n_blocks, ..., span) residuals in HBM
+
+        qi = blk * qb
+        qpos = q_offset + qi + jnp.arange(qb)
+        if window is None:
+            kstart = 0
+        else:
+            kstart = jnp.clip(qi + q_offset - window + 1, 0, t - key_span)
+        kblk = jax.lax.dynamic_slice_in_dim(k, kstart, key_span, axis=1)
+        vblk = jax.lax.dynamic_slice_in_dim(v, kstart, key_span, axis=1)
+        qblk = jax.lax.dynamic_slice_in_dim(q, qi, qb, axis=1)
+        scores = _gqa_scores(qblk, kblk, logit_softcap, score_dtype)  # (B,K,G,qb,span)
+        kpos = kstart + jnp.arange(key_span)
+        mask = jnp.ones((qb, key_span), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores.astype(score_dtype),
+                           jnp.asarray(NEG_INF, score_dtype))
+        probs = jax.nn.softmax(scores, axis=-1)
+        return None, _gqa_out(probs, vblk).astype(out_dtype)
+
+    if n_blocks == 1:
+        _, out = body(None, jnp.asarray(0))
+        return out
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_blocks))
+    # outs: (n_blocks, B, qb, H, Dv) -> (B, S, H, Dv)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dv)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d_model, d_ff, dtype),
+        "wi_up": dense_init(k2, d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu_specs():
+    return {
+        "wi_gate": ("embed", "ffn"),
+        "wi_up": ("embed", "ffn"),
+        "wo": ("ffn", "embed"),
+    }
+
+
+def swiglu_apply(p, x, cdtype):
+    gate = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(cdtype))
+    up = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(cdtype))
+    h = jax.nn.silu(gate) * up
+    h = shard(h, "batch", None, "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(cdtype))
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array, mask: Optional[jax.Array] = None):
+    """Stable CE on (possibly vocab-sharded) logits: (B,S,V) vs (B,S) ids.
+
+    The gold logit is extracted with a fused one-hot reduction instead of
+    ``take_along_axis``: a gather along a sharded vocab axis makes GSPMD
+    all-gather the full logits (catastrophic at 262k vocab); the one-hot
+    multiply-reduce keeps partial sums local + one small all-reduce.
+    """
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = (targets[..., None] == jnp.arange(v, dtype=targets.dtype)).astype(jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (DeepSeek-V2).  Train path expands the latent
+KV; decode uses the absorbed formulation so the cache holds only
+(kv_lora_rank + qk_rope_head_dim) per token — the paper's serving win.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import div_axis, shard
+from repro.models import layers
+from repro.models.layers import NEG_INF
+
+
+def _dims(cfg: ModelConfig):
+    return cfg.num_heads, cfg.kv_lora_rank, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    h, r, dn, dr, dv = _dims(cfg)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "wdkv": layers.dense_init(k1, cfg.d_model, r + dr, cfg.pdtype),
+        "kv_norm": jnp.zeros((r,), cfg.pdtype),
+        "wq": layers.dense_init(k2, cfg.d_model, (h, dn + dr), cfg.pdtype),
+        "wuk": layers.dense_init(k3, r, (h, dn), cfg.pdtype),
+        "wuv": layers.dense_init(k4, r, (h, dv), cfg.pdtype),
+        "wo": layers.dense_init(k5, h * dv, cfg.d_model, cfg.pdtype).reshape(h, dv, cfg.d_model),
+    }
+
+
+def specs(cfg: ModelConfig) -> dict:
+    qh = div_axis("heads", cfg.num_heads)
+    return {
+        "wdkv": ("embed", "kv_lora"),
+        "kv_norm": (None,),
+        "wq": ("embed", qh, None),
+        "wuk": ("kv_lora", qh, None),
+        "wuv": ("kv_lora", qh, None),
+        "wo": (qh, None, "embed"),
+    }
+
+
+def _latent(cfg: ModelConfig, p, x, positions):
+    """-> ckv (B,S,r) normalized, k_rope (B,S,1,dr) roped."""
+    h, r, dn, dr, dv = _dims(cfg)
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wdkv"].astype(cfg.cdtype))
+    ckv, k_rope = ckv_full[..., :r], ckv_full[..., r:]
+    ckv = layers.rmsnorm(ckv, p["kv_norm"], cfg.norm_eps)
+    k_rope = layers.apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)
+    return ckv, k_rope
+
+
+def _queries(cfg: ModelConfig, p, x, positions):
+    h, r, dn, dr, dv = _dims(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cfg.cdtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def apply(cfg: ModelConfig, p, x, *, positions=None) -> jax.Array:
+    """Training/prefill path (expanded KV). x: (B,S,d)."""
+    h, r, dn, dr, dv = _dims(cfg)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    ckv, k_rope = _latent(cfg, p, x, positions)
+    q_nope, q_rope = _queries(cfg, p, x, positions)
+
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wuk"].astype(cfg.cdtype))
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["wuv"].astype(cfg.cdtype))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1)
+    qh = div_axis("heads", cfg.num_heads)
+    q = shard(q, "batch", None, qh, None)
+    k = shard(k, "batch", None, qh, None)
+    v = shard(v, "batch", None, qh, None)
+    # pad v to q/k head_dim so the shared attention core can be reused
+    out = layers.attention(q, k, v, causal=True, window=None,
+                           q_block=min(512, s))
+    out = shard(out, "batch", None, qh, None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.cdtype))
+
+
+def prefill(cfg: ModelConfig, p, cache, x):
+    """Full-sequence forward from position 0 filling the latent cache."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    ckv, k_rope = _latent(cfg, p, x, positions)
+    out = apply(cfg, p, x)
+    t = cache["ckv"].shape[1]
+    c1 = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv[:, :t], 0, axis=1)
+    c2 = jax.lax.dynamic_update_slice_in_dim(cache["krope"], k_rope[:, :t, 0], 0, axis=1)
+    return out, {"ckv": c1, "krope": c2}
+
+
+# -- decode (absorbed) ---------------------------------------------------------
+
+
+def cache_shape(cfg: ModelConfig, batch: int, seq_len: int):
+    h, r, dn, dr, dv = _dims(cfg)
+    return {"ckv": jax.ShapeDtypeStruct((batch, seq_len, r), cfg.cdtype),
+            "krope": jax.ShapeDtypeStruct((batch, seq_len, dr), cfg.cdtype)}
+
+
+def cache_specs(cfg: ModelConfig):
+    # the latent is a single shared "head" — split-K the context over model
+    return {"ckv": ("batch", "kv_seq", None), "krope": ("batch", "kv_seq", None)}
+
+
+def decode(cfg: ModelConfig, p, cache, x, pos):
+    """x: (B,1,d); pos: (B,). Absorbed-MLA single-token attention."""
+    h, r, dn, dr, dv = _dims(cfg)
+    b = x.shape[0]
+    ckv_new, krope_new = _latent(cfg, p, x, pos[:, None])
+    bidx = jnp.arange(b)
+    ckv = cache["ckv"].at[bidx, pos].set(ckv_new[:, 0])
+    krope = cache["krope"].at[bidx, pos].set(krope_new[:, 0, 0])
+
+    q_nope, q_rope = _queries(cfg, p, x, pos[:, None])
+    # absorb W_uk:  q_nope . k_nope = (q_nope @ W_uk^T) . ckv
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wuk"].astype(cfg.cdtype))
+    scores = jnp.einsum("bshr,btr->bhst", q_lat, ckv, preferred_element_type=jnp.float32)
+    scores += jnp.einsum("bshk,btk->bhst", q_rope, krope, preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(dn + dr)
+
+    t = ckv.shape[1]
+    mask = jnp.arange(t)[None, :] <= pos[:, None]          # (B, T)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", probs, ckv.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhk->bshk", ctx.astype(cfg.cdtype), p["wuv"].astype(cfg.cdtype))
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.cdtype))
+    return out, {"ckv": ckv, "krope": krope}

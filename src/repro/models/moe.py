@@ -1,0 +1,304 @@
+"""Mixture-of-Experts family (DeepSeekMoE / DeepSeek-V2-Lite).
+
+FFN: ``num_shared_experts`` dense shared experts + ``num_experts`` routed
+fine-grained experts with top-k gating.  Two routed implementations:
+
+* ``dispatch`` — GShard-style one-hot dispatch/combine einsums over capacity
+  buffers.  The standard JAX formulation (MaxText-style); pays ~2x FLOPs in
+  the dispatch einsums.  This is the BASELINE.
+* ``ragged``  — sort-based: tokens are argsorted by expert id inside each
+  group, scattered into (E, C, d) buffers, run through batched expert GEMMs
+  and gathered back.  Same GEMM FLOPs, no dispatch-einsum FLOPs; the
+  beyond-baseline optimization evaluated in EXPERIMENTS.md §Perf.
+
+Attention is standard MHA, or MLA when cfg.use_mla (DeepSeek-V2-Lite).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import div_axis, shard
+from repro.models import attention, head, layers, mla, stack
+
+MOE_GROUP = 4096  # tokens per dispatch group
+
+
+# ---------------------------------------------------------------------------
+# routed experts
+# ---------------------------------------------------------------------------
+
+
+def moe_init(cfg: ModelConfig, key) -> dict:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": layers.dense_init(k1, d, e, jnp.float32),
+        "wi_gate": layers.dense_init(k2, d, (e, f), cfg.pdtype).transpose(1, 0, 2),
+        "wi_up": layers.dense_init(k3, d, (e, f), cfg.pdtype).transpose(1, 0, 2),
+        "wo": layers.dense_init(k4, f, (e, d), cfg.pdtype).transpose(1, 0, 2),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = layers.swiglu_init(k5, d, cfg.num_shared_experts * f, cfg.pdtype)
+    return p
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    s = {
+        "router": ("embed", None),
+        "wi_gate": ("experts", "embed", "expert_ffn"),
+        "wi_up": ("experts", "embed", "expert_ffn"),
+        "wo": ("experts", "expert_ffn", "embed"),
+    }
+    if cfg.num_shared_experts:
+        s["shared"] = layers.swiglu_specs()
+    return s
+
+
+def _route(cfg: ModelConfig, p, xg):
+    """xg: (n, G, d) -> (probs (n,G,K), ids (n,G,K), aux scalar)."""
+    logits = jnp.einsum("ngd,de->nge", xg.astype(jnp.float32), p["router"])
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    probs, ids = jax.lax.top_k(probs_full, cfg.top_k)
+    probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux (Switch/GShard): E * mean_e(frac_tokens_e * mean_prob_e)
+    e = cfg.num_experts
+    assign = jax.nn.one_hot(ids, e, dtype=jnp.float32).sum(axis=2)   # (n,G,E)
+    frac = assign.mean(axis=(0, 1)) / cfg.top_k
+    mean_p = probs_full.mean(axis=(0, 1))
+    aux = e * jnp.sum(frac * mean_p) * cfg.aux_loss_coef
+    return probs, ids, aux
+
+
+def _capacity(cfg: ModelConfig, g: int) -> int:
+    c = int(g * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+
+
+def _expert_ffn(cfg: ModelConfig, p, xe):
+    """xe: (n, E, C, d) -> (n, E, C, d)."""
+    cd = cfg.cdtype
+    if cfg.attn_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.moe_gemm import moe_expert_ffn
+        n, e, c, d = xe.shape
+        out = jax.vmap(lambda xg: moe_expert_ffn(
+            xg, p["wi_gate"].astype(cd), p["wi_up"].astype(cd),
+            p["wo"].astype(cd), block_c=min(128, c),
+            interpret=(cfg.attn_impl == "pallas_interpret")))(xe)
+        return out
+    gate = jnp.einsum("necd,edf->necf", xe, p["wi_gate"].astype(cd))
+    up = jnp.einsum("necd,edf->necf", xe, p["wi_up"].astype(cd))
+    h = jax.nn.silu(gate) * up
+    h = shard(h, "expert_batch", "experts", None, "expert_ffn")
+    return jnp.einsum("necf,efd->necd", h, p["wo"].astype(cd))
+
+
+def _moe_dispatch(cfg: ModelConfig, p, xg, probs, ids):
+    """GShard one-hot dispatch. xg: (n,G,d)."""
+    n, g, d = xg.shape
+    e, c = cfg.num_experts, _capacity(cfg, g)
+    onehot = jax.nn.one_hot(ids, e, dtype=jnp.float32)               # (n,G,K,E)
+    assign = onehot.sum(axis=2)                                      # (n,G,E)
+    pos = jnp.cumsum(assign, axis=1) - assign                        # (n,G,E)
+    keep = (pos < c) * assign
+    disp = keep[..., None] * jax.nn.one_hot(pos.astype(jnp.int32), c, dtype=jnp.float32)
+    gates = (onehot * probs[..., None]).sum(axis=2)                  # (n,G,E)
+    combine = disp * gates[..., None]                                # (n,G,E,C)
+    disp = shard(disp.astype(cfg.cdtype), "expert_batch", None, "experts", None)
+    xe = jnp.einsum("ngec,ngd->necd", disp, xg)                      # (n,E,C,d)
+    xe = shard(xe, "expert_batch", "experts", None, None)
+    ye = _expert_ffn(cfg, p, xe)
+    out = jnp.einsum("ngec,necd->ngd", combine.astype(cfg.cdtype), ye)
+    return out
+
+
+def _moe_ragged(cfg: ModelConfig, p, xg, probs, ids):
+    """Sort-based dispatch (no one-hot einsum FLOPs). xg: (n,G,d)."""
+    n, g, d = xg.shape
+    e, k, c = cfg.num_experts, cfg.top_k, _capacity(cfg, g)
+    eid = ids.reshape(n, g * k)                                       # (n, GK)
+    tok = jnp.repeat(jnp.arange(g)[None, :], n, 0).reshape(n, g, 1)
+    tok = jnp.broadcast_to(tok, (n, g, k)).reshape(n, g * k)
+    pw = probs.reshape(n, g * k)
+
+    order = jnp.argsort(eid, axis=-1, stable=True)
+    eid_s = jnp.take_along_axis(eid, order, -1)
+    tok_s = jnp.take_along_axis(tok, order, -1)
+    pw_s = jnp.take_along_axis(pw, order, -1)
+    # rank within expert segment
+    seg_start = jax.vmap(lambda a: jnp.searchsorted(a, jnp.arange(e), side="left"))(eid_s)
+    starts = jnp.take_along_axis(seg_start, eid_s, -1)               # (n, GK)
+    slot = jnp.arange(g * k)[None, :] - starts
+    keep = slot < c
+    slot = jnp.where(keep, slot, c - 1)
+
+    gathered = jnp.take_along_axis(xg, tok_s[..., None], axis=1)     # (n,GK,d)
+    xe = jnp.zeros((n, e, c, d), xg.dtype)
+    nidx = jnp.arange(n)[:, None]
+    xe = xe.at[nidx, eid_s, slot].set(
+        jnp.where(keep[..., None], gathered, 0.0), mode="drop")
+    xe = shard(xe, "expert_batch", "experts", None, None)
+    ye = _expert_ffn(cfg, p, xe)                                     # (n,E,C,d)
+    back = ye[nidx, eid_s, slot]                                      # (n,GK,d)
+    back = back * (pw_s * keep)[..., None].astype(back.dtype)
+    out = jnp.zeros_like(xg)
+    out = out.at[nidx, tok_s].add(back)
+    return out
+
+
+def moe_ffn(cfg: ModelConfig, p, x):
+    """x: (B,S,d) -> (out, aux)."""
+    b, s, d = x.shape
+    tokens = b * s
+    g = min(MOE_GROUP, tokens)
+    while tokens % g != 0:
+        g -= 1
+    xg = x.reshape(tokens // g, g, d)
+    xg = shard(xg, "expert_batch", None, "embed")
+    probs, ids, aux = _route(cfg, p, xg)
+    impl = _moe_ragged if cfg.moe_impl == "ragged" else _moe_dispatch
+    out = impl(cfg, p, xg, probs, ids)
+    out = out.reshape(b, s, d)
+    if cfg.num_shared_experts:
+        out = out + layers.swiglu_apply(p["shared"], x, cfg.cdtype)
+    return shard(out, "batch", None, "embed"), aux
+
+
+# ---------------------------------------------------------------------------
+# layers / model (mirrors transformer.py but with aux threading + MLA)
+# ---------------------------------------------------------------------------
+
+
+def layer_init(cfg: ModelConfig, key, kind: str) -> dict:
+    ka, km = jax.random.split(key)
+    p = {"ln1": jnp.zeros((cfg.d_model,), cfg.pdtype),
+         "ln2": jnp.zeros((cfg.d_model,), cfg.pdtype)}
+    p["attn"] = mla.init(cfg, ka) if cfg.use_mla else attention.init(cfg, ka)
+    if kind == "moe":
+        p["moe"] = moe_init(cfg, km)
+    else:
+        p["mlp"] = layers.swiglu_init(km, cfg.d_model, cfg.d_ff, cfg.pdtype)
+    return p
+
+
+def layer_specs(cfg: ModelConfig, kind: str) -> dict:
+    s = {"ln1": (None,), "ln2": (None,)}
+    s["attn"] = mla.specs(cfg) if cfg.use_mla else attention.specs(cfg)
+    if kind == "moe":
+        s["moe"] = moe_specs(cfg)
+    else:
+        s["mlp"] = layers.swiglu_specs()
+    return s
+
+
+def layer_apply(cfg: ModelConfig, p, x, *, window, kind):
+    h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a = mla.apply(cfg, p["attn"], h)
+    else:
+        a = attention.apply(cfg, p["attn"], h, window=window)
+    x = shard(x + a, "batch", None, "embed")
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        f, aux = moe_ffn(cfg, p["moe"], h)
+    else:
+        f, aux = layers.swiglu_apply(p["mlp"], h, cfg.cdtype), jnp.zeros((), jnp.float32)
+    return shard(x + f, "batch", None, "embed"), aux
+
+
+def layer_decode(cfg: ModelConfig, p, cache, x, pos, *, window, kind):
+    h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a, cache = mla.decode(cfg, p["attn"], cache, h, pos)
+    else:
+        a, cache = attention.decode(cfg, p["attn"], cache, h, pos, window=window)
+    x = x + a
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        f, _ = moe_ffn(cfg, p["moe"], h)
+    else:
+        f = layers.swiglu_apply(p["mlp"], h, cfg.cdtype)
+    return x + f, cache
+
+
+def layer_cache_shape(cfg: ModelConfig, kind, window, batch, seq_len):
+    if cfg.use_mla:
+        return mla.cache_shape(cfg, batch, seq_len)
+    return attention.cache_shape(cfg, batch, seq_len, window)
+
+
+def layer_cache_specs(cfg: ModelConfig, kind):
+    return mla.cache_specs(cfg) if cfg.use_mla else attention.cache_specs(cfg)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kh, kl = jax.random.split(key)
+    return {"head": head.init(cfg, kh),
+            "runs": stack.init_runs(cfg, kl, layer_init)}
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {"head": head.specs(cfg),
+            "runs": stack.run_specs(cfg, layer_specs)}
+
+
+def _hidden(cfg: ModelConfig, params, batch, remat=None):
+    x = head.embed(cfg, params["head"], batch["tokens"])
+    remat = (cfg.remat != "none") if remat is None else remat
+    return stack.apply_runs_aux(cfg, params["runs"], x, layer_apply, remat=remat)
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat=None):
+    x, aux = _hidden(cfg, params, batch, remat)
+    lgts = head.logits(cfg, params["head"], x)
+    return lgts, {"moe_aux": aux}
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    x, aux = _hidden(cfg, params, batch)
+    loss = head.chunked_loss(cfg, params["head"], x, batch)
+    return loss + aux, {"moe_aux": aux}
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq_len: int):
+    return stack.cache_shapes(cfg, batch, seq_len, layer_cache_shape)
+
+
+def cache_specs(cfg: ModelConfig):
+    return stack.cache_run_specs(cfg, layer_cache_specs)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch, seq_len))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    x = head.embed(cfg, params["head"], tokens)
+    x, cache = stack.decode_runs(cfg, params["runs"], cache, x, pos, layer_decode)
+    lgts = head.logits(cfg, params["head"], x)
+    return lgts, cache
+
+
+def layer_prefill(cfg: ModelConfig, p, cache, x, *, window, kind):
+    h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a, cache = mla.prefill(cfg, p["attn"], cache, h)
+    else:
+        a, cache = attention.prefill(cfg, p["attn"], cache, h, window=window)
+    x = x + a
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        f, _ = moe_ffn(cfg, p["moe"], h)
+    else:
+        f = layers.swiglu_apply(p["mlp"], h, cfg.cdtype)
+    return shard(x + f, "batch", None, "embed"), cache
+
+
+def prefill(cfg: ModelConfig, params, cache, batch):
+    x = head.embed(cfg, params["head"], batch["tokens"])
+    x, cache = stack.prefill_runs(cfg, params["runs"], cache, x, layer_prefill)
+    lgts = head.logits(cfg, params["head"], x)
+    return lgts, cache

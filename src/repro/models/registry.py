@@ -1,0 +1,88 @@
+"""Uniform model API: dispatch by cfg.family.
+
+Every family module implements:
+  init_params(cfg, key) / param_specs(cfg)
+  forward(cfg, params, batch) -> (logits, aux)
+  loss_fn(cfg, params, batch) -> (loss, aux)
+  cache_shapes(cfg, batch, seq_len) / cache_specs(cfg) / init_cache(...)
+  decode_step(cfg, params, cache, tokens, pos) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def family_module(cfg: ModelConfig):
+    from repro.models import hymba, moe, rwkv6, transformer, whisper
+    return {
+        "dense": transformer,
+        "vlm": transformer,
+        "moe": moe,
+        "ssm": rwkv6,
+        "hybrid": hymba,
+        "encdec": whisper,
+    }[cfg.family]
+
+
+def init_params(cfg: ModelConfig, key):
+    return family_module(cfg).init_params(cfg, key)
+
+
+def param_specs(cfg: ModelConfig):
+    return family_module(cfg).param_specs(cfg)
+
+
+def forward(cfg: ModelConfig, params, batch):
+    return family_module(cfg).forward(cfg, params, batch)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    return family_module(cfg).loss_fn(cfg, params, batch)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq_len: int):
+    return family_module(cfg).cache_shapes(cfg, batch, seq_len)
+
+
+def cache_specs(cfg: ModelConfig):
+    return family_module(cfg).cache_specs(cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return family_module(cfg).init_cache(cfg, batch, seq_len)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    return family_module(cfg).decode_step(cfg, params, cache, tokens, pos)
+
+
+def prefill(cfg: ModelConfig, params, cache, batch):
+    """Batched prefill from position 0: (logits, filled cache)."""
+    return family_module(cfg).prefill(cfg, params, cache, batch)
+
+
+# ---------------------------------------------------------------------------
+# parameter accounting (for roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def _param_count_cached(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    total = _param_count_cached(cfg)
+    if not active_only or cfg.num_experts == 0:
+        return total
+    n_moe_layers = cfg.num_layers - cfg.first_dense_layers
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    inactive = n_moe_layers * (cfg.num_experts - cfg.top_k) * per_expert
+    return total - inactive

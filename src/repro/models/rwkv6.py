@@ -1,0 +1,321 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent decay).
+
+Train/prefill uses the chunked-parallel form (chunk=16): within a chunk the
+recurrence is computed with matmuls (MXU-friendly); the state is carried
+across chunks with a ``lax.scan``.  Exponent centering at the chunk midpoint
+keeps everything in fp32 range (|logw| clipped to 8, chunk 16 -> exponents
+bounded by +-64).  The Pallas kernel in ``repro.kernels.rwkv6_scan``
+implements the same contract; ``ref.py`` cross-checks both against a naive
+per-token scan.
+
+wkv head state: S in (B, H, Dk, Dv);   S_t = diag(w_t) S_{t-1} + k_t^T v_t
+                y_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import head, layers, stack
+
+LORA_MIX = 32
+LORA_DECAY = 64
+CHUNK = 16
+LOGW_MIN = -8.0
+LOGW_MAX = -1e-4
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def layer_init(cfg: ModelConfig, key, kind: str) -> dict:
+    d, dff = cfg.d_model, cfg.d_ff
+    h, dh = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    tm = {
+        "mu_x": jnp.full((d,), 0.5, cfg.pdtype),
+        "mu": jnp.full((5, d), 0.5, cfg.pdtype),
+        "w1": layers.dense_init(ks[0], d, 5 * LORA_MIX, cfg.pdtype),
+        "w2": (jax.random.normal(ks[1], (5, LORA_MIX, d)) * 0.01).astype(cfg.pdtype),
+        "w0": jnp.linspace(-5.0, -3.0, d).astype(cfg.pdtype),
+        "wa": layers.dense_init(ks[2], d, LORA_DECAY, cfg.pdtype),
+        "wb": (jax.random.normal(ks[3], (LORA_DECAY, d)) * 0.01).astype(cfg.pdtype),
+        "u": (jax.random.normal(ks[4], (h, dh)) * 0.1).astype(cfg.pdtype),
+        "wr": layers.dense_init(ks[5], d, d, cfg.pdtype),
+        "wk": layers.dense_init(ks[6], d, d, cfg.pdtype),
+        "wv": layers.dense_init(ks[7], d, d, cfg.pdtype),
+        "wg": layers.dense_init(ks[8], d, d, cfg.pdtype),
+        "wo": layers.dense_init(ks[9], d, d, cfg.pdtype),
+        "gn_scale": jnp.ones((d,), cfg.pdtype),
+        "gn_bias": jnp.zeros((d,), cfg.pdtype),
+    }
+    cm = {
+        "mu_k": jnp.full((d,), 0.5, cfg.pdtype),
+        "mu_r": jnp.full((d,), 0.5, cfg.pdtype),
+        "wk": layers.dense_init(ks[10], d, dff, cfg.pdtype),
+        "wv": layers.dense_init(ks[11], dff, d, cfg.pdtype),
+        "wr": layers.dense_init(jax.random.fold_in(key, 99), d, d, cfg.pdtype),
+    }
+    return {"ln1": jnp.zeros((d,), cfg.pdtype), "tm": tm,
+            "ln2": jnp.zeros((d,), cfg.pdtype), "cm": cm}
+
+
+def layer_specs(cfg: ModelConfig, kind: str) -> dict:
+    # time-mix channels must stay head-aligned -> replicated over "model";
+    # channel-mix FFN and embeddings carry the tensor parallelism.
+    tm = {k: tuple([None] * n) for k, n in [
+        ("mu_x", 1), ("mu", 2), ("w1", 2), ("w2", 3), ("w0", 1), ("wa", 2),
+        ("wb", 2), ("u", 2), ("wr", 2), ("wk", 2), ("wv", 2), ("wg", 2),
+        ("wo", 2), ("gn_scale", 1), ("gn_bias", 1)]}
+    cm = {"mu_k": (None,), "mu_r": (None,),
+          "wk": ("embed", "ffn"), "wv": ("ffn", "embed"), "wr": ("embed", None)}
+    return {"ln1": (None,), "tm": tm, "ln2": (None,), "cm": cm}
+
+
+# ---------------------------------------------------------------------------
+# time mix
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(p, x, xprev):
+    """Data-dependent token-shift mixing -> (x_w, x_k, x_v, x_r, x_g)."""
+    sx = xprev - x
+    xxx = x + sx * p["mu_x"].astype(x.dtype)
+    t = jnp.tanh(jnp.einsum("bsd,df->bsf", xxx, p["w1"].astype(x.dtype)))
+    t = t.reshape(*t.shape[:-1], 5, LORA_MIX)
+    m = jnp.einsum("bsfr,frd->bsfd", t, p["w2"].astype(x.dtype))
+    mixed = x[..., None, :] + sx[..., None, :] * (p["mu"].astype(x.dtype) + m)
+    return [mixed[..., i, :] for i in range(5)]
+
+
+def _rkvwg(cfg, p, x, xprev):
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xprev)
+    cd = cfg.cdtype
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(cd))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(cd))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(cd)))
+    logw = -jnp.exp(p["w0"].astype(jnp.float32)
+                    + jnp.einsum("bsd,de->bse", jnp.tanh(
+                        jnp.einsum("bsd,df->bsf", xw, p["wa"].astype(cd))).astype(jnp.float32),
+                        p["wb"].astype(jnp.float32)))
+    logw = jnp.clip(logw, LOGW_MIN, LOGW_MAX)
+    return r, k, v, g, logw
+
+
+def _heads(x, h, dh):
+    return x.reshape(*x.shape[:-1], h, dh)
+
+
+def wkv_chunked(r, k, v, logw, u, state):
+    """Chunked-parallel wkv.  r/k/v: (B,S,H,D) (compute dtype), logw fp32,
+    u: (H,D), state: (B,H,Dk,Dv) fp32.  Returns (y (B,S,H,D) fp32, state)."""
+    b, s, h, dh = r.shape
+    c = CHUNK
+    pad = (-s) % c
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                       constant_values=LOGW_MAX)
+    n = (s + pad) // c
+
+    def to_chunks(a):  # (B, S, H, D) -> (n, B, C, H, D)
+        return jnp.moveaxis(a.reshape(b, n, c, h, dh), 1, 0)
+
+    rc, kc, vc = map(to_chunks, (r.astype(jnp.float32), k.astype(jnp.float32),
+                                 v.astype(jnp.float32)))
+    lw = to_chunks(logw)
+    la = jnp.cumsum(lw, axis=2)                    # inclusive within chunk
+    la_prev = la - lw
+    mid = la[:, :, c // 2: c // 2 + 1]             # centering constant
+
+    qq = rc * jnp.exp(la_prev - mid)
+    kk = kc * jnp.exp(mid - la)
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)  # strict lower: s' < t
+
+    def chunk_step(S, xs):
+        rc_, kc_, vc_, la_, lap_, qq_, kk_ = xs
+        scores = jnp.einsum("bthd,bshd->bhts", qq_, kk_)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        intra = jnp.einsum("bhts,bshd->bthd", scores, vc_)
+        bonus = jnp.einsum("bthd,hd,bthd->bth", rc_, u, kc_)
+        intra = intra + bonus[..., None] * vc_
+        cross = jnp.einsum("bthd,bhdv->bthv", rc_ * jnp.exp(lap_), S)
+        y = intra + cross
+        w_all = jnp.exp(la_[:, -1])                # (B,H,D)
+        kdec = kc_ * jnp.exp(la_[:, -1:] - la_)
+        S = w_all[..., None] * S + jnp.einsum("bthd,bthv->bhdv", kdec, vc_)
+        return S, y
+
+    state, y = jax.lax.scan(chunk_step, state.astype(jnp.float32),
+                            (rc, kc, vc, la, la_prev, qq, kk))
+    y = jnp.moveaxis(y, 0, 1).reshape(b, n * c, h, dh)
+    return y[:, :s], state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Single-token recurrence. r/k/v: (B,H,D); state (B,H,Dk,Dv) fp32."""
+    r, k, v = (a.astype(jnp.float32) for a in (r, k, v))
+    kv = k[..., :, None] * v[..., None, :]                   # (B,H,Dk,Dv)
+    y = jnp.einsum("bhd,bhdv->bhv", r, state + u[..., None] * kv)
+    state = jnp.exp(logw)[..., None] * state + kv
+    return y, state
+
+
+def _group_norm(y, scale, bias, eps):
+    """Per-head layernorm over D (GroupNorm(H)); y: (B,S,H,D) fp32."""
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + eps)
+    b, s, h, d = y.shape
+    y = y.reshape(b, s, h * d)
+    return y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+
+
+def time_mix(cfg: ModelConfig, p, x, xprev, state):
+    """x: (B,S,d); xprev: token-shifted x; state: (B,H,D,D) fp32."""
+    h, dh = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    r, k, v, g, logw = _rkvwg(cfg, p, x, xprev)
+    if cfg.attn_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.rwkv6_scan import rwkv6_scan
+        y, state = rwkv6_scan(_heads(r, h, dh), _heads(k, h, dh),
+                              _heads(v, h, dh), _heads(logw, h, dh),
+                              p["u"].astype(jnp.float32),
+                              interpret=(cfg.attn_impl == "pallas_interpret"))
+    else:
+        y, state = wkv_chunked(_heads(r, h, dh), _heads(k, h, dh),
+                               _heads(v, h, dh), _heads(logw, h, dh),
+                               p["u"].astype(jnp.float32), state)
+    y = _group_norm(y, p["gn_scale"], p["gn_bias"], cfg.norm_eps)
+    y = y.astype(cfg.cdtype) * g
+    return jnp.einsum("bsd,de->bse", y, p["wo"].astype(cfg.cdtype)), state
+
+
+def channel_mix(cfg: ModelConfig, p, x, xprev):
+    cd = cfg.cdtype
+    xk = x + (xprev - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (xprev - x) * p["mu_r"].astype(x.dtype)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(cd))
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = shard(kk, "batch", None, "ffn")
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["wv"].astype(cd))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(cd)))
+    return rr * vv
+
+
+def _tshift(x):
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def layer_apply(cfg: ModelConfig, p, x, *, window, kind):
+    h, dh = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    b = x.shape[0]
+    state0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    xa = layers.layernorm(x, 1.0 + p["ln1"], jnp.zeros_like(p["ln1"]), cfg.norm_eps)
+    y, _ = time_mix(cfg, p["tm"], xa, _tshift(xa), state0)
+    x = shard(x + y, "batch", None, "embed")
+    xb = layers.layernorm(x, 1.0 + p["ln2"], jnp.zeros_like(p["ln2"]), cfg.norm_eps)
+    x = x + channel_mix(cfg, p["cm"], xb, _tshift(xb))
+    return shard(x, "batch", None, "embed")
+
+
+# -- decode ----------------------------------------------------------------------
+
+
+def layer_cache_shape(cfg: ModelConfig, kind, window, batch, seq_len):
+    h, dh = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    return {"S": jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+            "tshift": jax.ShapeDtypeStruct((batch, cfg.d_model), cfg.cdtype),
+            "cshift": jax.ShapeDtypeStruct((batch, cfg.d_model), cfg.cdtype)}
+
+
+def layer_cache_specs(cfg: ModelConfig, kind):
+    return {"S": ("batch", None, None, None), "tshift": ("batch", None),
+            "cshift": ("batch", None)}
+
+
+def layer_decode(cfg: ModelConfig, p, cache, x, pos, *, window, kind):
+    h, dh = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    xa = layers.layernorm(x, 1.0 + p["ln1"], jnp.zeros_like(p["ln1"]), cfg.norm_eps)
+    xprev = cache["tshift"][:, None, :]
+    r, k, v, g, logw = _rkvwg(cfg, p["tm"], xa, xprev)
+    y, S = wkv_step(_heads(r[:, 0], h, dh), _heads(k[:, 0], h, dh),
+                    _heads(v[:, 0], h, dh), _heads(logw[:, 0], h, dh),
+                    p["tm"]["u"].astype(jnp.float32), cache["S"])
+    y = _group_norm(y[:, None], p["tm"]["gn_scale"], p["tm"]["gn_bias"], cfg.norm_eps)
+    y = y.astype(cfg.cdtype) * g
+    y = jnp.einsum("bsd,de->bse", y, p["tm"]["wo"].astype(cfg.cdtype))
+    x = x + y
+    xb = layers.layernorm(x, 1.0 + p["ln2"], jnp.zeros_like(p["ln2"]), cfg.norm_eps)
+    cprev = cache["cshift"][:, None, :]
+    x = x + channel_mix(cfg, p["cm"], xb, cprev)
+    return x, {"S": S, "tshift": xa[:, 0], "cshift": xb[:, 0]}
+
+
+# -- model --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kh, kl = jax.random.split(key)
+    return {"head": head.init(cfg, kh),
+            "runs": stack.init_runs(cfg, kl, layer_init)}
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {"head": head.specs(cfg), "runs": stack.run_specs(cfg, layer_specs)}
+
+
+def _hidden(cfg: ModelConfig, params, batch, remat=None):
+    x = head.embed(cfg, params["head"], batch["tokens"])
+    remat = (cfg.remat != "none") if remat is None else remat
+    return stack.apply_runs(cfg, params["runs"], x, layer_apply, remat=remat)
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat=None):
+    return head.logits(cfg, params["head"], _hidden(cfg, params, batch, remat)), {}
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    x = _hidden(cfg, params, batch)
+    return head.chunked_loss(cfg, params["head"], x, batch), {}
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq_len: int):
+    return stack.cache_shapes(cfg, batch, seq_len, layer_cache_shape)
+
+
+def cache_specs(cfg: ModelConfig):
+    return stack.cache_run_specs(cfg, layer_cache_specs)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch, seq_len))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    x = head.embed(cfg, params["head"], tokens)
+    x, cache = stack.decode_runs(cfg, params["runs"], cache, x, pos, layer_decode)
+    return head.logits(cfg, params["head"], x), cache
+
+
+def layer_prefill(cfg: ModelConfig, p, cache, x, *, window, kind):
+    xa = layers.layernorm(x, 1.0 + p["ln1"], jnp.zeros_like(p["ln1"]), cfg.norm_eps)
+    y, S = time_mix(cfg, p["tm"], xa, _tshift(xa), cache["S"])
+    x = shard(x + y, "batch", None, "embed")
+    xb = layers.layernorm(x, 1.0 + p["ln2"], jnp.zeros_like(p["ln2"]), cfg.norm_eps)
+    x = x + channel_mix(cfg, p["cm"], xb, _tshift(xb))
+    return shard(x, "batch", None, "embed"), {
+        "S": S, "tshift": xa[:, -1], "cshift": xb[:, -1]}
+
+
+def prefill(cfg: ModelConfig, params, cache, batch):
+    x = head.embed(cfg, params["head"], batch["tokens"])
+    x, cache = stack.prefill_runs(cfg, params["runs"], cache, x, layer_prefill)
+    return head.logits(cfg, params["head"], x), cache

@@ -1,0 +1,257 @@
+"""Run-compressed layer stacks.
+
+Layer patterns like gemma3's "LLLLLG" (5 sliding-window : 1 global) or
+gemma2's alternating "LG" mean consecutive layers are not homogeneous.  We
+compress the per-layer (window, kind) sequence into *runs*, where each run is
+``count`` repetitions of a ``unit`` of one or more sub-layers:
+
+* homogeneous stretches -> unit of length 1, scanned over ``count`` layers;
+* periodic patterns -> unit = one period (e.g. (L, G)), scanned over the
+  number of periods — gemma2's 46 alternating layers become ONE scan of 23
+  blocks instead of 46 inline layers (HLO size O(1) in depth, ~15x faster
+  XLA compile);
+* singleton runs are applied inline.
+
+Decode threads a per-run cache (a list per sub-layer) through the same
+structure; sliding-window sub-layers get ring caches sized to the window,
+which is what makes 500k-context decode fit in HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+LayerSig = tuple[Optional[int], str]     # (window, kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class Run:
+    count: int                  # scan length (number of unit repetitions)
+    unit: tuple[LayerSig, ...]  # sub-layers applied per repetition
+
+    @property
+    def n_layers(self) -> int:
+        return self.count * len(self.unit)
+
+
+def layer_windows(cfg: ModelConfig) -> list[Optional[int]]:
+    if cfg.family in ("ssm",):
+        return [None] * cfg.num_layers
+    if cfg.family == "hybrid":
+        return [None if i in cfg.full_attn_layers else cfg.sliding_window
+                for i in range(cfg.num_layers)]
+    pat = cfg.attn_pattern or "G"
+    out = []
+    for i in range(cfg.num_layers):
+        c = pat[i % len(pat)]
+        out.append(None if c == "G" else cfg.sliding_window)
+    return out
+
+
+def layer_kinds(cfg: ModelConfig) -> list[str]:
+    if cfg.num_experts > 0:
+        return ["dense" if i < cfg.first_dense_layers else "moe"
+                for i in range(cfg.num_layers)]
+    return ["dense"] * cfg.num_layers
+
+
+def _compress_homogeneous(sigs: list[LayerSig]) -> list[Run]:
+    runs: list[Run] = []
+    for s in sigs:
+        if runs and runs[-1].unit == (s,):
+            runs[-1] = Run(runs[-1].count + 1, (s,))
+        else:
+            runs.append(Run(1, (s,)))
+    return runs
+
+
+def compute_runs(cfg: ModelConfig) -> list[Run]:
+    sigs = list(zip(layer_windows(cfg), layer_kinds(cfg)))
+    n = len(sigs)
+    if not cfg.scan_layers:
+        # unrolled: singleton runs -> per-layer (donatable, in-place-updatable)
+        # caches; the production choice for decode, where restacking a
+        # scan-carried cache would rewrite the whole cache every token.
+        return [Run(1, (s,)) for s in sigs]
+    # periodic block compression (layer i sig depends only on i % p)
+    pat = cfg.attn_pattern or "G"
+    p = len(pat)
+    if p > 1 and cfg.family not in ("hybrid", "ssm"):
+        # layers [0, full*p) form identical blocks iff kinds are uniform there
+        full = n // p
+        if full >= 2 and all(sigs[i] == sigs[i % p] for i in range(full * p)):
+            runs = [Run(full, tuple(sigs[:p]))]
+            runs += _compress_homogeneous(sigs[full * p:])
+            return runs
+    return _compress_homogeneous(sigs)
+
+
+# ---------------------------------------------------------------------------
+# params: each run is a list (one entry per unit sub-layer) of stacked trees
+# ---------------------------------------------------------------------------
+
+
+def init_runs(cfg: ModelConfig, key, layer_init: Callable) -> list[Any]:
+    """layer_init(cfg, key, kind) -> layer params pytree."""
+    out = []
+    for i, run in enumerate(compute_runs(cfg)):
+        rk = jax.random.fold_in(key, i)
+        if run.count == 1:
+            out.append([layer_init(cfg, jax.random.fold_in(rk, j), kind)
+                        for j, (_, kind) in enumerate(run.unit)])
+        else:
+            def unit_init(k, _run=run):
+                return [layer_init(cfg, jax.random.fold_in(k, j), kind)
+                        for j, (_, kind) in enumerate(_run.unit)]
+            out.append(jax.vmap(unit_init)(jax.random.split(rk, run.count)))
+    return out
+
+
+def _add_layer_axis(tree):
+    return jax.tree.map(lambda spec: ("layers", *spec), tree,
+                        is_leaf=lambda l: isinstance(l, tuple))
+
+
+def run_specs(cfg: ModelConfig, layer_specs: Callable) -> list[Any]:
+    out = []
+    for run in compute_runs(cfg):
+        s = [layer_specs(cfg, kind) for (_, kind) in run.unit]
+        if run.count > 1:
+            s = _add_layer_axis(s)
+        out.append(s)
+    return out
+
+
+def _maybe_remat(cfg: ModelConfig, fn: Callable) -> Callable:
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def apply_runs(cfg: ModelConfig, run_params: list, x, layer_apply: Callable,
+               *, remat: bool = False, **kw):
+    """layer_apply(cfg, p, x, window=..., kind=..., **kw) -> x."""
+    for run, plist in zip(compute_runs(cfg), run_params):
+        def body(pl_list, xl, _run=run):
+            for (w, k), pl in zip(_run.unit, pl_list):
+                xl = layer_apply(cfg, pl, xl, window=w, kind=k, **kw)
+            return xl
+        if run.count == 1:
+            x = (_maybe_remat(cfg, body) if remat else body)(plist, x)
+        else:
+            def scan_body(carry, pl, _body=body):
+                return _body(pl, carry), None
+            if remat:
+                scan_body = _maybe_remat(cfg, scan_body)
+            x, _ = jax.lax.scan(scan_body, x, plist)
+    return x
+
+
+def apply_runs_aux(cfg: ModelConfig, run_params: list, x, layer_apply: Callable,
+                   *, remat: bool = False, **kw):
+    """Like apply_runs but layer_apply returns (x, aux_scalar); auxes summed."""
+    aux = jnp.zeros((), jnp.float32)
+    for run, plist in zip(compute_runs(cfg), run_params):
+        def body(pl_list, xl, _run=run):
+            a_sum = jnp.zeros((), jnp.float32)
+            for (w, k), pl in zip(_run.unit, pl_list):
+                xl, a = layer_apply(cfg, pl, xl, window=w, kind=k, **kw)
+                a_sum = a_sum + a
+            return xl, a_sum
+        if run.count == 1:
+            fn = _maybe_remat(cfg, body) if remat else body
+            x, a = fn(plist, x)
+            aux = aux + a
+        else:
+            def scan_body(carry, pl, _body=body):
+                xl, acc = carry
+                xl, a = _body(pl, xl)
+                return (xl, acc + a), None
+            if remat:
+                scan_body = _maybe_remat(cfg, scan_body)
+            (x, aux), _ = jax.lax.scan(scan_body, (x, aux), plist)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq_len: int,
+                 layer_cache_shape: Callable) -> list[Any]:
+    """layer_cache_shape(cfg, kind, window, batch, seq_len) -> SDS tree."""
+    out = []
+    for run in compute_runs(cfg):
+        s = [layer_cache_shape(cfg, kind, w, batch, seq_len) for (w, kind) in run.unit]
+        if run.count > 1:
+            s = jax.tree.map(
+                lambda sd: jax.ShapeDtypeStruct((run.count, *sd.shape), sd.dtype), s)
+        out.append(s)
+    return out
+
+
+def cache_run_specs(cfg: ModelConfig, layer_cache_specs: Callable) -> list[Any]:
+    out = []
+    for run in compute_runs(cfg):
+        s = [layer_cache_specs(cfg, kind) for (_, kind) in run.unit]
+        if run.count > 1:
+            s = _add_layer_axis(s)
+        out.append(s)
+    return out
+
+
+def prefill_runs(cfg: ModelConfig, run_params: list, caches: list, x,
+                 layer_prefill: Callable, **kw):
+    """layer_prefill(cfg, p, cache, x, window=..., kind=..., **kw)
+    -> (x, new_cache).  Full-sequence forward from position 0."""
+    new_caches = []
+    for run, plist, clist in zip(compute_runs(cfg), run_params, caches):
+        def body(pl_list, cl_list, xl, _run=run):
+            new_cl = []
+            for (w, k), pl, cl in zip(_run.unit, pl_list, cl_list):
+                xl, c2 = layer_prefill(cfg, pl, cl, xl, window=w, kind=k, **kw)
+                new_cl.append(c2)
+            return xl, new_cl
+        if run.count == 1:
+            x, c2 = body(plist, clist, x)
+        else:
+            def scan_body(carry, pc, _body=body):
+                pl, cl = pc
+                xl, c2 = _body(pl, cl, carry)
+                return xl, c2
+            x, c2 = jax.lax.scan(scan_body, x, (plist, clist))
+        new_caches.append(c2)
+    return x, new_caches
+
+
+def decode_runs(cfg: ModelConfig, run_params: list, caches: list, x, pos,
+                layer_decode: Callable, **kw):
+    """layer_decode(cfg, p, cache, x, pos, window=..., kind=..., **kw)
+    -> (x, new_cache)."""
+    new_caches = []
+    for run, plist, clist in zip(compute_runs(cfg), run_params, caches):
+        def body(pl_list, cl_list, xl, _run=run):
+            new_cl = []
+            for (w, k), pl, cl in zip(_run.unit, pl_list, cl_list):
+                xl, c2 = layer_decode(cfg, pl, cl, xl, pos, window=w, kind=k, **kw)
+                new_cl.append(c2)
+            return xl, new_cl
+        if run.count == 1:
+            x, c2 = body(plist, clist, x)
+        else:
+            def scan_body(carry, pc, _body=body):
+                pl, cl = pc
+                xl, c2 = _body(pl, cl, carry)
+                return xl, c2
+            x, c2 = jax.lax.scan(scan_body, x, (plist, clist))
+        new_caches.append(c2)
+    return x, new_caches

@@ -1,0 +1,149 @@
+"""Decoder-only transformer (families: dense, vlm).
+
+vlm prepends ``num_patches`` precomputed patch embeddings (stub frontend per
+assignment) to the token sequence; the LM head/loss cover token positions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention, head, layers, stack
+
+
+# -- per-layer ---------------------------------------------------------------
+
+
+def layer_init(cfg: ModelConfig, key, kind: str) -> dict:
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "attn": attention.init(cfg, ka),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "mlp": layers.swiglu_init(km, cfg.d_model, cfg.d_ff, cfg.pdtype),
+    }
+
+
+def layer_specs(cfg: ModelConfig, kind: str) -> dict:
+    return {
+        "ln1": (None,),
+        "attn": attention.specs(cfg),
+        "ln2": (None,),
+        "mlp": layers.swiglu_specs(),
+    }
+
+
+def layer_apply(cfg: ModelConfig, p, x, *, window, kind, positions=None):
+    h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    x = x + attention.apply(cfg, p["attn"], h, window=window, positions=positions)
+    x = shard(x, "batch", None, "embed")
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + layers.swiglu_apply(p["mlp"], h, cfg.cdtype)
+    return shard(x, "batch", None, "embed")
+
+
+def layer_decode(cfg: ModelConfig, p, cache, x, pos, *, window, kind):
+    h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, cache = attention.decode(cfg, p["attn"], cache, h, pos, window=window)
+    x = x + a
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + layers.swiglu_apply(p["mlp"], h, cfg.cdtype)
+    return x, cache
+
+
+def layer_cache_shape(cfg: ModelConfig, kind, window, batch, seq_len):
+    return attention.cache_shape(cfg, batch, seq_len, window)
+
+
+def layer_cache_specs(cfg: ModelConfig, kind):
+    return attention.cache_specs(cfg)
+
+
+# -- model --------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kh, kl = jax.random.split(key)
+    return {"head": head.init(cfg, kh),
+            "runs": stack.init_runs(cfg, kl, layer_init)}
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {"head": head.specs(cfg),
+            "runs": stack.run_specs(cfg, layer_specs)}
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch):
+    x = head.embed(cfg, params["head"], batch["tokens"])
+    if cfg.family == "vlm":
+        pe = batch["patch_embeds"].astype(cfg.cdtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def _hidden(cfg: ModelConfig, params, batch, remat=None):
+    x = _embed_inputs(cfg, params, batch)
+    remat = (cfg.remat != "none") if remat is None else remat
+    x = stack.apply_runs(cfg, params["runs"], x, layer_apply, remat=remat)
+    if cfg.family == "vlm":
+        x = x[:, cfg.num_patches:]
+    return x
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat=None):
+    """-> (logits over token positions, aux dict)."""
+    x = _hidden(cfg, params, batch, remat)
+    lgts = head.logits(cfg, params["head"], x)
+    return lgts, {}
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    x = _hidden(cfg, params, batch)
+    return head.chunked_loss(cfg, params["head"], x, batch), {}
+
+
+# -- decode --------------------------------------------------------------------
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq_len: int):
+    return stack.cache_shapes(cfg, batch, seq_len, layer_cache_shape)
+
+
+def cache_specs(cfg: ModelConfig):
+    return stack.cache_run_specs(cfg, layer_cache_specs)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch, seq_len))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """tokens: (B, 1); pos: (B,) absolute positions. -> (logits, cache)."""
+    x = head.embed(cfg, params["head"], tokens)
+    x, cache = stack.decode_runs(cfg, params["runs"], cache, x, pos, layer_decode)
+    lgts = head.logits(cfg, params["head"], x)
+    return lgts, cache
+
+
+def layer_prefill(cfg: ModelConfig, p, cache, x, *, window, kind):
+    h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, cache = attention.prefill(cfg, p["attn"], cache, h, window=window)
+    x = shard(x + a, "batch", None, "embed")
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + layers.swiglu_apply(p["mlp"], h, cfg.cdtype)
+    return shard(x, "batch", None, "embed"), cache
+
+
+def prefill(cfg: ModelConfig, params, cache, batch):
+    """Batched prefill from position 0: forward + cache fill.
+    For vlm, patch embeddings occupy positions [0, num_patches)."""
+    x = _embed_inputs(cfg, params, batch)
+    x, cache = stack.prefill_runs(cfg, params["runs"], cache, x, layer_prefill)
+    if cfg.family == "vlm":
+        x = x[:, cfg.num_patches:]
+    lgts = head.logits(cfg, params["head"], x)
+    return lgts, cache

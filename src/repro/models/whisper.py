@@ -1,0 +1,267 @@
+"""Whisper-style encoder-decoder (audio frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings (B, frames, d) — per assignment).
+
+Absolute sinusoidal positions (parameter-free, so cache/params are
+sequence-length agnostic), bidirectional encoder, causal decoder with
+cross-attention.  No RoPE.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import div_axis, shard
+from repro.models import head, layers
+from repro.models.layers import NEG_INF
+
+
+# -- small building blocks ----------------------------------------------------
+
+
+def _attn_init(cfg, key, kv_dim=None):
+    h, d = cfg.num_heads, cfg.head_dim
+    kv_dim = kv_dim or cfg.d_model
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": layers.dense_init(kq, cfg.d_model, (h, d), cfg.pdtype),
+        "wk": layers.dense_init(kk, kv_dim, (h, d), cfg.pdtype),
+        "wv": layers.dense_init(kv, kv_dim, (h, d), cfg.pdtype),
+        "wo": layers.dense_init(ko, h * d, cfg.d_model, cfg.pdtype).reshape(h, d, cfg.d_model),
+    }
+
+
+def _attn_specs(cfg):
+    qh = div_axis("heads", cfg.num_heads)
+    return {"wq": ("embed", qh, None), "wk": ("embed", qh, None),
+            "wv": ("embed", qh, None), "wo": (qh, None, "embed")}
+
+
+def _mlp_init(cfg, key):
+    k1, k2 = jax.random.split(key)
+    return {"w1": layers.dense_init(k1, cfg.d_model, cfg.d_ff, cfg.pdtype),
+            "w2": layers.dense_init(k2, cfg.d_ff, cfg.d_model, cfg.pdtype)}
+
+
+def _mlp_specs():
+    return {"w1": ("embed", "ffn"), "w2": ("ffn", "embed")}
+
+
+def _mlp(p, x, cd):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"].astype(cd)))
+    h = shard(h, "batch", None, "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(cd))
+
+
+def _proj_qkv(cfg, p, xq, xkv):
+    cd = cfg.cdtype
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(cd))
+    return q, k, v
+
+
+def _attn(cfg, p, xq, xkv, *, causal):
+    q, k, v = _proj_qkv(cfg, p, xq, xkv)
+    out = layers.attention(q, k, v, causal=causal, window=None,
+                           q_block=min(512, q.shape[1]))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.cdtype))
+
+
+# -- layers --------------------------------------------------------------------
+
+
+def enc_layer_init(cfg, key):
+    ka, km = jax.random.split(key)
+    return {"ln1": jnp.zeros((cfg.d_model,), cfg.pdtype), "attn": _attn_init(cfg, ka),
+            "ln2": jnp.zeros((cfg.d_model,), cfg.pdtype), "mlp": _mlp_init(cfg, km)}
+
+
+def dec_layer_init(cfg, key):
+    ka, kc, km = jax.random.split(key, 3)
+    return {"ln1": jnp.zeros((cfg.d_model,), cfg.pdtype), "self": _attn_init(cfg, ka),
+            "lnx": jnp.zeros((cfg.d_model,), cfg.pdtype), "cross": _attn_init(cfg, kc),
+            "ln2": jnp.zeros((cfg.d_model,), cfg.pdtype), "mlp": _mlp_init(cfg, km)}
+
+
+def enc_layer_specs(cfg):
+    return {"ln1": (None,), "attn": _attn_specs(cfg), "ln2": (None,), "mlp": _mlp_specs()}
+
+
+def dec_layer_specs(cfg):
+    return {"ln1": (None,), "self": _attn_specs(cfg), "lnx": (None,),
+            "cross": _attn_specs(cfg), "ln2": (None,), "mlp": _mlp_specs()}
+
+
+def _stack(n):
+    def deco(f):
+        return f
+    return deco
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kh, ke, kd = jax.random.split(key, 3)
+    enc = jax.vmap(lambda k: enc_layer_init(cfg, k))(jax.random.split(ke, cfg.num_encoder_layers))
+    dec = jax.vmap(lambda k: dec_layer_init(cfg, k))(jax.random.split(kd, cfg.num_layers))
+    return {"head": head.init(cfg, kh), "enc": enc, "dec": dec,
+            "enc_norm": jnp.zeros((cfg.d_model,), cfg.pdtype)}
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    add_l = lambda tree: jax.tree.map(lambda s: ("layers", *s), tree,
+                                      is_leaf=lambda l: isinstance(l, tuple))
+    return {"head": head.specs(cfg), "enc": add_l(enc_layer_specs(cfg)),
+            "dec": add_l(dec_layer_specs(cfg)), "enc_norm": (None,)}
+
+
+def encode(cfg: ModelConfig, params, enc_embeds):
+    x = enc_embeds.astype(cfg.cdtype)
+    x = x + layers.sinusoidal_pos(x.shape[1], cfg.d_model).astype(cfg.cdtype)
+    x = shard(x, "batch", None, "embed")
+
+    def body(xl, p):
+        h = layers.rmsnorm(xl, p["ln1"], cfg.norm_eps)
+        xl = xl + _attn(cfg, p["attn"], h, h, causal=False)
+        h = layers.rmsnorm(xl, p["ln2"], cfg.norm_eps)
+        return shard(xl + _mlp(p["mlp"], h, cfg.cdtype), "batch", None, "embed"), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return layers.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _hidden(cfg: ModelConfig, params, batch):
+    enc_out = encode(cfg, params, batch["enc_embeds"])
+    tokens = batch["tokens"]
+    x = head.embed(cfg, params["head"], tokens)
+    x = x + layers.sinusoidal_pos(x.shape[1], cfg.d_model).astype(cfg.cdtype)
+
+    def body(xl, p):
+        h = layers.rmsnorm(xl, p["ln1"], cfg.norm_eps)
+        xl = xl + _attn(cfg, p["self"], h, h, causal=True)
+        h = layers.rmsnorm(xl, p["lnx"], cfg.norm_eps)
+        xl = xl + _attn(cfg, p["cross"], h, enc_out, causal=False)
+        h = layers.rmsnorm(xl, p["ln2"], cfg.norm_eps)
+        return shard(xl + _mlp(p["mlp"], h, cfg.cdtype), "batch", None, "embed"), None
+
+    body_fn = body if cfg.remat == "none" else jax.checkpoint(body)
+    x, _ = jax.lax.scan(body_fn, x, params["dec"])
+    return x
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat=None):
+    return head.logits(cfg, params["head"], _hidden(cfg, params, batch)), {}
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    x = _hidden(cfg, params, batch)
+    return head.chunked_loss(cfg, params["head"], x, batch), {}
+
+
+# -- decode ----------------------------------------------------------------------
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq_len: int):
+    h, d = cfg.num_heads, cfg.head_dim
+    L, f = cfg.num_layers, cfg.encoder_seq
+    kv = lambda t: jax.ShapeDtypeStruct((L, batch, t, h, d), cfg.cdtype)
+    return {"self_k": kv(seq_len), "self_v": kv(seq_len),
+            "cross_k": kv(f), "cross_v": kv(f)}
+
+
+def cache_specs(cfg: ModelConfig):
+    qh = div_axis("heads", cfg.num_heads)
+    s = ("layers", "batch", None, qh, None)
+    return {"self_k": s, "self_v": s, "cross_k": s, "cross_v": s}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch, seq_len))
+
+
+def prefill_cross(cfg: ModelConfig, params, cache, enc_embeds):
+    """Encode audio and fill the cross-attention KV cache."""
+    enc_out = encode(cfg, params, enc_embeds)
+
+    def body(_, p):
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"].astype(cfg.cdtype))
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"].astype(cfg.cdtype))
+        return None, (ck, cv)
+
+    _, (ck, cv) = jax.lax.scan(body, None, params["dec"])
+    return {**cache, "cross_k": ck, "cross_v": cv}
+
+
+def prefill(cfg: ModelConfig, params, cache, batch):
+    """Encode audio, fill cross KV, and prefill the decoder self-cache with
+    the prompt tokens (positions [0, S))."""
+    cache = prefill_cross(cfg, params, cache, batch["enc_embeds"])
+    enc_k, enc_v = cache["cross_k"], cache["cross_v"]
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = head.embed(cfg, params["head"], tokens)
+    x = x + layers.sinusoidal_pos(s, cfg.d_model).astype(cfg.cdtype)
+    t = cache["self_k"].shape[2]
+
+    def body(xl, xs):
+        p, ck, cv = xs
+        h = layers.rmsnorm(xl, p["ln1"], cfg.norm_eps)
+        q, k, v = _proj_qkv(cfg, p["self"], h, h)
+        a = layers.attention(q, k, v, causal=True, window=None,
+                             q_block=min(512, s))
+        xl = xl + jnp.einsum("bshk,hkd->bsd", a, p["self"]["wo"].astype(cfg.cdtype))
+        h = layers.rmsnorm(xl, p["lnx"], cfg.norm_eps)
+        xl = xl + _attn_kv(cfg, p["cross"], h, ck, cv)
+        h = layers.rmsnorm(xl, p["ln2"], cfg.norm_eps)
+        sk = jnp.zeros((xl.shape[0], t, cfg.num_heads, cfg.head_dim), cfg.cdtype)
+        sk = jax.lax.dynamic_update_slice_in_dim(sk, k[:, :t], 0, axis=1)
+        sv = jnp.zeros_like(sk)
+        sv = jax.lax.dynamic_update_slice_in_dim(sv, v[:, :t], 0, axis=1)
+        return xl + _mlp(p["mlp"], h, cfg.cdtype), (sk, sv)
+
+    x, (sk, sv) = jax.lax.scan(body, x, (params["dec"], enc_k, enc_v))
+    lgts = head.logits(cfg, params["head"], x)
+    return lgts, {**cache, "self_k": sk, "self_v": sv}
+
+
+def _attn_kv(cfg, p, xq, k, v):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cfg.cdtype))
+    out = layers.attention(q, k, v, causal=False, window=None,
+                           q_block=min(512, q.shape[1]))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.cdtype))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """tokens (B,1); pos (B,). Self-cache updated; cross-cache read-only."""
+    b = tokens.shape[0]
+    x = head.embed(cfg, params["head"], tokens)
+    pe = layers.sinusoidal_pos(cache["self_k"].shape[2], cfg.d_model).astype(cfg.cdtype)
+    x = x + pe[pos][:, None, :]
+    bidx = jnp.arange(b)
+    t = cache["self_k"].shape[2]
+    key_mask = jnp.arange(t)[None, :] <= pos[:, None]
+
+    def body(xl, xs):
+        p, sk, sv, ck, cv = xs
+        h = layers.rmsnorm(xl, p["ln1"], cfg.norm_eps)
+        q, k_new, v_new = _proj_qkv(cfg, p["self"], h, h)
+        sk = sk.at[bidx, pos].set(k_new[:, 0])
+        sv = sv.at[bidx, pos].set(v_new[:, 0])
+        scores = layers._gqa_scores(q, sk, None)
+        scores = jnp.where(key_mask[:, None, None, None, :], scores, NEG_INF)
+        a = layers._gqa_out(jax.nn.softmax(scores, axis=-1), sv).astype(cfg.cdtype)
+        xl = xl + jnp.einsum("bshk,hkd->bsd", a, p["self"]["wo"].astype(cfg.cdtype))
+        h = layers.rmsnorm(xl, p["lnx"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["wq"].astype(cfg.cdtype))
+        scores = layers._gqa_scores(q, ck, None)
+        a = layers._gqa_out(jax.nn.softmax(scores, axis=-1), cv).astype(cfg.cdtype)
+        xl = xl + jnp.einsum("bshk,hkd->bsd", a, p["cross"]["wo"].astype(cfg.cdtype))
+        h = layers.rmsnorm(xl, p["ln2"], cfg.norm_eps)
+        return xl + _mlp(p["mlp"], h, cfg.cdtype), (sk, sv)
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x, (params["dec"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    lgts = head.logits(cfg, params["head"], x)
+    return lgts, {**cache, "self_k": sk, "self_v": sv}

@@ -1,0 +1,1 @@
+from repro.serving.engine import ModelReplica, ServeRequest  # noqa: F401

@@ -1,0 +1,129 @@
+"""Model replicas: the serverless "instance" backed by a real JAX model.
+
+Cold start = weight init/load + XLA compile of the decode step (measured —
+this is the real-system analogue of the paper's sandbox creation).  A warm
+replica serves up to ``container_concurrency`` requests simultaneously via
+slot-based continuous batching: every ``step()`` advances all active slots by
+one token (consuming prompt tokens first, then generating).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    fn: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    arrival_t: float = 0.0
+    dispatch_t: float = float("nan")
+    first_token_t: float = float("nan")
+    done_t: float = float("nan")
+    output: list[int] = dataclasses.field(default_factory=list)
+    cold: bool = False
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+
+class ModelReplica:
+    """One warm instance: resident weights + compiled step fns + KV cache."""
+
+    def __init__(self, cfg: ModelConfig, *, max_slots: int = 4,
+                 max_seq: int = 256, seed: int = 0):
+        t0 = time.monotonic()
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.params = registry.init_params(cfg, jax.random.PRNGKey(seed))
+        self.cache = registry.init_cache(cfg, max_slots, max_seq)
+        self._step = jax.jit(
+            lambda p, c, tok, pos: registry.decode_step(cfg, p, c, tok, pos),
+            donate_argnums=(1,))
+        # trigger compile (part of the cold start, like a first-request warmup)
+        tok = jnp.zeros((max_slots, 1), jnp.int32)
+        pos = jnp.zeros((max_slots,), jnp.int32)
+        lg, self.cache = self._step(self.params, self.cache, tok, pos)
+        lg.block_until_ready()
+        self.cache = registry.init_cache(cfg, max_slots, max_seq)
+        self.cold_start_s = time.monotonic() - t0
+
+        self.slots: list[Optional[ServeRequest]] = [None] * max_slots
+        self._pos = np.zeros(max_slots, np.int32)
+        self._next_tok = np.zeros(max_slots, np.int32)
+        self._prompt_left: list[list[int]] = [[] for _ in range(max_slots)]
+        self.idle_since: float = time.monotonic()
+        self.created_t = time.monotonic()
+
+    # -- memory accounting (the paper's per-instance footprint) ------------------
+
+    def memory_bytes(self) -> int:
+        leaves = jax.tree.leaves(self.params) + jax.tree.leaves(self.cache)
+        return int(sum(l.size * l.dtype.itemsize for l in leaves))
+
+    # -- slot management -----------------------------------------------------------
+
+    @property
+    def free_slots(self) -> int:
+        return sum(s is None for s in self.slots)
+
+    @property
+    def in_flight(self) -> int:
+        return self.max_slots - self.free_slots
+
+    def add(self, req: ServeRequest, now: float) -> bool:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = req
+                req.dispatch_t = now
+                self._pos[i] = 0
+                prompt = req.prompt[:self.max_seq - req.max_new_tokens - 1]
+                self._prompt_left[i] = list(prompt[1:])
+                self._next_tok[i] = prompt[0] if prompt else 0
+                return True
+        return False
+
+    # -- the serving loop body --------------------------------------------------------
+
+    def step(self, now: float) -> list[ServeRequest]:
+        """Advance every active slot one token; return completed requests."""
+        if self.in_flight == 0:
+            return []
+        toks = jnp.asarray(self._next_tok[:, None])
+        pos = jnp.asarray(self._pos)
+        logits, self.cache = self._step(self.params, self.cache, toks, pos)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self._pos[i] += 1
+            if self._prompt_left[i]:
+                self._next_tok[i] = self._prompt_left[i].pop(0)
+                continue
+            # generating
+            if not req.output and np.isnan(req.first_token_t):
+                req.first_token_t = now
+            req.output.append(int(nxt[i]))
+            self._next_tok[i] = nxt[i]
+            if req.done or self._pos[i] >= self.max_seq - 1:
+                req.done_t = now
+                finished.append(req)
+                self.slots[i] = None
+        if self.in_flight == 0:
+            self.idle_since = now
+        return finished

@@ -1,0 +1,2 @@
+from repro.training.optimizer import adamw_init, adamw_update, opt_specs  # noqa: F401
+from repro.training.train_step import TrainConfig, make_train_step, train_step  # noqa: F401

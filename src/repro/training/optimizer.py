@@ -1,0 +1,110 @@
+"""AdamW from scratch with ZeRO-1-style sharded moments.
+
+Moments are stored fp32 and — on top of the parameter's own tensor-parallel
+sharding — sharded along the data axis on the first unsharded dimension that
+divides evenly ("opt_state" logical axis).  Parameters stay replicated across
+data; XLA inserts the dynamic-slice before the moment update and the
+all-gather after the parameter delta, which is exactly the ZeRO-1 collective
+schedule.  Gradient all-reduces happen in bf16 because parameters are cast to
+the compute dtype at their use sites (the reduction attaches to the bf16
+tensor's cotangent) — the framework's gradient-compression default.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import mesh_axis_size
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _moment_spec(param_spec: Optional[tuple], shape: tuple) -> Optional[tuple]:
+    """Add 'opt_state' (data-axis) sharding on the first free, divisible dim."""
+    if param_spec is None:
+        param_spec = (None,) * len(shape)
+    n = mesh_axis_size("opt_state")
+    out = list(param_spec)
+    # if the param is already FSDP-sharded over data, moments follow it as-is
+    if n > 1 and "fsdp" not in param_spec and "opt_state" not in param_spec:
+        for i, (ax, dim) in enumerate(zip(param_spec, shape)):
+            if ax is None and dim % n == 0 and dim >= n:
+                out[i] = "opt_state"
+                break
+    return tuple(out)
+
+
+def opt_specs(param_spec_tree, param_shape_tree) -> dict:
+    """Logical spec tree for the optimizer state (same structure as params)."""
+    is_spec = lambda l: l is None or isinstance(l, tuple)
+    mspec = jax.tree.map(
+        lambda sp, sh: _moment_spec(sp, sh.shape),
+        param_spec_tree, param_shape_tree, is_leaf=is_spec)
+    return {"m": mspec, "v": mspec, "step": None}
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup then cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_update(cfg: AdamWConfig, grads, params, state):
+    """-> (new_params, new_state, lr).  Decoupled weight decay; bias-corrected."""
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, p, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p - lr * delta.astype(p.dtype)).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = treedef.flatten_up_to(params)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, p, m, v) for g, p, m, v in zip(flat_g, flat_p, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree), norm

@@ -1,0 +1,72 @@
+"""The jitted training step: loss -> grad -> clip -> AdamW -> metrics."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.training import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = opt.AdamWConfig()
+    grad_clip: float = 1.0
+    n_microbatches: int = 1   # gradient accumulation (bounds activation HBM)
+
+
+def _grad_fn(cfg, params, batch):
+    def loss_of(p):
+        loss, aux = registry.loss_fn(cfg, p, batch)
+        return loss, aux
+    return jax.value_and_grad(loss_of, has_aux=True)(params)
+
+
+def train_step(cfg: ModelConfig, tcfg: TrainConfig, params, opt_state, batch):
+    """One optimizer step.  Pure function of (params, opt_state, batch).
+
+    With n_microbatches > 1 the global batch is split along dim 0 and grads
+    are accumulated in fp32 over a lax.scan — activation memory scales with
+    the microbatch, and the accumulators inherit the parameters' (FSDP)
+    sharding.
+    """
+    n = tcfg.n_microbatches
+    if n <= 1:
+        (loss, aux), grads = _grad_fn(cfg, params, batch)
+    else:
+        micro = jax.tree.map(
+            lambda a: a.reshape(n, a.shape[0] // n, *a.shape[1:]), batch)
+
+        def micro_step(acc, mb):
+            g_acc, l_acc = acc
+            (l, _), g = _grad_fn(cfg, params, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (g_acc, l_acc + l), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), _ = jax.lax.scan(
+            micro_step, (g0, jnp.zeros((), jnp.float32)), micro)
+        grads = jax.tree.map(lambda g: g / n, grads)
+        loss = loss / n
+        aux = {}
+
+    grads, gnorm = opt.clip_by_global_norm(grads, tcfg.grad_clip)
+    params, opt_state, lr = opt.adamw_update(tcfg.adamw, grads, params, opt_state)
+    metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm, "lr": lr}
+    for k, v in aux.items():
+        metrics[f"aux/{k}"] = jnp.asarray(v, jnp.float32)
+    return params, opt_state, metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: Optional[TrainConfig] = None):
+    tcfg = tcfg or TrainConfig()
+
+    def step(params, opt_state, batch):
+        return train_step(cfg, tcfg, params, opt_state, batch)
+
+    return step

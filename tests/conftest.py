@@ -1,0 +1,5 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run, and only the dry-run,
+# forces 512 host devices — see repro.launch.dryrun).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

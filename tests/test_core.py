@@ -1,0 +1,187 @@
+"""Unit + behaviour tests for the paper's core: policies, event sim, metrics."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import Cluster
+from repro.core.eventsim import EventSim, SimConfig
+from repro.core.metrics import compute, queueing_cdf
+from repro.core.policies import (AsyncConcurrencyPolicy, HybridHistogramPolicy,
+                                 SyncKeepalivePolicy)
+from repro.core.trace import (TraceConfig, make_profile, rate_matrix,
+                              sample_functions, synthesize)
+
+TC = TraceConfig(num_functions=60, duration_s=900, target_total_rps=10, seed=3)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return synthesize(TC)
+
+
+def _run(trace, policy_factory, failures=None, **sim_kw):
+    sim = EventSim(trace, Cluster(8), policy_factory,
+                   SimConfig(**sim_kw), failures=failures)
+    return sim.run()
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+
+def test_sync_policy_creates_only_without_capacity():
+    p = SyncKeepalivePolicy(keepalive_s=60)
+    assert p.on_arrival(0.0, idle=0, busy_slots=0, starting=0, queued=0).create == 1
+    assert p.on_arrival(0.0, idle=1, busy_slots=0, starting=0, queued=0).create == 0
+    assert p.keepalive(0.0) == 60
+    assert p.synchronous
+
+
+def test_async_policy_window_average():
+    p = AsyncConcurrencyPolicy(window_s=10, target=0.5, tick_s=2.0)
+    # concurrency 4 sustained -> desired = ceil(4 / 0.5) = 8
+    for _ in range(5):
+        d = p.on_tick(0.0, concurrency=4.0, instances=0, starting=0, idle=0)
+    assert d.create == 8
+    # now zero load: average decays, eventually retire
+    for _ in range(5):
+        d = p.on_tick(0.0, concurrency=0.0, instances=8, starting=0, idle=8)
+    assert d.retire > 0
+    assert math.isinf(p.keepalive(0.0))
+
+
+def test_async_cc_divides_desired():
+    p1 = AsyncConcurrencyPolicy(window_s=2, target=1.0, container_concurrency=1, tick_s=2.0)
+    p4 = AsyncConcurrencyPolicy(window_s=2, target=1.0, container_concurrency=4, tick_s=2.0)
+    d1 = p1.on_tick(0.0, 8.0, 0, 0, 0)
+    d4 = p4.on_tick(0.0, 8.0, 0, 0, 0)
+    assert d1.create == 4 * d4.create
+
+
+def test_hybrid_histogram_adapts():
+    p = HybridHistogramPolicy(min_s=10, max_s=600)
+    assert p.keepalive(0.0) == 10   # no samples yet
+    t = 0.0
+    for _ in range(50):
+        p.on_arrival(t, 0, 0, 0, 0)
+        t += 120.0                  # regular 2-min cadence
+    ka = p.keepalive(t)
+    assert 110 <= ka <= 600
+
+
+# ---------------------------------------------------------------------------
+# trace
+# ---------------------------------------------------------------------------
+
+
+def test_trace_determinism_and_sorted(trace):
+    t2 = synthesize(TC)
+    assert len(trace) == len(t2) and np.allclose(trace.t, t2.t)
+    assert (np.diff(trace.t) >= 0).all()
+    assert trace.dur.min() >= 0.02
+
+
+def test_invitro_sampler_preserves_load_shape():
+    full = make_profile(TraceConfig(num_functions=2000, seed=1))
+    sample = sample_functions(full, 200, seed=2)
+    assert len(sample.rate) == 200
+    # stratified sample spans the rate range and keeps the heavy tail
+    assert sample.rate.max() > np.percentile(full.rate, 98)
+    assert sample.rate.min() < np.percentile(full.rate, 5)
+
+
+def test_rate_matrix_conserves_invocations(trace):
+    rm = rate_matrix(trace, tick_s=1.0)
+    assert rm.sum() == len(trace)
+    assert rm.shape[1] == trace.num_functions
+
+
+# ---------------------------------------------------------------------------
+# event sim behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_all_requests_complete(trace):
+    res = _run(trace, lambda f: SyncKeepalivePolicy(keepalive_s=60))
+    m = compute(res)
+    # every measured arrival completes (capacity is ample)
+    assert m.completed > 0
+    assert res.dropped == 0
+    assert m.slowdown_geomean_p99 >= 1.0
+    assert m.normalized_memory >= 1.0
+    assert m.creation_rate >= 0.0
+
+
+def test_keepalive_tradeoff_direction(trace):
+    short = compute(_run(trace, lambda f: SyncKeepalivePolicy(keepalive_s=30)))
+    long = compute(_run(trace, lambda f: SyncKeepalivePolicy(keepalive_s=900)))
+    assert long.slowdown_geomean_p99 <= short.slowdown_geomean_p99
+    assert long.normalized_memory >= short.normalized_memory
+    assert long.creation_rate <= short.creation_rate
+    assert long.cpu_overhead <= short.cpu_overhead
+    assert long.cold_fraction <= short.cold_fraction
+
+
+def test_async_window_tradeoff_direction(trace):
+    short = compute(_run(trace, lambda f: AsyncConcurrencyPolicy(window_s=30)))
+    long = compute(_run(trace, lambda f: AsyncConcurrencyPolicy(window_s=600)))
+    assert long.creation_rate <= short.creation_rate
+    assert long.normalized_memory >= short.normalized_memory
+    assert long.slowdown_geomean_p99 <= short.slowdown_geomean_p99 * 1.1
+
+
+def test_container_concurrency_reduces_churn(trace):
+    cc1 = compute(_run(trace, lambda f: AsyncConcurrencyPolicy(
+        window_s=60, target=0.7, container_concurrency=1)))
+    cc4 = compute(_run(trace, lambda f: AsyncConcurrencyPolicy(
+        window_s=60, target=0.7, container_concurrency=4)))
+    assert cc4.creation_rate < cc1.creation_rate
+    assert cc4.cpu_overhead < cc1.cpu_overhead
+
+
+def test_worker_dominates_overhead(trace):
+    m = compute(_run(trace, lambda f: SyncKeepalivePolicy(keepalive_s=60)))
+    assert m.worker_share > 0.5   # paper: ~80% of churn cost on workers
+
+
+def test_sync_cold_fraction_small_at_long_keepalive(trace):
+    m = compute(_run(trace, lambda f: SyncKeepalivePolicy(keepalive_s=600)))
+    assert m.cold_fraction < 0.05  # paper: ~0.5% at 10-min keepalive
+
+
+def test_queueing_cdf_monotone(trace):
+    res = _run(trace, lambda f: SyncKeepalivePolicy(keepalive_s=60))
+    x, y = queueing_cdf(res)
+    assert (np.diff(x) >= -1e-12).all()
+    assert (np.diff(y) >= 0).all()
+    assert y[-1] == 1.0
+
+
+def test_node_failure_requeues_and_recovers(trace):
+    res = _run(trace, lambda f: SyncKeepalivePolicy(keepalive_s=120),
+               failures=[(500.0, 0), (500.0, 1)])
+    m = compute(res)
+    requeued = sum(r.requeued for r in res.records)
+    assert m.completed > 0
+    # work continues on the remaining nodes; slowdown finite
+    assert np.isfinite(m.slowdown_geomean_p99)
+
+
+def test_straggler_nodes_raise_tail():
+    tc = TraceConfig(num_functions=40, duration_s=600, target_total_rps=8, seed=5)
+    tr = synthesize(tc)
+    normal = EventSim(tr, Cluster(8), lambda f: SyncKeepalivePolicy(600)).run()
+    slow = EventSim(tr, Cluster(8, straggler_frac=0.5, straggler_slowdown=4.0, seed=1),
+                    lambda f: SyncKeepalivePolicy(600)).run()
+    assert compute(slow).slowdown_geomean_p99 > compute(normal).slowdown_geomean_p99
+
+
+def test_hybrid_policy_beats_fixed_on_memory(trace):
+    fixed = compute(_run(trace, lambda f: SyncKeepalivePolicy(keepalive_s=900)))
+    hybrid = compute(_run(trace, lambda f: HybridHistogramPolicy(min_s=30, max_s=900)))
+    # adaptive keepalive should hold less memory at comparable performance
+    assert hybrid.normalized_memory < fixed.normalized_memory
+    assert hybrid.slowdown_geomean_p99 < fixed.slowdown_geomean_p99 * 3

@@ -1,0 +1,116 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import Cluster
+from repro.core.eventsim import EventSim, SimConfig
+from repro.core.metrics import compute
+from repro.core.policies import AsyncConcurrencyPolicy, SyncKeepalivePolicy
+from repro.core.trace import TraceConfig, synthesize
+from repro.models import layers
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@given(seed=st.integers(0, 2**16), keepalive=st.floats(5.0, 900.0),
+       rps=st.floats(1.0, 12.0))
+@settings(**SETTINGS)
+def test_sim_invariants_sync(seed, keepalive, rps):
+    tc = TraceConfig(num_functions=20, duration_s=240, target_total_rps=rps,
+                     seed=seed)
+    trace = synthesize(tc)
+    res = EventSim(trace, Cluster(6), lambda f: SyncKeepalivePolicy(keepalive),
+                   SimConfig(seed=seed)).run()
+    m = compute(res)
+    if m.completed == 0:
+        return
+    # -- invariants from the paper's metric definitions --
+    assert m.slowdown_geomean_p99 >= 1.0 or np.isnan(m.slowdown_geomean_p99)
+    assert m.normalized_memory >= 1.0 or np.isnan(m.normalized_memory)
+    assert m.creation_rate >= 0.0
+    assert 0.0 <= m.worker_share <= 1.0
+    assert m.cpu_overhead >= 0.0
+    assert 0.0 <= m.cold_fraction <= 1.0
+    # requests never finish before they start, never start before arrival
+    for r in res.records:
+        assert r.end >= r.start - 1e-9
+        assert r.start >= r.arrival - 1e-9
+
+
+@given(seed=st.integers(0, 2**16), window=st.floats(10.0, 600.0),
+       target=st.floats(0.3, 1.0), cc=st.integers(1, 4))
+@settings(**SETTINGS)
+def test_sim_invariants_async(seed, window, target, cc):
+    tc = TraceConfig(num_functions=15, duration_s=240, target_total_rps=6,
+                     seed=seed)
+    trace = synthesize(tc)
+    res = EventSim(trace, Cluster(6),
+                   lambda f: AsyncConcurrencyPolicy(window_s=window, target=target,
+                                                    container_concurrency=cc),
+                   SimConfig(seed=seed)).run()
+    m = compute(res)
+    if m.completed == 0:
+        return
+    assert m.normalized_memory >= 1.0 or np.isnan(m.normalized_memory)
+    assert m.creation_rate >= 0.0
+    assert res.creations >= 0 and res.teardowns >= 0
+
+
+@given(st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_trace_synthesis_properties(seed):
+    tc = TraceConfig(num_functions=30, duration_s=300, seed=seed)
+    tr = synthesize(tc)
+    assert (np.diff(tr.t) >= 0).all()
+    assert (tr.t >= 0).all() and (tr.t <= tc.duration_s).all()
+    assert (tr.dur >= 0.02).all() and (tr.dur <= tc.dur_cap_s).all()
+    assert tr.fn.min() >= 0 and tr.fn.max() < tc.num_functions
+
+
+@given(b=st.integers(1, 4), s=st.integers(2, 24), v=st.integers(8, 64),
+       seed=st.integers(0, 999))
+@settings(**SETTINGS)
+def test_cross_entropy_matches_naive(b, s, v, seed):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (b, s, v))
+    targets = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0, v)
+    got = layers.cross_entropy(logits, targets)
+    probs = jax.nn.log_softmax(logits, axis=-1)
+    want = -jnp.take_along_axis(probs, targets[..., None], axis=-1).mean()
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 500))
+@settings(**SETTINGS)
+def test_data_pipeline_deterministic_resume(step):
+    from repro.training.data import DataConfig, batch_at
+    dc = DataConfig(vocab_size=128, seq_len=64, global_batch=2, seed=7)
+    a = batch_at(dc, step)
+    b = batch_at(dc, step)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    assert np.array_equal(a["loss_mask"], b["loss_mask"])
+    # mask zeroes exactly the separator positions
+    sep = a["targets"] == 0
+    assert (a["loss_mask"][sep] == 0).all()
+
+
+@given(dims=st.lists(st.sampled_from([1, 2, 3, 15, 16, 32, 160, 2560]),
+                     min_size=1, max_size=4))
+@settings(**SETTINGS)
+def test_sanitize_spec_always_valid(dims):
+    """Sanitized specs never split a dim unevenly, whatever the shape."""
+    import os
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import sanitize_spec
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = P(*(["data", "model", ("data", "model"), None] * 1)[:len(dims)])
+    out = sanitize_spec(spec, tuple(dims), mesh)
+    for entry, d in zip(out, dims):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        assert d % size == 0

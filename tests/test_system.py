@@ -1,0 +1,84 @@
+"""End-to-end behaviour tests for the paper's system: the full
+trace -> control plane -> metrics pipeline reproduces the paper's headline
+qualitative findings (§1) on a reduced workload."""
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import Cluster
+from repro.core.eventsim import EventSim, SimConfig
+from repro.core.metrics import compute, queueing_cdf
+from repro.core.policies import AsyncConcurrencyPolicy, SyncKeepalivePolicy
+from repro.core.trace import TraceConfig, synthesize
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return synthesize(TraceConfig(num_functions=120, duration_s=1800,
+                                  target_total_rps=20, seed=42))
+
+
+@pytest.fixture(scope="module")
+def sweep(trace):
+    out = {}
+    for ka in (30, 600):
+        out[("sync", ka)] = compute(EventSim(
+            trace, Cluster(8), lambda f, k=ka: SyncKeepalivePolicy(k)).run())
+    for w in (30, 600):
+        out[("async", w)] = compute(EventSim(
+            trace, Cluster(8),
+            lambda f, w_=w: AsyncConcurrencyPolicy(window_s=w_, target=0.7)).run())
+    return out
+
+
+def test_finding1_churn_overhead_band(sweep):
+    """Paper: churn-driven CPU overhead is 10-40% of useful work and it is
+    dominated by the instance creation rate."""
+    for key, m in sweep.items():
+        assert 0.03 < m.cpu_overhead < 1.0, (key, m.cpu_overhead)
+    assert sweep[("sync", 30)].cpu_overhead > sweep[("sync", 600)].cpu_overhead
+    assert sweep[("async", 30)].cpu_overhead > sweep[("async", 600)].cpu_overhead
+
+
+def test_finding2_memory_overprovisioning(sweep):
+    """Paper: allocated memory is 2-10x actively used, growing with
+    keepalive/window."""
+    for key, m in sweep.items():
+        assert m.normalized_memory > 1.3, (key, m.normalized_memory)
+    assert sweep[("sync", 600)].normalized_memory > sweep[("sync", 30)].normalized_memory
+
+
+def test_finding3_cost_reduction_degrades_performance(sweep):
+    """Paper: configs that cut memory/CPU pay for it in slowdown."""
+    cheap = sweep[("sync", 30)]
+    expensive = sweep[("sync", 600)]
+    assert cheap.normalized_memory < expensive.normalized_memory
+    assert cheap.cpu_overhead > expensive.cpu_overhead
+    assert cheap.slowdown_geomean_p99 >= expensive.slowdown_geomean_p99
+
+
+def test_finding_worker_side_dominates(sweep):
+    """Paper: ~80% of the overhead originates on worker nodes."""
+    m = sweep[("sync", 30)]
+    assert m.worker_share > 0.6
+
+
+def test_sync_bimodal_vs_async_tail(trace):
+    """Paper Fig 2: sync queueing is bimodal (0 or ~cold start); async has a
+    smoother tail."""
+    sync_res = EventSim(trace, Cluster(8), lambda f: SyncKeepalivePolicy(600)).run()
+    async_res = EventSim(trace, Cluster(8),
+                         lambda f: AsyncConcurrencyPolicy(window_s=600)).run()
+    xs, ys = queueing_cdf(sync_res)
+    # bimodal: the mass between 100ms and 800ms is nearly empty for sync
+    mid = ((xs > 0.1) & (xs < 0.8)).mean()
+    assert mid < 0.15, mid
+    xa, ya = queueing_cdf(async_res)
+    mid_async = ((xa > 0.1) & (xa < 0.8)).mean()
+    assert mid_async >= mid
+
+
+def test_cold_start_fraction_matches_paper_order(trace):
+    """Paper §4.1.1: ~0.5% cold starts at a 10-minute keepalive."""
+    m = compute(EventSim(trace, Cluster(8), lambda f: SyncKeepalivePolicy(600)).run())
+    assert m.cold_fraction < 0.03
