@@ -1,0 +1,53 @@
+"""Fig 10 (beyond-paper): the dollar-cost vs p99-slowdown frontier of
+two-level autoscaling.
+
+Sweeps node-pool size (max_nodes) x warm-pool fraction x instance keepalive
+through the vmapped lax.scan sweep API (repro.fleet.sweep) — the whole grid
+runs as one jit-compiled vmap, orders of magnitude faster than looping the
+discrete-event oracle — then reports the Pareto set of
+($/1M requests, p99 slowdown).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, trace
+from repro.core.simjax import JaxFleet, JaxPolicy
+from repro.fleet.nodes import NodeType
+from repro.fleet.sweep import pareto_front, sweep
+
+NODE_MB = 32_768.0
+NODE_TYPE = NodeType(name="worker-8", memory_mb=NODE_MB, vcpus=8.0,
+                     price_per_hour=0.39, provision_s=60.0)
+
+KEEPALIVES = [30.0, 120.0, 600.0, 1800.0]
+WARM_FRACS = [0.0, 0.25, 0.5]
+MAX_NODES = [4.0, 8.0, 16.0]
+
+
+def run():
+    t0 = time.time()
+    rows = sweep(
+        trace(), JaxPolicy(kind=0, keepalive_s=600),
+        JaxFleet(node_memory_mb=NODE_MB, provision_s=NODE_TYPE.provision_s,
+                 min_nodes=1, util_target=0.7, cooldown_s=120.0),
+        grid={"keepalive_s": KEEPALIVES, "warm_frac": WARM_FRACS,
+              "max_nodes": MAX_NODES},
+        node_type=NODE_TYPE)
+    elapsed = time.time() - t0
+    front = {id(r) for r in pareto_front(rows)}
+    us_per_cfg = elapsed / len(rows) * 1e6
+    for r in rows:
+        tag = "PARETO" if id(r) in front else "dom"
+        name = (f"fig10_ka{r['keepalive_s']:.0f}_warm{r['warm_frac']:.2f}"
+                f"_n{r['max_nodes']:.0f}")
+        emit(name, us_per_cfg,
+             f"cost_per_1M={r['cost_per_million']:.2f};"
+             f"slowdown={r['slowdown_geomean_p99']:.2f};"
+             f"nodes={r['nodes_mean']:.1f};{tag}")
+    return rows, front
+
+
+if __name__ == "__main__":
+    run()

@@ -10,6 +10,7 @@ MODULES = [
     "benchmarks.fig7_container_concurrency",
     "benchmarks.fig8_tradeoff",
     "benchmarks.fig9_large_scale",
+    "benchmarks.fig10_fleet_cost",
     "benchmarks.table1_trends",
     "benchmarks.roofline",
 ]

@@ -11,6 +11,11 @@ by the simulators.  Workers are pluggable (paper §3.4's KWOK methodology):
 
 The control plane is tick-driven and clock-agnostic: pass wall-clock now for
 real serving, virtual now for simulation.
+
+Two-level autoscaling: pass a ``repro.fleet.FleetManager`` and live
+instances are capped by current node capacity — creates beyond capacity are
+deferred (never dropped) while placement pressure scales the node fleet up,
+and billable node-seconds are metered for the cost model.
 """
 
 from __future__ import annotations
@@ -151,20 +156,28 @@ class _Inst:
 
 class ControlPlane:
     def __init__(self, backend: WorkerBackend, policy_factory, num_functions: int,
-                 tick_s: float = 0.5):
+                 tick_s: float = 0.5, fleet=None):
         self.backend = backend
         self.tick_s = tick_s
+        self.fleet = fleet             # Optional[repro.fleet.FleetManager]
         self.policies: list[Policy] = [policy_factory(f) for f in range(num_functions)]
         self.queues: list[deque] = [deque() for _ in range(num_functions)]
         self.instances: dict[int, _Inst] = {}
         self.by_fn: list[list[_Inst]] = [[] for _ in range(num_functions)]
         self.completed: list[ServeRequest] = []
+        self._deferred_creates: deque = deque()
         self._last_tick = -math.inf
 
     # -- helpers ------------------------------------------------------------------
 
     def _idle(self, fn):
         return [i for i in self.by_fn[fn] if i.state == "up" and i.in_flight == 0]
+
+    def _busy_free_slots(self, fn):
+        """Spare request slots on instances already serving traffic."""
+        cc = self.policies[fn].container_concurrency
+        return sum(cc - i.in_flight for i in self.by_fn[fn]
+                   if i.state == "up" and 0 < i.in_flight < cc)
 
     def _free_slot_inst(self, fn):
         cc = self.policies[fn].container_concurrency
@@ -174,6 +187,14 @@ class ControlPlane:
         return None
 
     def _create(self, fn, now):
+        if self.fleet is not None and not self.fleet.can_create(len(self.instances)):
+            # at node capacity: defer (retried each tick once the fleet has
+            # scaled up) rather than over-committing the backend; clamp to
+            # real queued demand so level-based policies re-issuing creates
+            # every tick can't stack duplicate deferrals
+            if self._deferred_creates.count(fn) < max(1, len(self.queues[fn])):
+                self._deferred_creates.append(fn)
+            return
         iid = self.backend.create_instance(fn, now)
         inst = _Inst(iid, fn)
         self.instances[iid] = inst
@@ -190,8 +211,8 @@ class ControlPlane:
         fn = req.fn
         pol = self.policies[fn]
         starting = sum(1 for i in self.by_fn[fn] if i.state == "starting")
-        dec = pol.on_arrival(now, len(self._idle(fn)), 0, starting,
-                             len(self.queues[fn]))
+        dec = pol.on_arrival(now, len(self._idle(fn)), self._busy_free_slots(fn),
+                             starting, len(self.queues[fn]))
         for _ in range(dec.create):
             self._create(fn, now)
         inst = self._free_slot_inst(fn)
@@ -203,6 +224,13 @@ class ControlPlane:
             self.queues[fn].append(req)
 
     def tick(self, now: float):
+        # 0. node fleet: advance provisioning, reconcile capacity, then retry
+        #    creates that were deferred at the old capacity
+        if self.fleet is not None:
+            self.fleet.tick(now, len(self.instances))
+            deferred, self._deferred_creates = self._deferred_creates, deque()
+            for fn in deferred:
+                self._create(fn, now)
         # 1. newly ready instances
         for iid in self.backend.poll_ready(now):
             inst = self.instances.get(iid)
@@ -252,10 +280,14 @@ class ControlPlane:
         total_mem = sum(self.backend.memory_bytes(i) for i in self.instances)
         busy_mem = sum(self.backend.memory_bytes(iid)
                        for iid, inst in self.instances.items() if inst.in_flight > 0)
-        return {
+        snap = {
             "instances": len(self.instances),
             "starting": sum(1 for i in self.instances.values() if i.state == "starting"),
             "queued": sum(len(q) for q in self.queues),
+            "deferred_creates": len(self._deferred_creates),
             "memory_bytes": total_mem,
             "busy_memory_bytes": busy_mem,
         }
+        if self.fleet is not None:
+            snap["fleet"] = self.fleet.snapshot()
+        return snap

@@ -7,6 +7,13 @@ Replays a Trace against a Cluster under a Policy (per function), modelling:
   re-queued requests, straggler nodes, and the CPU/memory accounting behind
   the paper's four metrics.
 
+Two-level autoscaling: pass a ``repro.fleet.NodeFleet`` and the node list
+itself becomes elastic — nodes are provisioned (latency ≫ cold start),
+drained before termination (in-flight work finishes first), and billed by
+the second for the cost model in ``repro.fleet.costs``.  A placement
+failure then *defers* the instance creation and feeds the fleet reconciler
+as scale-up pressure, instead of dropping the request.
+
 CPU overhead model (calibrated against the paper's Fig. 5/6 in
 EXPERIMENTS.md):  churn dominates — a create+teardown pair costs ~8 CPU-s
 (80% on the worker: sandbox setup, CNI, queue-proxy, probes; 20% master),
@@ -25,7 +32,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core.cluster import Cluster
+from repro.core.cluster import DRAINING, UP, Cluster
 from repro.core.policies import Policy
 from repro.core.trace import Trace
 
@@ -90,8 +97,13 @@ class _FnState:
         return sum(1 for i in self.instances if i.state == "up" and i.in_flight == 0)
 
     @property
-    def free_slots(self):
-        return sum(i.cc - i.in_flight for i in self.instances if i.state == "up")
+    def busy_free_slots(self):
+        """Spare slots on instances that are already serving traffic — the
+        ``busy_slots`` argument of ``Policy.on_arrival``.  Instances on
+        draining nodes take no new dispatches, so their slots don't count."""
+        return sum(i.cc - i.in_flight for i in self.instances
+                   if i.state == "up" and i.in_flight > 0
+                   and i.node.state == UP)
 
     @property
     def concurrency(self):
@@ -111,21 +123,34 @@ class SimResult:
     sample_times: np.ndarray
     measure_window_s: float
     dropped: int = 0
+    # node-fleet accounting (zero / static when no fleet is attached)
+    node_seconds: float = 0.0
+    node_samples: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
+    node_provisions: int = 0
+    node_terminations: int = 0
+    nodes_hint: int = 0
 
 
 class EventSim:
     def __init__(self, trace: Trace, cluster: Cluster, policy_factory: Callable[[int], Policy],
                  cfg: SimConfig = SimConfig(),
-                 failures: Optional[list[tuple[float, int]]] = None):
+                 failures: Optional[list[tuple[float, int]]] = None,
+                 fleet=None):
         self.trace = trace
         self.cluster = cluster
         self.cfg = cfg
+        self.fleet = fleet                 # Optional[repro.fleet.NodeFleet]
         self.rng = np.random.default_rng(cfg.seed)
         self.fns = [_FnState(policy_factory(f)) for f in range(trace.num_functions)]
         self.failures = sorted(failures or [])
         self._events: list = []
         self._counter = itertools.count()
         self._iid = itertools.count()
+        # deferred creations per function, clamped to real queued demand so
+        # level-based policies re-issuing creates every tick can't stack
+        # duplicate deferrals (and duplicate scale-up pressure)
+        self._pending_creates: dict[int, int] = {}
         self.records: list[RequestRecord] = []
         self.creations = 0
         self.teardowns = 0
@@ -135,6 +160,8 @@ class EventSim:
         self.mem_total: list[float] = []
         self.mem_busy: list[float] = []
         self.sample_t: list[float] = []
+        self.node_samples: list[int] = []
+        self.node_seconds = 0.0
         self.dropped = 0
         self._measure_from = cfg.warmup_s if cfg.warmup_s is not None \
             else trace.duration_s / 2
@@ -159,11 +186,17 @@ class EventSim:
             if t > end_t and kind in ("tick",):
                 continue
             getattr(self, f"_on_{kind}")(t, payload)
+        fl = self.fleet
         return SimResult(
             self.records, self.creations, self.teardowns, self.cpu_useful,
             self.cpu_worker, self.cpu_master,
             np.asarray(self.mem_total), np.asarray(self.mem_busy),
-            np.asarray(self.sample_t), end_t - self._measure_from, self.dropped)
+            np.asarray(self.sample_t), end_t - self._measure_from, self.dropped,
+            node_seconds=self.node_seconds,
+            node_samples=np.asarray(self.node_samples),
+            node_provisions=fl.provisions if fl else 0,
+            node_terminations=fl.terminations if fl else 0,
+            nodes_hint=sum(1 for n in self.cluster.nodes if n.billable))
 
     def _measuring(self, t) -> bool:
         return t >= self._measure_from
@@ -175,7 +208,15 @@ class EventSim:
         mem = self.trace.profile.memory_mb[fn] + self.cfg.instance_overhead_mb
         node = self.cluster.place(mem)
         if node is None:
-            self.dropped += 1          # cluster full: creation fails
+            if self.fleet is not None:
+                # placement failure -> the create is deferred and retried when
+                # capacity appears (scale-up pressure is metered per tick from
+                # the deferred level), not dropped
+                demand = max(1, len(fs.queue))
+                self._pending_creates[fn] = min(
+                    self._pending_creates.get(fn, 0) + 1, demand)
+            else:
+                self.dropped += 1          # static cluster full: creation fails
             return
         inst = _Instance(next(self._iid), fn, node, fs.policy.container_concurrency, mem)
         fs.instances.append(inst)
@@ -191,6 +232,8 @@ class EventSim:
     def _teardown(self, t: float, inst: _Instance):
         if inst.state == "dead":
             return
+        if inst.state == "starting":
+            self.fns[inst.fn].starting -= 1
         inst.state = "dead"
         fs = self.fns[inst.fn]
         if inst in fs.instances:
@@ -211,6 +254,11 @@ class EventSim:
 
     # -- dispatch ----------------------------------------------------------------------
 
+    def _free_inst(self, fs: _FnState) -> Optional[_Instance]:
+        return next((i for i in fs.instances
+                     if i.state == "up" and i.in_flight < i.cc
+                     and i.node.state == UP), None)
+
     def _dispatch(self, t: float, inst: _Instance, rec: RequestRecord):
         rec.start = t + self.cfg.warm_latency_s
         inst.in_flight += 1
@@ -222,8 +270,7 @@ class EventSim:
 
     def _drain_queue(self, t: float, fs: _FnState):
         while fs.queue:
-            inst = next((i for i in fs.instances
-                         if i.state == "up" and i.in_flight < i.cc), None)
+            inst = self._free_inst(fs)
             if inst is None:
                 return
             self._dispatch(t, inst, fs.queue.popleft())
@@ -233,12 +280,10 @@ class EventSim:
     def _on_arrival(self, t: float, rec: RequestRecord):
         fs = self.fns[rec.fn]
         decision = fs.policy.on_arrival(
-            t, fs.idle_count, fs.free_slots - fs.idle_count * 0, fs.starting,
-            len(fs.queue))
+            t, fs.idle_count, fs.busy_free_slots, fs.starting, len(fs.queue))
         for _ in range(decision.create):
             self._create_instance(t, rec.fn)
-        inst = next((i for i in fs.instances
-                     if i.state == "up" and i.in_flight < i.cc), None)
+        inst = self._free_inst(fs)
         if inst is not None:
             self._dispatch(t, inst, rec)
         else:
@@ -254,7 +299,10 @@ class EventSim:
         inst.idle_since = t
         self._drain_queue(t, fs)
         if inst.in_flight == 0:
-            self._schedule_expire(t, inst)
+            if inst.node.state == DRAINING:
+                self._teardown(t, inst)    # node is going away: don't linger
+            else:
+                self._schedule_expire(t, inst)
 
     def _on_done(self, t: float, payload):
         inst, rec = payload
@@ -269,8 +317,11 @@ class EventSim:
         fs = self.fns[inst.fn]
         self._drain_queue(t, fs)
         if inst.in_flight == 0 and inst.state == "up":
-            inst.idle_since = t
-            self._schedule_expire(t, inst)
+            if inst.node.state == DRAINING:
+                self._teardown(t, inst)    # node is going away: don't linger
+            else:
+                inst.idle_since = t
+                self._schedule_expire(t, inst)
 
     def _on_expire(self, t: float, payload):
         inst, version = payload
@@ -280,16 +331,33 @@ class EventSim:
         if self.fns[inst.fn].policy.on_idle_expired(t, idle_for):
             self._teardown(t, inst)
 
+    def _retry_pending_creates(self, t: float):
+        pend, self._pending_creates = self._pending_creates, {}
+        for fn, count in pend.items():
+            for _ in range(count):
+                self._create_instance(t, fn)
+
+    def _pending_pressure_mb(self) -> float:
+        return sum(count * (self.trace.profile.memory_mb[fn]
+                            + self.cfg.instance_overhead_mb)
+                   for fn, count in self._pending_creates.items())
+
+    def _on_node_ready(self, t: float, node):
+        if self.fleet is None or not node.alive:
+            return
+        self.fleet.node_ready(node)
+        self._retry_pending_creates(t)
+        for fs in self.fns:
+            self._drain_queue(t, fs)
+
     def _on_tick(self, t: float, _):
         total_mb = busy_mb = 0.0
         n_idle = 0
-        for fs in self.fns:
-            conc = fs.concurrency
-            dec = fs.policy.on_tick(t, conc, len(fs.instances) - fs.starting,
+        for fidx, fs in enumerate(self.fns):
+            dec = fs.policy.on_tick(t, fs.concurrency,
+                                    len(fs.instances) - fs.starting,
                                     fs.starting, fs.idle_count)
-            fn = fs.instances[0].fn if fs.instances else None
             for _ in range(dec.create):
-                fidx = self.fns.index(fs) if fn is None else fn
                 self._create_instance(t, fidx)
             if dec.retire:
                 idles = sorted((i for i in fs.instances
@@ -303,8 +371,10 @@ class EventSim:
                     busy_mb += i.memory_mb
                 elif i.state == "up":
                     n_idle += 1
+        if self.fleet is not None:
+            self._fleet_tick(t)
         if self._measuring(t):
-            alive_nodes = sum(1 for n in self.cluster.nodes if n.alive)
+            alive_nodes = self.cluster.billable_count
             self.cpu_worker += (n_idle * self.cfg.cpu_idle_per_s
                                 + alive_nodes * self.cfg.cpu_worker_floor_per_node_s
                                 ) * self.cfg.tick_s
@@ -313,11 +383,45 @@ class EventSim:
             self.mem_busy.append(busy_mb)
             self.sample_t.append(t)
 
+    def _fleet_tick(self, t: float):
+        fleet = self.fleet
+        # retry deferrals against existing capacity first; what still cannot
+        # place is this tick's scale-up pressure
+        if self._pending_creates:
+            self._retry_pending_creates(t)
+        fleet.note_pressure(self._pending_pressure_mb())
+        provisioned, draining = fleet.reconcile(t, self.cluster)
+        for node in provisioned:
+            self._push(t + fleet.node_type.provision_s, "node_ready", node)
+        if draining:
+            # idle and still-starting instances on a draining node are torn
+            # down now (busy ones finish via _on_done); demand they were
+            # covering re-registers as a deferred create so it lands on a
+            # kept node
+            drain_set = set(id(n) for n in draining)
+            for fidx, fs in enumerate(self.fns):
+                for inst in [i for i in fs.instances
+                             if id(i.node) in drain_set and i.in_flight == 0
+                             and i.state in ("up", "starting")]:
+                    was_starting = inst.state == "starting"
+                    self._teardown(t, inst)
+                    if was_starting and fs.queue:
+                        self._pending_creates[fidx] = min(
+                            self._pending_creates.get(fidx, 0) + 1,
+                            len(fs.queue))
+        fleet.maybe_reclaim(self.cluster)
+        if self._measuring(t):
+            billed = fleet.bill(self.cluster, self.cfg.tick_s)
+            self.node_seconds += billed * self.cfg.tick_s
+            self.node_samples.append(billed)
+
     def _on_fail(self, t: float, node_id: int):
         node = self.cluster.fail_node(node_id)
         for fs in self.fns:
             dead = [i for i in fs.instances if i.node is node]
             for inst in dead:
+                if inst.state == "starting":
+                    fs.starting -= 1
                 inst.state = "dead"
                 fs.instances.remove(inst)
                 if self._measuring(t):
@@ -332,8 +436,8 @@ class EventSim:
                 rec = payload[1]
                 rec.requeued += 1
                 fs = self.fns[rec.fn]
-                dec = fs.policy.on_arrival(t, fs.idle_count, 0, fs.starting,
-                                           len(fs.queue))
+                dec = fs.policy.on_arrival(t, fs.idle_count, fs.busy_free_slots,
+                                           fs.starting, len(fs.queue))
                 for _ in range(dec.create):
                     self._create_instance(t, rec.fn)
                 fs.queue.append(rec)

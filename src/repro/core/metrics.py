@@ -7,6 +7,10 @@
 * instance creation rate (events/s over the measurement window).
 * normalized CPU overhead: system CPU (worker + master) / useful function CPU,
   plus the worker/master breakdown (paper: ~80/20).
+
+Beyond-paper: when a node fleet (repro.fleet) is attached, the result also
+carries node-hours and the mean billable node count, the inputs to the
+dollar-cost model in ``repro.fleet.costs``.
 """
 
 from __future__ import annotations
@@ -32,6 +36,11 @@ class Metrics:
     queueing_p99: float
     cold_fraction: float
     completed: int
+    # node-fleet layer (NaN/0 when simulating a static cluster)
+    nodes_mean: float = math.nan
+    node_hours: float = 0.0
+    node_provisions: int = 0
+    node_terminations: int = 0
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -81,6 +90,11 @@ def compute(result: SimResult) -> Metrics:
         queueing_p99=float(np.percentile(qd, 99)) if len(qd) else math.nan,
         cold_fraction=float(colds.mean()) if len(colds) else math.nan,
         completed=len(result.records),
+        nodes_mean=float(result.node_samples.mean())
+        if len(result.node_samples) else math.nan,
+        node_hours=result.node_seconds / 3600.0,
+        node_provisions=result.node_provisions,
+        node_terminations=result.node_terminations,
     )
 
 

@@ -5,13 +5,31 @@ real control plane (same window average / utilization target / keepalive
 semantics), while workers are simulated — so experiments scale to thousands
 of functions and hundreds of nodes in seconds, jit-compiled.
 
+Two-level autoscaling: when a ``JaxFleet`` is passed, the node fleet joins
+the scan carry — a scalar node count, a provisioning pipeline (provision
+latency ≫ cold start), and a scale-down cooldown timer — mirroring
+``repro.fleet.UtilizationFleetPolicy`` + ``NodeFleet`` branchlessly.
+Instance creation is then capped by node capacity (capped creates stay
+queued and re-request, the fluid analogue of placement-failure deferral),
+and unplaceable demand feeds the node reconciler, so placement pressure
+scales the fleet up instead of dropping requests.
+
+Numeric policy and fleet parameters are *traced*, not compile-time
+constants, so ``repro.fleet.sweep`` can ``vmap`` thousands of policy
+configurations through one compiled scan (the fast path behind the Fig. 8 /
+Fig. 10 trade-off frontiers).  Only structural sizes (window buffer,
+cold-start/provision pipeline depths, policy kind) are static.
+
 Approximations vs the discrete-event oracle (validated in tests):
 * fluid service: completions per tick = in_service * dt / mean_dur_f
   (memoryless service), fractional instances allowed;
 * keepalive expiry as a flux: idle * dt / keepalive (steady-state cohort
   equivalent) instead of per-instance timers;
 * per-tick queue-delay estimator (queue / drain rate) stands in for exact
-  per-request latency; p99 is taken over arrival-weighted tick samples.
+  per-request latency; p99 is taken over arrival-weighted tick samples;
+* scale-down removes (cooldown-gated) idle node capacity instantly; the
+  oracle drains the emptiest nodes first, so the residual drain time is
+  small (parity-tested within 15%).
 
 State is (F,)-vectorized; policies are branchless jnp.  dt = 1s.
 """
@@ -40,15 +58,47 @@ class JaxPolicy:
     cc: int = 1
 
 
-@partial(jax.jit, static_argnames=("policy", "n_ticks", "dt", "cold_ticks", "wbuf"))
-def _simulate(arrivals, dur, mem, policy: JaxPolicy, n_ticks: int, dt: float,
-              cold_ticks: int, wbuf: int, cpu_consts):
+@dataclasses.dataclass(frozen=True)
+class JaxFleet:
+    """Node-fleet layer parameters (mirrors UtilizationFleetPolicy +
+    NodeFleet).  ``provision_s`` is structural (pipeline depth, static);
+    the rest are traced and sweepable."""
+    node_memory_mb: float = 192_000.0
+    provision_s: float = 60.0
+    min_nodes: float = 1.0
+    max_nodes: float = 64.0
+    util_target: float = 0.7
+    warm_frac: float = 0.25
+    cooldown_s: float = 120.0
+
+    def params(self) -> np.ndarray:
+        """The traced parameter vector (see _PFLEET indices)."""
+        return np.asarray([self.min_nodes, self.max_nodes, self.util_target,
+                           self.warm_frac, self.cooldown_s,
+                           self.node_memory_mb], np.float32)
+
+
+# traced parameter vector layouts
+_PPOL = ("keepalive_s", "target")
+_PFLEET = ("min_nodes", "max_nodes", "util_target", "warm_frac",
+           "cooldown_s", "node_memory_mb")
+
+
+def _sim_impl(arrivals, dur, mem, pol, fleet, cpu_consts, static_nodes,
+              *, kind: int, cc: int, n_ticks: int, dt: float, cold_ticks: int,
+              wbuf: int, prov_ticks: int, has_fleet: bool):
     f = dur.shape[0]
-    cc = float(policy.cc)
+    ccf = float(cc)
+    keepalive_s, target = pol[0], pol[1]
 
     def step(state, tick):
-        inst, in_service, queue, starting, win, wcur = state
+        inst, in_service, queue, starting, win, wcur, nodes, pipe, cool = state
         arr = arrivals[tick].astype(jnp.float32)
+
+        if has_fleet:
+            # provisioning completes
+            nodes = nodes + pipe[0]
+            pipe = jnp.concatenate([pipe[1:], jnp.zeros((1,))])
 
         # instances finishing cold start
         ready = starting[:, 0]
@@ -56,7 +106,7 @@ def _simulate(arrivals, dur, mem, policy: JaxPolicy, n_ticks: int, dt: float,
         starting = jnp.concatenate([starting[:, 1:], jnp.zeros((f, 1))], axis=1)
 
         # dispatch + fluid service
-        slots = inst * cc
+        slots = inst * ccf
         free = jnp.maximum(slots - in_service, 0.0)
         dispatch = jnp.minimum(queue + arr, free)
         in_service = in_service + dispatch
@@ -64,54 +114,100 @@ def _simulate(arrivals, dur, mem, policy: JaxPolicy, n_ticks: int, dt: float,
         completions = jnp.minimum(in_service * dt / dur, in_service)
         in_service = in_service - completions
 
-        busy_inst = jnp.minimum(inst, jnp.ceil(in_service / cc))
+        busy_inst = jnp.minimum(inst, jnp.ceil(in_service / ccf))
         idle = jnp.maximum(inst - busy_inst, 0.0)
         concurrency = in_service + queue
 
-        # ---- policy ----
-        win = win.at[:, wcur % wbuf].set(concurrency)
+        # ---- instance-level policy ----
+        win_ = win.at[:, wcur % wbuf].set(concurrency)
         n_valid = jnp.minimum(wcur + 1, wbuf).astype(jnp.float32)
-        avg = win.sum(axis=1) / n_valid
+        avg = win_.sum(axis=1) / n_valid
 
-        if policy.kind == 1:   # async: reconcile to desired
-            desired = jnp.ceil(avg / (policy.target * cc) - 1e-9)
-            have = inst + starting.sum(axis=1)
+        pending = starting.sum(axis=1)
+        if kind == 1:          # async: reconcile to desired
+            desired = jnp.ceil(avg / (target * ccf) - 1e-9)
+            have = inst + pending
             create = jnp.maximum(desired - have, 0.0)
             retire = jnp.minimum(jnp.maximum(have - desired, 0.0), idle)
         else:                  # sync: create per unserveable arrival, expire flux
-            unserved = jnp.maximum(arr - (free + starting.sum(axis=1)), 0.0)
+            if has_fleet:
+                # queued demand not already covered by in-flight cold starts
+                # re-requests creation — capacity-capped creates retry here
+                unserved = jnp.maximum(queue - pending * ccf, 0.0)
+            else:
+                unserved = jnp.maximum(arr - (free + pending), 0.0)
             create = unserved
-            retire = idle * dt / policy.keepalive_s
+            retire = idle * dt / keepalive_s
 
         inst = inst - retire
-        starting = starting.at[:, cold_ticks - 1].add(create)
+
+        # ---- node-fleet layer ----
+        if has_fleet:
+            min_n, max_n, util_t, warm_f, cool_s, node_mem = (
+                fleet[0], fleet[1], fleet[2], fleet[3], fleet[4], fleet[5])
+            capacity_mb = nodes * node_mem
+            committed = ((inst + starting.sum(axis=1)) * mem).sum()
+            free_mb = jnp.maximum(capacity_mb - committed, 0.0)
+            req_mb = (create * mem).sum()
+            scale = jnp.minimum(1.0, free_mb / jnp.maximum(req_mb, 1e-9))
+            create = create * scale
+            starting = starting.at[:, cold_ticks - 1].add(create)
+
+            # reconcile: used memory plus unplaceable pressure -> desired nodes
+            used = ((inst + starting.sum(axis=1)) * mem).sum()
+            pressure = jnp.maximum(req_mb * (1.0 - scale), 0.0)
+            needed = jnp.ceil((used + pressure) / (util_t * node_mem) - 1e-9)
+            warm = jnp.ceil(warm_f * jnp.maximum(needed, 1.0) - 1e-9)
+            desired_n = jnp.clip(needed + warm, min_n, max_n)
+            have_n = nodes + pipe.sum()
+            up = jnp.maximum(desired_n - have_n, 0.0)
+            pipe = pipe.at[prov_ticks - 1].add(up)
+            down_want = jnp.maximum(have_n - desired_n, 0.0)
+            max_down = jnp.maximum(nodes - jnp.ceil(used / node_mem), 0.0)
+            down = jnp.where(cool <= 0.0, jnp.minimum(down_want, max_down), 0.0)
+            nodes = nodes - down
+            cool = jnp.where(down > 0.0, jnp.ceil(cool_s / dt),
+                             jnp.maximum(cool - 1.0, 0.0))
+            nodes_billed = nodes + pipe.sum()
+        else:
+            starting = starting.at[:, cold_ticks - 1].add(create)
+            nodes_billed = jnp.asarray(static_nodes, jnp.float32)
 
         # queue-delay estimator for THIS tick's arrivals: drain with the
         # capacity that will exist once in-flight creations finish, plus the
         # residual cold-start wait if capacity is still materializing.
         pending = starting.sum(axis=1)
-        future_slots = (inst + pending) * cc
+        future_slots = (inst + pending) * ccf
         drain = jnp.maximum(future_slots / dur, 1e-6)
         cold_wait = jnp.where(future_slots < 0.5, 2.0 * cold_ticks * dt,
                               jnp.where((queue > 0) & (pending > 0),
                                         0.5 * cold_ticks * dt, 0.0))
         delay = queue / drain + cold_wait
 
-        (c_cw, c_cm, c_tw, c_tm, c_rq, c_idle, c_wfloor, c_mfloor) = cpu_consts
+        (c_cw, c_cm, c_tw, c_tm, c_rq, c_idle, c_wfloor_node, c_mfloor) = cpu_consts
         cpu_worker = create.sum() * c_cw + retire.sum() * c_tw \
-            + idle.sum() * c_idle * dt + c_wfloor * dt
+            + idle.sum() * c_idle * dt + c_wfloor_node * nodes_billed * dt
         cpu_master = create.sum() * c_cm + retire.sum() * c_tm \
             + dispatch.sum() * c_rq + c_mfloor * dt
         useful = (completions * dur).sum()
 
         ys = (delay, arr, inst.sum(), (inst * mem).sum(), (busy_inst * mem).sum(),
-              create.sum(), cpu_worker, cpu_master, useful)
-        return (inst, in_service, queue, starting, win, wcur + 1), ys
+              create.sum(), cpu_worker, cpu_master, useful, nodes_billed,
+              completions.sum())
+        return (inst, in_service, queue, starting, win_, wcur + 1,
+                nodes, pipe, cool), ys
 
+    init_nodes = fleet[0] if has_fleet else jnp.asarray(static_nodes, jnp.float32)
     init = (jnp.zeros(f), jnp.zeros(f), jnp.zeros(f),
-            jnp.zeros((f, cold_ticks)), jnp.zeros((f, wbuf)), jnp.asarray(0))
+            jnp.zeros((f, cold_ticks)), jnp.zeros((f, wbuf)), jnp.asarray(0),
+            init_nodes * jnp.ones(()), jnp.zeros(prov_ticks), jnp.zeros(()))
     _, ys = jax.lax.scan(step, init, jnp.arange(n_ticks))
     return ys
+
+
+_simulate = partial(jax.jit, static_argnames=(
+    "kind", "cc", "n_ticks", "dt", "cold_ticks", "wbuf", "prov_ticks",
+    "has_fleet"))(_sim_impl)
 
 
 @dataclasses.dataclass
@@ -125,12 +221,19 @@ class JaxSimResult:
     cpu_worker: np.ndarray
     cpu_master: np.ndarray
     useful: np.ndarray
+    nodes: np.ndarray      # (T,) billable node count (static fleet: constant)
+    completions: np.ndarray  # (T,) fluid request completions
     dt: float
     dur: np.ndarray        # (F,)
+    fleet: Optional[JaxFleet] = None
 
 
-def simulate(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
-             dt: float = 1.0, num_nodes: int = 8) -> JaxSimResult:
+_YS_NAMES = ["delay", "arrivals", "instances", "mem_total", "mem_busy",
+             "creations", "cpu_worker", "cpu_master", "useful", "nodes",
+             "completions"]
+
+
+def _prep(trace: Trace, policy: JaxPolicy, sim: SimConfig, dt: float):
     arr = jnp.asarray(rate_matrix(trace, dt))
     dur_mean = trace.profile.dur_median * np.exp(trace.profile.dur_sigma ** 2 / 2)
     dur = jnp.asarray(np.maximum(dur_mean, dt * 0.25), jnp.float32)
@@ -140,14 +243,26 @@ def simulate(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
     cpu_consts = (sim.cpu_create_worker_s, sim.cpu_create_master_s,
                   sim.cpu_teardown_worker_s, sim.cpu_teardown_master_s,
                   sim.cpu_request_s, sim.cpu_idle_per_s,
-                  sim.cpu_worker_floor_per_node_s * num_nodes,
+                  sim.cpu_worker_floor_per_node_s,
                   sim.cpu_master_floor_per_s)
-    ys = _simulate(arr, dur, mem, policy, arr.shape[0], dt, cold_ticks, wbuf,
-                   cpu_consts)
-    names = ["delay", "arrivals", "instances", "mem_total", "mem_busy",
-             "creations", "cpu_worker", "cpu_master", "useful"]
-    vals = {n: np.asarray(v) for n, v in zip(names, ys)}
-    return JaxSimResult(dt=dt, dur=np.asarray(dur), **vals)
+    return arr, dur, mem, cold_ticks, wbuf, cpu_consts
+
+
+def simulate(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
+             dt: float = 1.0, num_nodes: int = 8,
+             fleet: Optional[JaxFleet] = None) -> JaxSimResult:
+    arr, dur, mem, cold_ticks, wbuf, cpu_consts = _prep(trace, policy, sim, dt)
+    has_fleet = fleet is not None
+    prov_ticks = max(1, int(round((fleet.provision_s if has_fleet else 0.0) / dt)))
+    pol = jnp.asarray([policy.keepalive_s, policy.target], jnp.float32)
+    fl = jnp.asarray(fleet.params() if has_fleet else np.zeros(len(_PFLEET)),
+                     jnp.float32)
+    ys = _simulate(arr, dur, mem, pol, fl, cpu_consts, float(num_nodes),
+                   kind=policy.kind, cc=policy.cc, n_ticks=arr.shape[0], dt=dt,
+                   cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
+                   has_fleet=has_fleet)
+    vals = {n: np.asarray(v) for n, v in zip(_YS_NAMES, ys)}
+    return JaxSimResult(dt=dt, dur=np.asarray(dur), fleet=fleet, **vals)
 
 
 def summarize(res: JaxSimResult, warmup_frac: float = 0.5) -> dict:
@@ -170,7 +285,7 @@ def summarize(res: JaxSimResult, warmup_frac: float = 0.5) -> dict:
     useful = max(res.useful[sl].sum(), 1e-9)
     w = res.cpu_worker[sl].sum()
     m = res.cpu_master[sl].sum()
-    return {
+    out = {
         "slowdown_geomean_p99": geo,
         "normalized_memory": float(res.mem_total[sl].mean()
                                    / max(res.mem_busy[sl].mean(), 1e-9)),
@@ -178,4 +293,10 @@ def summarize(res: JaxSimResult, warmup_frac: float = 0.5) -> dict:
         "cpu_overhead": float((w + m) / useful),
         "worker_share": float(w / max(w + m, 1e-9)),
         "instances_mean": float(res.instances[sl].mean()),
+        "nodes_mean": float(res.nodes[sl].mean()),
+        "node_seconds": float(res.nodes[sl].sum() * res.dt),
+        "completed": float(res.completions[sl].sum()),
+        "cpu_worker_s": float(w),
+        "cpu_master_s": float(m),
     }
+    return out

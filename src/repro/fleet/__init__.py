@@ -1,0 +1,13 @@
+# Two-level autoscaling: the node-fleet layer under the per-function
+# instance policies — node lifecycle + fleet policies + dollar-cost
+# accounting + the control-plane capacity manager + the vmapped
+# policy-parameter sweep over the lax.scan simulator.
+from repro.fleet.costs import CostReport, PriceBook, cost_from_sim, cost_report  # noqa: F401
+from repro.fleet.manager import FleetManager  # noqa: F401
+from repro.fleet.nodes import NodeFleet, NodeType  # noqa: F401
+from repro.fleet.policies import (  # noqa: F401
+    FleetPolicy,
+    ScheduleFleetPolicy,
+    ThresholdFleetPolicy,
+    UtilizationFleetPolicy,
+)

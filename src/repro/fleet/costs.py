@@ -1,0 +1,91 @@
+"""Dollar-cost accounting: node-hours + control-plane CPU -> $/1M requests.
+
+The paper's metrics (CPU churn overhead, memory over-allocation, creation
+rate) are resource-denominated; operators optimize dollars ("Understanding
+Cost Dynamics of Serverless Computing", PAPERS.md).  This module converts a
+simulation's resource totals into a bill:
+
+* worker fleet:   billable node-seconds x the node type's $/hour,
+* control plane:  master CPU-seconds x a managed-vCPU rate (apiserver,
+  autoscaler, activator — billed per-vCPU like a managed control plane),
+* attribution:    the share of the worker bill burned by churn
+  (create/teardown CPU) and by idle keepalive memory, so the headline
+  "cost of keeping warm" is a dollar figure.
+
+Pricing defaults are in the table in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.fleet.nodes import NodeType
+
+
+@dataclasses.dataclass(frozen=True)
+class PriceBook:
+    master_vcpu_per_hour: float = 0.048   # managed control-plane vCPU $/h
+    spot_discount: float = 0.0            # 0.7 -> nodes at 30% of on-demand
+
+
+@dataclasses.dataclass
+class CostReport:
+    node_hours: float
+    node_cost: float                 # worker fleet bill
+    master_cpu_hours: float
+    master_cost: float               # control-plane bill
+    churn_cost: float                # share of node bill spent creating/tearing down
+    idle_cost: float                 # share of node bill holding idle-warm instances
+    total_cost: float
+    completed: int
+    cost_per_million: float          # $ / 1M completed requests
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def cost_report(*, node_seconds: float, cpu_worker_overhead_s: float,
+                cpu_master_overhead_s: float, idle_node_share: float,
+                completed: int, node_type: NodeType = NodeType(),
+                prices: PriceBook = PriceBook()) -> CostReport:
+    """``idle_node_share``: fraction of fleet capacity held by idle-warm
+    instances (e.g. ``(mem_total - mem_busy) / fleet capacity`` averaged
+    over the measurement window)."""
+    node_hours = node_seconds / 3600.0
+    node_rate = node_type.price_per_hour * (1.0 - prices.spot_discount)
+    node_cost = node_hours * node_rate
+
+    # churn CPU runs on the workers: price it at the per-vCPU slice of the
+    # node rate it occupies.
+    churn_cost = (cpu_worker_overhead_s / 3600.0) * (node_rate / node_type.vcpus)
+    idle_cost = node_cost * max(0.0, min(1.0, idle_node_share))
+
+    master_cpu_hours = cpu_master_overhead_s / 3600.0
+    master_cost = master_cpu_hours * prices.master_vcpu_per_hour
+
+    total = node_cost + master_cost
+    per_million = total / max(completed, 1) * 1e6
+    return CostReport(node_hours, node_cost, master_cpu_hours, master_cost,
+                      churn_cost, idle_cost, total, completed, per_million)
+
+
+def cost_from_sim(result, node_type: NodeType = NodeType(),
+                  prices: PriceBook = PriceBook()) -> CostReport:
+    """Bill an ``EventSim`` result (fleet-enabled or static-cluster)."""
+    node_seconds = result.node_seconds
+    if node_seconds <= 0.0 and len(result.sample_times):
+        # static cluster: every configured node bills for the whole window
+        node_seconds = result.measure_window_s * max(result.nodes_hint, 1)
+    cap_mb = max(node_seconds / max(result.measure_window_s, 1e-9), 1e-9) \
+        * node_type.memory_mb
+    idle_mb = 0.0
+    if len(result.mem_samples_total_mb):
+        idle_mb = float(result.mem_samples_total_mb.mean()
+                        - result.mem_samples_busy_mb.mean())
+    return cost_report(
+        node_seconds=node_seconds,
+        cpu_worker_overhead_s=result.cpu_worker_overhead_s,
+        cpu_master_overhead_s=result.cpu_master_overhead_s,
+        idle_node_share=idle_mb / cap_mb,
+        completed=len(result.records),
+        node_type=node_type, prices=prices)

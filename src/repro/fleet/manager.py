@@ -1,0 +1,99 @@
+"""FleetManager: node capacity for the REAL control plane.
+
+The control plane's workers are backend objects (simulated or real JAX
+replicas), not bin-packed ``Cluster`` nodes, so capacity is expressed as
+*instance slots*: each node hosts ``instances_per_node`` live instances.
+The manager
+
+* caps instance creation at current node capacity (``can_create``) — a
+  denied create is deferred by the control plane, not dropped,
+* scales up when creates are denied or utilization exceeds the policy's
+  target (placement pressure feeds the same policy math as the simulators),
+* scales down behind a cooldown, never below what live instances occupy,
+* meters billable node-seconds under whatever clock the control plane runs
+  (virtual or wall), for the same ``repro.fleet.costs`` bill.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.fleet.nodes import NodeType
+from repro.fleet.policies import FleetPolicy, UtilizationFleetPolicy
+
+
+class FleetManager:
+    def __init__(self, policy: FleetPolicy | None = None,
+                 node_type: NodeType = NodeType(),
+                 instances_per_node: int = 8,
+                 cooldown_s: float = 120.0,
+                 initial_nodes: int = 1):
+        self.policy = policy or UtilizationFleetPolicy()
+        self.node_type = node_type
+        self.instances_per_node = instances_per_node
+        self.cooldown_s = cooldown_s
+        self.nodes_up = max(initial_nodes, self.policy.min_nodes)
+        self._pipeline: list[float] = []      # ready times of provisioning nodes
+        self._cooldown_until = -math.inf
+        self._pressure = 0                    # denied creates since last tick
+        self._last_bill_t: float | None = None
+        self.provisions = 0
+        self.terminations = 0
+        self.node_seconds = 0.0
+
+    # -- capacity ----------------------------------------------------------------
+
+    @property
+    def nodes_total(self) -> int:
+        return self.nodes_up + len(self._pipeline)
+
+    def capacity(self) -> int:
+        return self.nodes_up * self.instances_per_node
+
+    def can_create(self, live_instances: int) -> bool:
+        if live_instances < self.capacity():
+            return True
+        self._pressure += 1
+        return False
+
+    # -- reconciliation ----------------------------------------------------------
+
+    def tick(self, now: float, live_instances: int) -> None:
+        # billing first, under the pre-tick fleet size
+        if self._last_bill_t is not None:
+            self.node_seconds += self.nodes_total * max(0.0, now - self._last_bill_t)
+        self._last_bill_t = now
+
+        ready = [t for t in self._pipeline if t <= now]
+        if ready:
+            self._pipeline = [t for t in self._pipeline if t > now]
+            self.nodes_up += len(ready)
+
+        # express instance slots in the policy's memory units so the same
+        # FleetPolicy drives simulators and the real control plane alike
+        per_inst_mb = self.node_type.memory_mb / self.instances_per_node
+        used_mb = (live_instances + self._pressure) * per_inst_mb
+        self._pressure = 0
+        desired = self.policy.desired(now, used_mb, self.node_type.memory_mb,
+                                      self.nodes_total)
+        if desired > self.nodes_total:
+            for _ in range(desired - self.nodes_total):
+                self._pipeline.append(now + self.node_type.provision_s)
+                self.provisions += 1
+        elif desired < self.nodes_total and now >= self._cooldown_until:
+            floor = math.ceil(live_instances / self.instances_per_node)
+            down = min(self.nodes_total - desired, max(self.nodes_up - floor, 0))
+            if down > 0:
+                self.nodes_up -= down
+                self.terminations += down
+                self._cooldown_until = now + self.cooldown_s
+
+    def snapshot(self) -> dict:
+        return {
+            "nodes_up": self.nodes_up,
+            "nodes_provisioning": len(self._pipeline),
+            "capacity_instances": self.capacity(),
+            "node_seconds": self.node_seconds,
+            "provisions": self.provisions,
+            "terminations": self.terminations,
+        }

@@ -1,0 +1,107 @@
+"""Node lifecycle management under a fleet policy (the EventSim-side manager).
+
+``NodeFleet`` owns the elastic half of a ``Cluster``: it provisions nodes
+(with a provision latency an order of magnitude above a container cold
+start), drains before terminating (in-flight instances finish; the node is
+reclaimed only once empty), gates scale-down behind a cooldown, and meters
+billable node-seconds for the cost model.
+
+The simulator drives it:
+
+* ``reconcile(t, cluster)``     — once per tick; returns nodes that just
+  entered ``provisioning`` (the caller schedules their ready events) and
+  nodes that just started draining (the caller tears down their idle
+  instances).
+* ``note_pressure(mb)``         — a placement just failed for ``mb``; the
+  next reconcile counts that memory as demand, so placement failures turn
+  into node scale-up rather than request drops.
+* ``node_ready(node)``          — provision latency elapsed.
+* ``maybe_reclaim(cluster)``    — terminate any empty draining node.
+* ``bill(tick_s)``              — accumulate node-seconds while measuring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.cluster import (DRAINING, PROVISIONING, UP, Cluster, Node)
+from repro.fleet.policies import FleetPolicy, UtilizationFleetPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeType:
+    """A purchasable node shape (see EXPERIMENTS.md for the pricing table)."""
+    name: str = "standard-48"
+    memory_mb: float = 192_000.0
+    vcpus: float = 48.0
+    price_per_hour: float = 1.88       # on-demand $/node-hour
+    provision_s: float = 60.0          # boot + join + image pull >> cold start
+
+
+class NodeFleet:
+    def __init__(self, policy: FleetPolicy | None = None,
+                 node_type: NodeType = NodeType(),
+                 cooldown_s: float = 120.0):
+        self.policy = policy or UtilizationFleetPolicy()
+        self.node_type = node_type
+        self.cooldown_s = cooldown_s
+        self._cooldown_until = -math.inf
+        self._pressure_mb = 0.0
+        self.provisions = 0
+        self.terminations = 0
+        self.node_seconds = 0.0
+
+    # -- demand signals ---------------------------------------------------------
+
+    def note_pressure(self, memory_mb: float) -> None:
+        self._pressure_mb += memory_mb
+
+    # -- reconciliation ---------------------------------------------------------
+
+    def reconcile(self, t: float, cluster: Cluster) -> tuple[list[Node], list[Node]]:
+        # demand = memory on the capacity we keep (up + provisioning) plus
+        # unplaceable pressure; draining nodes are exiting, so their load
+        # must not re-inflate desired capacity (it finishes or recreates on
+        # kept nodes, where it is counted)
+        have_nodes = cluster.nodes_in(UP, PROVISIONING)
+        used = sum(n.used_mb for n in have_nodes) + self._pressure_mb
+        self._pressure_mb = 0.0
+        have = len(have_nodes)
+        desired = self.policy.desired(t, used, self.node_type.memory_mb, have)
+
+        provisioned: list[Node] = []
+        draining: list[Node] = []
+        if desired > have:
+            for _ in range(desired - have):
+                node = cluster.add_node(self.node_type.memory_mb)
+                provisioned.append(node)
+            self.provisions += len(provisioned)
+        elif desired < have and t >= self._cooldown_until:
+            # drain the emptiest up-nodes first so reclamation is fast
+            up = sorted(cluster.nodes_in(UP), key=lambda n: n.used_mb)
+            for node in up[:have - desired]:
+                cluster.start_drain(node)
+                draining.append(node)
+            if draining:
+                self._cooldown_until = t + self.cooldown_s
+        return provisioned, draining
+
+    def node_ready(self, node: Node) -> None:
+        if node.state == PROVISIONING and node.alive:
+            node.state = UP
+
+    def maybe_reclaim(self, cluster: Cluster) -> list[Node]:
+        """Terminate draining nodes whose instances have all finished."""
+        done = [n for n in cluster.nodes_in(DRAINING) if n.used_mb <= 1e-9]
+        for node in done:
+            cluster.terminate(node)
+        self.terminations += len(done)
+        return done
+
+    # -- billing -----------------------------------------------------------------
+
+    def bill(self, cluster: Cluster, dt_s: float) -> int:
+        n = cluster.billable_count
+        self.node_seconds += n * dt_s
+        return n

@@ -1,0 +1,128 @@
+"""vmapped policy-parameter sweeps over the lax.scan simulator.
+
+The oracle explores a trade-off frontier (Fig. 8 / Fig. 10) by re-running a
+discrete-event simulation per configuration — minutes per point.  Here the
+whole grid runs as ONE jit-compiled ``vmap`` over the traced policy/fleet
+parameter vectors of ``repro.core.simjax``: every (keepalive x warm-pool x
+node-cap x target) combination shares a single compiled scan, so a
+hundred-point frontier costs about as much as one simulation.
+
+    rows = sweep(trace, JaxPolicy(kind=0), JaxFleet(),
+                 grid={"keepalive_s": [60, 300, 600],
+                       "warm_frac": [0.0, 0.25, 0.5],
+                       "max_nodes": [8, 16]})
+
+Each row carries the swept parameters, the standard summary metrics, and
+the dollar bill (cost_per_million) from ``repro.fleet.costs``.
+"""
+
+from __future__ import annotations
+
+import itertools
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.eventsim import SimConfig
+from repro.core.simjax import (_PFLEET, _PPOL, _YS_NAMES, JaxFleet, JaxPolicy,
+                               JaxSimResult, _prep, _sim_impl, summarize)
+from repro.core.trace import Trace
+from repro.fleet.costs import PriceBook, cost_report
+from repro.fleet.nodes import NodeType
+
+SWEEPABLE = set(_PPOL) | set(_PFLEET)
+
+
+def grid_points(grid: dict) -> list[dict]:
+    """Cartesian product of a {param: values} grid, as one dict per point."""
+    keys = list(grid)
+    return [dict(zip(keys, combo))
+            for combo in itertools.product(*(grid[k] for k in keys))]
+
+
+def sweep(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
+          grid: Optional[dict] = None, points: Optional[Sequence[dict]] = None,
+          sim: SimConfig = SimConfig(), dt: float = 1.0,
+          node_type: Optional[NodeType] = None,
+          prices: PriceBook = PriceBook(),
+          warmup_frac: float = 0.5) -> list[dict]:
+    """Run every parameter point through one vmapped scan; return one row
+    per point: {params..., metrics..., cost fields...}."""
+    pts = list(points) if points is not None else grid_points(grid or {})
+    if not pts:
+        pts = [{}]
+    unknown = {k for p in pts for k in p} - SWEEPABLE
+    if unknown:
+        raise ValueError(f"unsweepable params {sorted(unknown)}; "
+                         f"traced params are {sorted(SWEEPABLE)}")
+
+    base_pol = np.asarray([policy.keepalive_s, policy.target], np.float32)
+    base_fleet = fleet.params()
+    pols = np.tile(base_pol, (len(pts), 1))
+    fleets = np.tile(base_fleet, (len(pts), 1))
+    for i, p in enumerate(pts):
+        for k, v in p.items():
+            if k in _PPOL:
+                pols[i, _PPOL.index(k)] = v
+            else:
+                fleets[i, _PFLEET.index(k)] = v
+
+    arr, dur, mem, cold_ticks, wbuf, cpu_consts = _prep(trace, policy, sim, dt)
+    prov_ticks = max(1, int(round(fleet.provision_s / dt)))
+    impl = partial(_sim_impl, kind=policy.kind, cc=policy.cc,
+                   n_ticks=arr.shape[0], dt=dt, cold_ticks=cold_ticks,
+                   wbuf=wbuf, prov_ticks=prov_ticks, has_fleet=True)
+    batched = jax.jit(jax.vmap(
+        lambda po, fl: impl(arr, dur, mem, po, fl, cpu_consts, 0.0)))
+    ys = batched(jnp.asarray(pols), jnp.asarray(fleets))
+    ys = [np.asarray(y) for y in ys]
+
+    if node_type is None:
+        # derive a shape from the fleet's node size at the default $/GB-hour
+        base = NodeType()
+        ratio = fleet.node_memory_mb / base.memory_mb
+        node_type = NodeType(memory_mb=fleet.node_memory_mb,
+                             vcpus=base.vcpus * ratio,
+                             price_per_hour=base.price_per_hour * ratio,
+                             provision_s=fleet.provision_s)
+    nt = node_type
+    rows = []
+    for i, p in enumerate(pts):
+        vals = {n: y[i] for n, y in zip(_YS_NAMES, ys)}
+        res = JaxSimResult(dt=dt, dur=np.asarray(dur), fleet=fleet, **vals)
+        s = summarize(res, warmup_frac=warmup_frac)
+        node_mem = fleets[i, _PFLEET.index("node_memory_mb")]
+        if node_mem != nt.memory_mb:
+            # sweeping node size: scale price and vCPUs linearly ($/GB-hour
+            # held constant) so cost rows stay comparable across shapes
+            ratio = node_mem / nt.memory_mb
+            nt_i = NodeType(name=nt.name, memory_mb=float(node_mem),
+                            vcpus=nt.vcpus * ratio,
+                            price_per_hour=nt.price_per_hour * ratio,
+                            provision_s=nt.provision_s)
+        else:
+            nt_i = nt
+        t0 = int(len(res.nodes) * warmup_frac)
+        cap_mb = max(float(res.nodes[t0:].mean()) * node_mem, 1e-9)
+        idle_mb = float(res.mem_total[t0:].mean() - res.mem_busy[t0:].mean())
+        cost = cost_report(
+            node_seconds=s["node_seconds"],
+            cpu_worker_overhead_s=s["cpu_worker_s"],
+            cpu_master_overhead_s=s["cpu_master_s"],
+            idle_node_share=idle_mb / cap_mb,
+            completed=int(s["completed"]),
+            node_type=nt_i, prices=prices)
+        rows.append({**p, **s, **cost.row()})
+    return rows
+
+
+def pareto_front(rows: list[dict], x: str = "cost_per_million",
+                 y: str = "slowdown_geomean_p99") -> list[dict]:
+    """Non-dominated subset (minimize both axes), sorted by x."""
+    out = [r for r in rows
+           if not any(o[x] <= r[x] and o[y] <= r[y]
+                      and (o[x] < r[x] or o[y] < r[y]) for o in rows)]
+    return sorted(out, key=lambda r: r[x])

@@ -10,6 +10,8 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_gemm import moe_expert_ffn
 from repro.kernels.rwkv6_scan import rwkv6_scan
 
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -8,6 +8,8 @@ import pytest
 from repro.configs import SHAPES, get_config, get_smoke_config, list_archs
 from repro.models import registry
 
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs()
 
 

@@ -101,6 +101,7 @@ def test_control_plane_async_scales_up_and_down():
     assert cp.snapshot()["instances"] == 0   # scaled back to zero
 
 
+@pytest.mark.slow
 def test_control_plane_with_real_jax_replicas():
     backend = JaxWorkerBackend(CFG, max_slots=2, max_seq=48)
     cp = ControlPlane(backend, lambda f: SyncKeepalivePolicy(

@@ -5,6 +5,7 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import registry
@@ -12,6 +13,8 @@ from repro.training import checkpoint as ckpt
 from repro.training.data import DataConfig, jax_batch_at
 from repro.training.optimizer import AdamWConfig, adamw_init, clip_by_global_norm
 from repro.training.train_step import TrainConfig, make_train_step
+
+pytestmark = pytest.mark.slow
 
 CFG = get_smoke_config("gemma3-4b")
 
