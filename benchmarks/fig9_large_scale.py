@@ -1,20 +1,24 @@
 """Fig 9: the KWOK-scale experiment — 2000 functions / ~3.5M invocations on
 50 simulated worker nodes, REAL policy math, vectorized lax.scan workers.
-Paper: at this scale Kn-Sync becomes Pareto-optimal in the trade-off space."""
+Paper: at this scale Kn-Sync becomes Pareto-optimal in the trade-off space.
+
+Runs through the CHUNKED scan (`repro.core.simjax.simulate_chunked`) via the
+``fig9_production`` scenario spec: summary statistics accumulate inside the
+scan carry, so the replay never materializes (ticks x functions) histories —
+the whole six-policy sweep fits in well under a GB of host memory."""
 
 from __future__ import annotations
 
 import time
 
 from benchmarks.common import emit
-from repro.core.simjax import JaxPolicy, simulate, summarize
-from repro.core.trace import TraceConfig, synthesize
+from repro.core.simjax import JaxPolicy, simulate_chunked
+from repro.scenarios import get_scenario
 
 
 def run():
-    tc = TraceConfig(num_functions=2000, duration_s=4800,
-                     target_total_rps=729.0, seed=9)   # ~3.5M invocations
-    trace = synthesize(tc)
+    sc = get_scenario("fig9_production")
+    trace = sc.build_trace()
     rows = {}
     configs = [("sync_ka60", JaxPolicy(kind=0, keepalive_s=60)),
                ("sync_ka600", JaxPolicy(kind=0, keepalive_s=600)),
@@ -24,7 +28,8 @@ def run():
                ("async_w600_t1.0", JaxPolicy(kind=1, window_s=600, target=1.0))]
     for name, pol in configs:
         t0 = time.time()
-        s = summarize(simulate(trace, pol, num_nodes=50))
+        s = simulate_chunked(trace, pol, num_nodes=sc.num_nodes,
+                             chunk_ticks=sc.chunk_ticks)
         dt = time.time() - t0
         rows[name] = s
         emit(f"fig9_{name}", dt * 1e6,

@@ -11,6 +11,7 @@ MODULES = [
     "benchmarks.fig8_tradeoff",
     "benchmarks.fig9_large_scale",
     "benchmarks.fig10_fleet_cost",
+    "benchmarks.scenario_suite",
     "benchmarks.table1_trends",
     "benchmarks.roofline",
 ]

@@ -1,0 +1,37 @@
+"""Scenario suite: every registered workload scenario through the chunked
+lax.scan simulator at full scale (plus the discrete-event oracle where it is
+feasible, for an in-row parity readout).
+
+One emitted row per (scenario, engine): the paper's four metrics plus wall
+time — the scenario catalogue's qualitative claims (EXPERIMENTS.md) in
+benchmark form."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.scenarios import list_scenarios, parity_report, run_scenario
+
+
+def run():
+    out = {}
+    for name in list_scenarios():
+        t0 = time.time()
+        # oracle joins at full scale only where oracle_ok (runner decides)
+        rows = run_scenario(name, scale=1.0)
+        elapsed = time.time() - t0
+        gaps = parity_report(rows)
+        for r in rows:
+            tag = (f"slowdown={r['slowdown_geomean_p99']:.2f};"
+                   f"mem={r['normalized_memory']:.2f};"
+                   f"rate={r['creation_rate']:.3f};n={r['invocations']}")
+            if gaps and r["engine"] == "simjax":
+                tag += f";parity_slow={gaps['slowdown_geomean_p99']:.3f}"
+            emit(f"scenario_{name}_{r['engine']}", r["wall_s"] * 1e6, tag)
+        out[name] = {"rows": rows, "parity": gaps, "wall_s": elapsed}
+    return out
+
+
+if __name__ == "__main__":
+    run()

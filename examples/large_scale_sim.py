@@ -1,7 +1,7 @@
 """The KWOK-scale experiment (paper §3.4/§4.4): 2000 functions, ~3.5M
-invocations, 50 worker nodes — real policy math, vectorized lax.scan
-workers — plus a node-failure fault-tolerance demo on the event-driven
-oracle.
+invocations, 50 worker nodes — real policy math, CHUNKED lax.scan workers
+(summary statistics accumulate in the scan carry; no per-tick histories)
+— plus a node-failure fault-tolerance demo on the event-driven oracle.
 
     PYTHONPATH=src python examples/large_scale_sim.py
 """
@@ -12,15 +12,15 @@ from repro.core.cluster import Cluster
 from repro.core.eventsim import EventSim, SimConfig
 from repro.core.metrics import compute
 from repro.core.policies import SyncKeepalivePolicy
-from repro.core.simjax import JaxPolicy, simulate, summarize
+from repro.core.simjax import JaxPolicy, simulate_chunked
 from repro.core.trace import TraceConfig, synthesize
+from repro.scenarios import get_scenario
 
 
 def main():
-    # -- large scale: vectorized simulator -----------------------------------
-    tc = TraceConfig(num_functions=2000, duration_s=4800, target_total_rps=729,
-                     seed=9)
-    trace = synthesize(tc)
+    # -- large scale: the fig9_production scenario, chunked scan -------------
+    sc = get_scenario("fig9_production")
+    trace = sc.build_trace()
     print(f"large trace: {len(trace):,} invocations, {trace.num_functions} fns")
     print(f"{'config':24s} {'slowdown':>9s} {'norm_mem':>9s} {'cpu_ovh':>8s} {'sim_time':>9s}")
     for name, pol in [
@@ -29,7 +29,8 @@ def main():
         ("async w=600 t=1.0", JaxPolicy(kind=1, window_s=600, target=1.0)),
     ]:
         t0 = time.time()
-        s = summarize(simulate(trace, pol, num_nodes=50))
+        s = simulate_chunked(trace, pol, num_nodes=sc.num_nodes,
+                             chunk_ticks=sc.chunk_ticks)
         print(f"{name:24s} {s['slowdown_geomean_p99']:9.2f} "
               f"{s['normalized_memory']:9.2f} {s['cpu_overhead']*100:7.1f}% "
               f"{time.time()-t0:8.1f}s")

@@ -121,6 +121,25 @@ def sample_functions(full: FunctionProfile, n: int, seed: int = 0) -> FunctionPr
                            full.phase[idx])
 
 
+def concat_profiles(a: FunctionProfile, b: FunctionProfile) -> FunctionProfile:
+    """Stack two function populations; ids of *b* shift by ``len(a.rate)``."""
+    return FunctionProfile(*(np.concatenate([getattr(a, f.name),
+                                             getattr(b, f.name)])
+                             for f in dataclasses.fields(FunctionProfile)))
+
+
+def merge_traces(a: Trace, b: Trace) -> Trace:
+    """Interleave two invocation streams onto one shared cluster, re-keying
+    *b*'s function ids past *a*'s population (multi-tenant composition)."""
+    t = np.concatenate([a.t, b.t])
+    fn = np.concatenate([a.fn, b.fn + a.num_functions]).astype(np.int32)
+    dur = np.concatenate([a.dur, b.dur])
+    order = np.argsort(t, kind="stable")
+    return Trace(t[order], fn[order], dur[order],
+                 concat_profiles(a.profile, b.profile),
+                 max(a.duration_s, b.duration_s))
+
+
 def rate_matrix(trace: Trace, tick_s: float = 1.0) -> np.ndarray:
     """(T, F) arrival counts per tick — the input format of the vectorized
     simulator (repro.core.simjax)."""

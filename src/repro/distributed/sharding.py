@@ -84,20 +84,23 @@ class use_mesh:
 
 
 def _resolve(axis: Optional[str], mesh_axes: Sequence[str]):
-    """Map one logical axis name to mesh axes present on the current mesh."""
+    """Map one logical axis name to mesh axes present on the current mesh.
+
+    Tuple rules stay tuples even when only one physical axis survives
+    (e.g. ``("pod", "data")`` on a pod-less mesh resolves to ``("data",)``,
+    not ``"data"``): PartitionSpec treats the two forms as distinct entries,
+    and collapsing would make a spec's shape depend on which mesh is active.
+    String rules resolve to the bare axis name.
+    """
     if axis is None:
         return None
     rule = LOGICAL_RULES.get(axis, None)
     if rule is None:
         return None
     if isinstance(rule, str):
-        rule = (rule,)
+        return rule if rule in mesh_axes else None
     present = tuple(a for a in rule if a in mesh_axes)
-    if not present:
-        return None
-    if len(present) == 1:
-        return present[0]
-    return present
+    return present or None
 
 
 def logical_to_spec(logical: Sequence[Optional[str]], mesh: Optional[Mesh] = None) -> P:

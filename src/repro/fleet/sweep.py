@@ -1,4 +1,4 @@
-"""vmapped policy-parameter sweeps over the lax.scan simulator.
+"""vmapped policy-parameter sweeps over the chunked lax.scan simulator.
 
 The oracle explores a trade-off frontier (Fig. 8 / Fig. 10) by re-running a
 discrete-event simulation per configuration — minutes per point.  Here the
@@ -6,6 +6,11 @@ whole grid runs as ONE jit-compiled ``vmap`` over the traced policy/fleet
 parameter vectors of ``repro.core.simjax``: every (keepalive x warm-pool x
 node-cap x target) combination shares a single compiled scan, so a
 hundred-point frontier costs about as much as one simulation.
+
+The sweep rides the *chunked* scan (``simjax._chunked_summaries``): summary
+statistics accumulate inside the scan carry instead of materializing a
+(points x ticks x functions) history, so grids stay cheap even on the
+2000-function production-scale traces.
 
     rows = sweep(trace, JaxPolicy(kind=0), JaxFleet(),
                  grid={"keepalive_s": [60, 300, 600],
@@ -19,16 +24,13 @@ the dollar bill (cost_per_million) from ``repro.fleet.costs``.
 from __future__ import annotations
 
 import itertools
-from functools import partial
 from typing import Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.eventsim import SimConfig
-from repro.core.simjax import (_PFLEET, _PPOL, _YS_NAMES, JaxFleet, JaxPolicy,
-                               JaxSimResult, _prep, _sim_impl, summarize)
+from repro.core.simjax import (_PFLEET, _PPOL, JaxFleet, JaxPolicy,
+                               _chunked_summaries)
 from repro.core.trace import Trace
 from repro.fleet.costs import PriceBook, cost_report
 from repro.fleet.nodes import NodeType
@@ -48,9 +50,9 @@ def sweep(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
           sim: SimConfig = SimConfig(), dt: float = 1.0,
           node_type: Optional[NodeType] = None,
           prices: PriceBook = PriceBook(),
-          warmup_frac: float = 0.5) -> list[dict]:
-    """Run every parameter point through one vmapped scan; return one row
-    per point: {params..., metrics..., cost fields...}."""
+          warmup_frac: float = 0.5, chunk_ticks: int = 512) -> list[dict]:
+    """Run every parameter point through one vmapped chunked scan; return one
+    row per point: {params..., metrics..., cost fields...}."""
     pts = list(points) if points is not None else grid_points(grid or {})
     if not pts:
         pts = [{}]
@@ -70,15 +72,10 @@ def sweep(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
             else:
                 fleets[i, _PFLEET.index(k)] = v
 
-    arr, dur, mem, cold_ticks, wbuf, cpu_consts = _prep(trace, policy, sim, dt)
-    prov_ticks = max(1, int(round(fleet.provision_s / dt)))
-    impl = partial(_sim_impl, kind=policy.kind, cc=policy.cc,
-                   n_ticks=arr.shape[0], dt=dt, cold_ticks=cold_ticks,
-                   wbuf=wbuf, prov_ticks=prov_ticks, has_fleet=True)
-    batched = jax.jit(jax.vmap(
-        lambda po, fl: impl(arr, dur, mem, po, fl, cpu_consts, 0.0)))
-    ys = batched(jnp.asarray(pols), jnp.asarray(fleets))
-    ys = [np.asarray(y) for y in ys]
+    summaries = _chunked_summaries(
+        trace, policy, pols, fleets, sim=sim, dt=dt, num_nodes=0,
+        provision_s=fleet.provision_s, has_fleet=True,
+        chunk_ticks=chunk_ticks, warmup_frac=warmup_frac, nbins=256)
 
     if node_type is None:
         # derive a shape from the fleet's node size at the default $/GB-hour
@@ -91,9 +88,7 @@ def sweep(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
     nt = node_type
     rows = []
     for i, p in enumerate(pts):
-        vals = {n: y[i] for n, y in zip(_YS_NAMES, ys)}
-        res = JaxSimResult(dt=dt, dur=np.asarray(dur), fleet=fleet, **vals)
-        s = summarize(res, warmup_frac=warmup_frac)
+        s = summaries[i]
         node_mem = fleets[i, _PFLEET.index("node_memory_mb")]
         if node_mem != nt.memory_mb:
             # sweeping node size: scale price and vCPUs linearly ($/GB-hour
@@ -105,9 +100,8 @@ def sweep(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
                             provision_s=nt.provision_s)
         else:
             nt_i = nt
-        t0 = int(len(res.nodes) * warmup_frac)
-        cap_mb = max(float(res.nodes[t0:].mean()) * node_mem, 1e-9)
-        idle_mb = float(res.mem_total[t0:].mean() - res.mem_busy[t0:].mean())
+        cap_mb = max(s["nodes_mean"] * node_mem, 1e-9)
+        idle_mb = s["mem_total_mean"] - s["mem_busy_mean"]
         cost = cost_report(
             node_seconds=s["node_seconds"],
             cpu_worker_overhead_s=s["cpu_worker_s"],

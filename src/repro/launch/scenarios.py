@@ -1,0 +1,99 @@
+"""Scenario runner CLI — the entry point behind the scenario benchmarks.
+
+Replays registered workload scenarios through the discrete-event oracle
+and/or the chunked lax.scan simulator and emits one CSV metric row per
+(scenario, engine) pair, the format ``benchmarks/`` consumes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.scenarios --list
+  PYTHONPATH=src python -m repro.launch.scenarios --scenario diurnal
+  PYTHONPATH=src python -m repro.launch.scenarios --all --scale 0.25
+  PYTHONPATH=src python -m repro.launch.scenarios --scenario flash_crowd \\
+      --engines simjax --scale 1.0 --csv out.csv
+
+``--scale`` shrinks the workload isotropically (functions, duration, load)
+— transforms are fraction-based, so the scenario's shape is preserved; the
+CI smoke job runs the smallest scenario at a small scale through BOTH
+engines.  At full scale the oracle leg of scenarios flagged
+``oracle_ok=False`` (the 2000-function Fig. 9 replay) is skipped unless
+``--force-oracle`` is given; the chunked simulator handles them easily.
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+
+from repro.scenarios import (ENGINES, get_scenario, list_scenarios,
+                             parity_report, run_scenario)
+
+# stable CSV column order: identity, run info, then the paper metric core
+_COLUMNS = ["scenario", "engine", "scale", "num_functions", "invocations",
+            "wall_s", "slowdown_geomean_p99", "normalized_memory",
+            "creation_rate", "cpu_overhead", "worker_share", "nodes_mean",
+            "completed", "figure"]
+
+
+def _emit(rows: list[dict], out) -> None:
+    writer = csv.DictWriter(out, fieldnames=_COLUMNS, extrasaction="ignore")
+    writer.writeheader()
+    for r in rows:
+        writer.writerow({k: (f"{v:.6g}" if isinstance(v, float) else v)
+                         for k, v in r.items() if k in _COLUMNS})
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.scenarios",
+        description="Replay workload scenarios through both simulators.")
+    ap.add_argument("--scenario", action="append", default=None,
+                    help="scenario name (repeatable); see --list")
+    ap.add_argument("--all", action="store_true", help="run every scenario")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered scenarios and exit")
+    ap.add_argument("--engines", default="both",
+                    choices=["both", "eventsim", "simjax"])
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="isotropic workload shrink factor (default 1.0)")
+    ap.add_argument("--csv", default=None, help="write CSV here (default stdout)")
+    ap.add_argument("--parity", action="store_true",
+                    help="print oracle-vs-simjax relative gaps to stderr")
+    ap.add_argument("--force-oracle", action="store_true",
+                    help="run the discrete-event oracle even for scenarios "
+                         "flagged infeasible at this scale")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in list_scenarios():
+            sc = get_scenario(name)
+            print(f"{name:20s} {sc.figure:45s} {sc.description}")
+        return 0
+
+    names = list_scenarios() if args.all else (args.scenario or [])
+    if not names:
+        ap.error("pick --scenario NAME (repeatable), --all, or --list")
+    engines = ENGINES if args.engines == "both" else (args.engines,)
+
+    rows = []
+    for name in names:
+        sc_rows = run_scenario(name, engines=engines, scale=args.scale,
+                               force_oracle=args.force_oracle)
+        rows.extend(sc_rows)
+        if args.parity:
+            gaps = parity_report(sc_rows)
+            if gaps:
+                print(f"parity {name}: " +
+                      " ".join(f"{k}={v:.3f}" for k, v in gaps.items()),
+                      file=sys.stderr)
+
+    if args.csv:
+        with open(args.csv, "w", newline="") as fh:
+            _emit(rows, fh)
+    else:
+        _emit(rows, sys.stdout)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

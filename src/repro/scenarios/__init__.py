@@ -1,0 +1,24 @@
+# Declarative workload scenarios: a registry of named (trace x transforms x
+# policy x fleet) specs, replayable through both the discrete-event oracle
+# and the chunked lax.scan simulator from one spec.
+from repro.scenarios.registry import (  # noqa: F401
+    get_scenario,
+    list_scenarios,
+    register,
+)
+from repro.scenarios.runner import (  # noqa: F401
+    ENGINES,
+    PARITY_KEYS,
+    parity_report,
+    run_scenario,
+)
+from repro.scenarios.spec import PolicySpec, Scenario  # noqa: F401
+from repro.scenarios.transforms import (  # noqa: F401
+    BurstInject,
+    RateScale,
+    Splice,
+    TenantMerge,
+    TimeWarp,
+    Transform,
+    apply_transforms,
+)

@@ -1,0 +1,127 @@
+"""The scenario catalogue (EXPERIMENTS.md documents each one's knobs).
+
+Six scenarios spanning the workload families the serverless literature
+cares about: Shahrad'20's diurnal cycles and rare-but-bursty long tail,
+flash crowds, multi-tenant interference, the paper's own 2000-function /
+~3.5M-invocation KWOK-scale replay (Fig. 9), and a fleet-cost stress run
+for the two-level autoscaling layer (Fig. 10 territory).
+"""
+
+from __future__ import annotations
+
+from repro.core.simjax import JaxFleet
+from repro.core.trace import TraceConfig
+from repro.scenarios.spec import PolicySpec, Scenario
+from repro.scenarios.transforms import (BurstInject, RateScale, Splice,
+                                        TenantMerge, TimeWarp)
+
+_REGISTRY: dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    if scenario.name in _REGISTRY:
+        raise ValueError(f"duplicate scenario {scenario.name!r}")
+    _REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+
+
+def list_scenarios() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+register(Scenario(
+    name="diurnal",
+    description="Azure-like diurnal waves: a monotone time-warp concentrates "
+                "the same 400-function load into two day/night cycles, "
+                "stressing keepalive choices across load troughs.",
+    figure="extends Fig. 3/4 (slowdown + memory vs keepalive)",
+    base=TraceConfig(num_functions=400, duration_s=4800,
+                     target_total_rps=62.5, seed=21),
+    transforms=(TimeWarp(period_frac=0.5, depth=0.8),),
+    policy=PolicySpec(kind="sync", keepalive_s=600),
+    num_nodes=12,
+))
+
+register(Scenario(
+    name="flash_crowd",
+    description="Steady traffic, then the 20 hottest functions spike 6x for "
+                "8% of the run: cold-start storms and queueing on the head.",
+    figure="extends Fig. 2/5 (queueing CDF + creation rate)",
+    base=TraceConfig(num_functions=400, duration_s=4800,
+                     target_total_rps=62.5, seed=22),
+    transforms=(BurstInject(at_frac=0.6, width_frac=0.08, factor=6.0,
+                            top_k=20),),
+    policy=PolicySpec(kind="async", window_s=60, target=0.7),
+    num_nodes=16,
+))
+
+register(Scenario(
+    name="cold_tail",
+    description="Cold-start-heavy long tail: 600 rarely-invoked functions "
+                "(sub-1/15min rates) under a short keepalive — churn "
+                "overhead dominates useful work.",
+    figure="extends Fig. 5/6 (creation rate + CPU overhead)",
+    # burst_amp=0: pure Poisson gaps — the sparse-function regime where the
+    # keepalive-expiry renewal model is exact (clustered gaps would need a
+    # burstiness correction on both engines' warm-hit probability)
+    base=TraceConfig(num_functions=600, duration_s=4800,
+                     target_total_rps=8.0, max_rate=0.05, burst_amp=0.0,
+                     seed=23),
+    transforms=(RateScale(0.8),),
+    policy=PolicySpec(kind="sync", keepalive_s=60),
+    num_nodes=8,
+))
+
+register(Scenario(
+    name="multi_tenant",
+    description="Two tenants share one cluster: a second population at half "
+                "the base load joins mid-stack, and a regime-change splice "
+                "breaks window-average assumptions halfway through.",
+    figure="extends Fig. 7 (interference / container concurrency)",
+    base=TraceConfig(num_functions=200, duration_s=3600,
+                     target_total_rps=30.0, seed=24),
+    transforms=(Splice(at_frac=0.5), TenantMerge(num_functions_frac=1.0,
+                                                 rps_frac=0.5)),
+    policy=PolicySpec(kind="async", window_s=120, target=0.7),
+    num_nodes=12,
+))
+
+register(Scenario(
+    name="fig9_production",
+    description="The paper's KWOK-scale hybrid replay: 2000 functions / "
+                "~3.5M invocations; only the chunked lax.scan path is "
+                "feasible at full scale (oracle runs at reduced scale).",
+    figure="reproduces Fig. 9 (large-scale trade-off)",
+    base=TraceConfig(num_functions=2000, duration_s=4800,
+                     target_total_rps=729.0, seed=9),
+    policy=PolicySpec(kind="sync", keepalive_s=600),
+    num_nodes=50,
+    oracle_ok=False,
+))
+
+register(Scenario(
+    name="fleet_cost_stress",
+    description="Two-level autoscaling under load swings: rate-scaled "
+                "Poisson traffic with an injected flash crowd drives node "
+                "provisioning churn against a cooldown-gated fleet — the "
+                "same sync-keepalive policy family the Fig. 10 cost "
+                "frontier sweeps.",
+    figure="extends Fig. 10 (dollar-cost frontier)",
+    base=TraceConfig(num_functions=300, duration_s=3600,
+                     target_total_rps=45.0, burst_amp=0.0, seed=26),
+    transforms=(RateScale(1.2),
+                BurstInject(at_frac=0.55, width_frac=0.08, factor=4.0,
+                            top_k=15)),
+    policy=PolicySpec(kind="sync", keepalive_s=600),
+    fleet=JaxFleet(node_memory_mb=32_768.0, provision_s=60.0, min_nodes=1,
+                   max_nodes=48, util_target=0.7, warm_frac=0.25,
+                   cooldown_s=120.0),
+))

@@ -1,0 +1,117 @@
+"""Replay a Scenario through both simulation engines and emit metric rows.
+
+One ``Scenario`` spec, two engines:
+
+* ``eventsim`` — the discrete-event oracle (exact per-request latency,
+  per-instance keepalive timers, real placement);
+* ``simjax``  — the chunked ``lax.scan`` fluid simulator (production scale,
+  no per-tick histories).
+
+Each engine produces one metric row with a shared key core (slowdown /
+normalized memory / creation rate / CPU overhead / node accounting), so a
+scenario run doubles as an oracle-vs-fluid parity measurement — the hybrid
+methodology of the paper's Fig. 9, generalized to a scenario family.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence, Union
+
+from repro.core.cluster import Cluster
+from repro.core.eventsim import EventSim, SimConfig
+from repro.core.metrics import compute
+from repro.core.simjax import JaxFleet, simulate_chunked
+from repro.fleet.nodes import NodeFleet, NodeType
+from repro.fleet.policies import UtilizationFleetPolicy
+from repro.scenarios.registry import get_scenario
+from repro.scenarios.spec import Scenario
+
+ENGINES = ("eventsim", "simjax")
+
+# the metric core both engines report; parity is judged on the first three
+PARITY_KEYS = ("slowdown_geomean_p99", "normalized_memory", "creation_rate")
+
+
+def _oracle_fleet(jf: JaxFleet) -> NodeFleet:
+    """Lower the traced fleet parameters to the oracle's NodeFleet (the same
+    mapping the two-level parity tests pin)."""
+    base = NodeType()
+    ratio = jf.node_memory_mb / base.memory_mb
+    nt = NodeType(memory_mb=jf.node_memory_mb, provision_s=jf.provision_s,
+                  vcpus=base.vcpus * ratio,
+                  price_per_hour=base.price_per_hour * ratio)
+    policy = UtilizationFleetPolicy(min_nodes=int(jf.min_nodes),
+                                    max_nodes=int(jf.max_nodes),
+                                    util_target=jf.util_target,
+                                    warm_frac=jf.warm_frac)
+    return NodeFleet(policy, node_type=nt, cooldown_s=jf.cooldown_s)
+
+
+def _run_eventsim(sc: Scenario, trace, sim: SimConfig) -> dict:
+    if sc.fleet is not None:
+        cluster = Cluster(max(1, int(sc.fleet.min_nodes)),
+                          node_memory_mb=sc.fleet.node_memory_mb)
+        fleet = _oracle_fleet(sc.fleet)
+    else:
+        cluster = Cluster(sc.num_nodes)
+        fleet = None
+    res = EventSim(trace, cluster, sc.policy.factory(), sim, fleet=fleet).run()
+    return compute(res).row()
+
+
+def _run_simjax(sc: Scenario, trace, sim: SimConfig) -> dict:
+    # dt = the oracle's reconcile tick: both engines share one control period
+    return simulate_chunked(trace, sc.policy.to_jax(), sim=sim,
+                            dt=sim.tick_s, num_nodes=sc.num_nodes,
+                            fleet=sc.fleet, chunk_ticks=sc.chunk_ticks)
+
+
+def run_scenario(scenario: Union[str, Scenario],
+                 engines: Sequence[str] = ENGINES, scale: float = 1.0,
+                 sim: Optional[SimConfig] = None,
+                 force_oracle: bool = False) -> list[dict]:
+    """Build the scenario trace once and replay it through each engine.
+
+    The oracle leg is skipped for scenarios flagged ``oracle_ok=False``
+    unless the run is shrunk (scale <= 0.25) or ``force_oracle`` is set —
+    replaying ~3.5M discrete events is exactly what the chunked scan exists
+    to avoid.
+    """
+    sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    # both engines run the same control-loop period (see PolicySpec.tick_s)
+    sim = sim or SimConfig(tick_s=sc.policy.tick_s)
+    runnable = []
+    for engine in engines:
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; pick from {ENGINES}")
+        if engine == "eventsim" and not (sc.oracle_ok or scale <= 0.25
+                                         or force_oracle):
+            continue
+        runnable.append(engine)
+    if not runnable:       # don't synthesize a multi-million-event trace
+        return []          # just to run nothing
+    trace = sc.build_trace(scale)
+    meta = {"scenario": sc.name, "scale": scale, "figure": sc.figure,
+            "num_functions": trace.num_functions, "invocations": len(trace)}
+    rows = []
+    for engine in runnable:
+        t0 = time.time()
+        metrics = (_run_eventsim if engine == "eventsim" else _run_simjax)(
+            sc, trace, sim)
+        rows.append({**meta, "engine": engine,
+                     "wall_s": round(time.time() - t0, 3), **metrics})
+    return rows
+
+
+def parity_report(rows: Sequence[dict]) -> dict:
+    """Relative oracle-vs-fluid gap per parity metric; {} unless both
+    engines are present."""
+    by = {r["engine"]: r for r in rows}
+    if not {"eventsim", "simjax"} <= set(by):
+        return {}
+    out = {}
+    for k in PARITY_KEYS:
+        a, b = by["eventsim"][k], by["simjax"][k]
+        out[k] = abs(a - b) / max(abs(a), 1e-9)
+    return out

@@ -1,0 +1,89 @@
+"""Declarative scenario specs: one object drives both simulation engines.
+
+A ``Scenario`` names a base workload (``TraceConfig``), a stack of trace
+transforms, an autoscaling policy, and the cluster/fleet shape.  The runner
+(``repro.scenarios.runner``) replays it through the discrete-event oracle
+(``repro.core.eventsim``) AND the chunked ``lax.scan`` simulator
+(``repro.core.simjax``) from this one spec, so every scenario doubles as a
+fidelity check of the fluid model — the paper's hybrid methodology.
+
+``PolicySpec`` is the bridge: a plain-data policy description that lowers to
+the oracle's stateful per-function ``Policy`` objects on one side and to the
+branchless traced ``JaxPolicy`` on the other.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+from repro.core.policies import (AsyncConcurrencyPolicy, Policy,
+                                 SyncKeepalivePolicy)
+from repro.core.simjax import JaxFleet, JaxPolicy
+from repro.core.trace import Trace, TraceConfig, synthesize
+from repro.scenarios.transforms import Transform, apply_transforms
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """Engine-neutral autoscaling-policy description.
+
+    ``tick_s`` is the control-loop period used on BOTH sides (the oracle's
+    reconcile tick and the fluid dt): comparing engines at different loop
+    periods conflates policy behavior with sampling granularity — a coarser
+    oracle tick accumulates larger queue spikes and inflates churn.
+    """
+    kind: str = "sync"                 # "sync" (keepalive) | "async" (window)
+    keepalive_s: float = 600.0
+    window_s: float = 60.0
+    target: float = 0.7
+    container_concurrency: int = 1
+    tick_s: float = 1.0
+
+    def to_jax(self) -> JaxPolicy:
+        return JaxPolicy(kind=0 if self.kind == "sync" else 1,
+                         keepalive_s=self.keepalive_s, window_s=self.window_s,
+                         target=self.target, cc=self.container_concurrency)
+
+    def factory(self) -> Callable[[int], Policy]:
+        if self.kind == "sync":
+            return lambda f: SyncKeepalivePolicy(
+                keepalive_s=self.keepalive_s,
+                container_concurrency=self.container_concurrency)
+        if self.kind == "async":
+            return lambda f: AsyncConcurrencyPolicy(
+                window_s=self.window_s, target=self.target,
+                container_concurrency=self.container_concurrency,
+                tick_s=self.tick_s)
+        raise ValueError(f"unknown policy kind {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One registered workload scenario (see ``repro.scenarios.registry``)."""
+    name: str
+    description: str
+    figure: str                        # which paper figure this extends
+    base: TraceConfig
+    transforms: Tuple[Transform, ...] = ()
+    policy: PolicySpec = PolicySpec()
+    num_nodes: int = 8                 # static cluster size (no fleet)
+    fleet: Optional[JaxFleet] = None   # two-level autoscaling when set
+    oracle_ok: bool = True             # discrete-event replay feasible at 1.0x
+    chunk_ticks: int = 512             # simjax time-chunk length
+
+    def scaled_config(self, scale: float = 1.0) -> TraceConfig:
+        """Shrink the workload isotropically (functions, duration, load) for
+        smoke runs; transforms are fraction-based, so they apply unchanged."""
+        if scale == 1.0:
+            return self.base
+        return dataclasses.replace(
+            self.base,
+            num_functions=max(8, int(round(self.base.num_functions * scale))),
+            duration_s=max(240.0, self.base.duration_s * scale),
+            target_total_rps=max(0.5, self.base.target_total_rps * scale))
+
+    def build_trace(self, scale: float = 1.0) -> Trace:
+        cfg = self.scaled_config(scale)
+        return apply_transforms(synthesize(cfg), cfg, self.transforms,
+                                seed=cfg.seed)

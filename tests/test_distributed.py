@@ -19,11 +19,15 @@ def test_logical_to_spec_drops_unknown_axes():
     assert spec == P(("data",), None, "model")
 
 
-def test_fsdp_specs_sharding_first_free_dim():
+def _abstract_mesh(shape=(16, 16), names=("data", "model")):
     # spec computation works on an AbstractMesh: the production 16x16 shape
     # without needing 256 devices
     from jax.sharding import AbstractMesh
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    return AbstractMesh(tuple(zip(names, shape)))
+
+
+def test_fsdp_specs_sharding_first_free_dim():
+    mesh = _abstract_mesh()
     with sh.use_mesh(mesh):
         shapes = {"w": jax.ShapeDtypeStruct((2048, 16, 128), jnp.float32),
                   "norm": jax.ShapeDtypeStruct((2048,), jnp.float32)}
@@ -31,6 +35,55 @@ def test_fsdp_specs_sharding_first_free_dim():
         out = sh.fsdp_specs(specs, shapes)
     assert out["w"][0] == "fsdp"          # embed maps to nothing -> free
     assert out["norm"] == (None,)          # 1-D params untouched
+
+
+def test_resolve_preserves_tuple_rules_and_collapses_strings():
+    # string rule -> bare axis; tuple rule -> tuple, even with one survivor
+    assert sh._resolve("heads", ("data", "model")) == "model"
+    assert sh._resolve("batch", ("data", "model")) == ("data",)
+    assert sh._resolve("batch", ("pod", "data", "model")) == ("pod", "data")
+    assert sh._resolve("batch", ("model",)) is None
+    assert sh._resolve("unknown_axis", ("data", "model")) is None
+    assert sh._resolve(None, ("data", "model")) is None
+
+
+def test_sanitize_spec_non_divisible_dims():
+    mesh = _abstract_mesh((4, 2), ("data", "model"))
+    # dim 6 % 4 != 0 -> dropped; dim 8 % 2 == 0 -> kept
+    spec = sh.sanitize_spec(P("data", "model"), (6, 8), mesh)
+    assert spec == P(None, "model")
+    # tuple entry: product of axis sizes (4*2=8) must divide the dim
+    assert sh.sanitize_spec(P(("data", "model")), (16,), mesh) \
+        == P(("data", "model"))
+    assert sh.sanitize_spec(P(("data", "model")), (12,), mesh) == P(None)
+    # single-survivor tuple entries (post-_resolve form) survive sanitize
+    assert sh.sanitize_spec(P(("data",), None), (8, 3), mesh) == P(("data",), None)
+
+
+def test_sanitize_spec_rank_mismatch():
+    mesh = _abstract_mesh((4, 2), ("data", "model"))
+    # spec longer than shape: trailing entries pass through untouched
+    assert sh.sanitize_spec(P("data", "model"), (8,), mesh) == P("data", "model")
+    # spec shorter than shape: missing dims stay unsharded
+    assert sh.sanitize_spec(P("data"), (8, 6, 4), mesh) == P("data")
+
+
+def test_fsdp_specs_edge_cases():
+    mesh = _abstract_mesh((16, 16), ("data", "model"))
+    with sh.use_mesh(mesh):
+        shapes = {
+            # first dim non-divisible by fsdp=16 -> second free dim taken
+            "w_odd": jax.ShapeDtypeStruct((1000, 4096), jnp.float32),
+            # all dims occupied or too small -> untouched
+            "w_small": jax.ShapeDtypeStruct((256, 256), jnp.float32),
+            # spec is None -> treated as fully replicated, still sharded
+            "w_none": jax.ShapeDtypeStruct((2048, 2048), jnp.float32),
+        }
+        specs = {"w_odd": (None, None), "w_small": (None, None), "w_none": None}
+        out = sh.fsdp_specs(specs, shapes)
+    assert out["w_odd"] == (None, "fsdp")
+    assert out["w_small"] == (None, None)
+    assert out["w_none"] == ("fsdp", None)
 
 
 def test_div_axis_guards_divisibility():

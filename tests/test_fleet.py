@@ -103,6 +103,7 @@ def test_fleet_scales_with_load_and_bills(trace):
                         res.node_samples.sum() * SimConfig().tick_s)
 
 
+@pytest.mark.slow
 def test_placement_failure_triggers_scale_up_not_drop(trace):
     # tiny max so the fleet saturates: requests must queue, never drop
     small = _fleet(max_nodes=2)
@@ -132,6 +133,7 @@ def test_drain_before_terminate():
     assert fleet.terminations == 1
 
 
+@pytest.mark.slow
 def test_scale_down_is_cooldown_gated(trace):
     fast = _run(trace, lambda f: AsyncConcurrencyPolicy(window_s=30, target=0.7),
                 _fleet(cooldown_s=10.0))

@@ -35,6 +35,7 @@ def test_simjax_keepalive_monotone(trace):
     assert rate == sorted(rate, reverse=True)
 
 
+@pytest.mark.slow
 def test_simjax_window_monotone(trace):
     rows = [summarize(simulate(trace, JaxPolicy(kind=1, window_s=w, target=0.7)))
             for w in (30, 120, 600)]
@@ -52,6 +53,7 @@ def test_simjax_target_direction(trace):
     assert lo["instances_mean"] >= hi["instances_mean"]
 
 
+@pytest.mark.slow
 def test_simjax_tracks_oracle_trends(trace):
     """Same trace, same policies: the fluid simulator must order configs the
     same way as the discrete-event oracle (Spearman-style check)."""

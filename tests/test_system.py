@@ -63,6 +63,7 @@ def test_finding_worker_side_dominates(sweep):
     assert m.worker_share > 0.6
 
 
+@pytest.mark.slow
 def test_sync_bimodal_vs_async_tail(trace):
     """Paper Fig 2: sync queueing is bimodal (0 or ~cold start); async has a
     smoother tail."""
