@@ -1,33 +1,61 @@
 """Fig 8: the memory-performance trade-off space (slowdown vs normalized
 memory for every swept config) + Pareto set.  Paper (small scale): async
-target=1.0 is the most cost-efficient."""
+target=1.0 is the most cost-efficient.
+
+Rewired through the frontier engine: the sync keepalive ladder and the
+async (window x target) grid run as vmapped chunked scans via
+``repro.opt.evaluate_scenario`` (one compiled scan per policy family /
+window), instead of one discrete-event replay per configuration — which is
+what lets the quick CI tier afford this figure at all.  ``window_s`` is a
+structural knob (it sizes the scan's window buffer), so each window gets
+its own evaluation; everything else is a traced batch axis.
+"""
 
 from __future__ import annotations
 
-from benchmarks.common import KEEPALIVES, TARGETS, WINDOWS, emit, sweep_async, sweep_sync
+import time
+
+from benchmarks.common import KEEPALIVES, TARGETS, TRACE_CFG, WINDOWS, emit
+from repro.opt import evaluate_scenario, pareto_front
+from repro.scenarios import PolicySpec, Scenario
+
+NUM_NODES = 8
 
 
-def pareto(points):
-    """points: list of (mem, slow, name); returns non-dominated subset."""
-    out = []
-    for m, s, n in points:
-        if not any(m2 <= m and s2 <= s and (m2 < m or s2 < s)
-                   for m2, s2, _ in points):
-            out.append((m, s, n))
-    return sorted(out)
+def _scenario(policy: PolicySpec) -> Scenario:
+    return Scenario(name="fig8", description="benchmark trace",
+                    figure="Fig. 8", base=TRACE_CFG, policy=policy,
+                    num_nodes=NUM_NODES)
 
 
-def run():
-    sy, asy = sweep_sync(), sweep_async()
-    pts = [(sy[ka].normalized_memory, sy[ka].slowdown_geomean_p99, f"sync_ka{ka}")
-           for ka in KEEPALIVES]
-    pts += [(asy[(w, t)].normalized_memory, asy[(w, t)].slowdown_geomean_p99,
-             f"async_w{w}_t{t}") for w in WINDOWS for t in TARGETS]
-    front = pareto(pts)
-    for m, s, n in pts:
-        tag = "PARETO" if (m, s, n) in front else "dom"
-        emit(f"fig8_{n}", 0.0, f"mem={m:.2f};slowdown={s:.2f};{tag}")
-    return pts, front
+def sweep_rows(scale: float = 1.0) -> list[dict]:
+    rows = []
+    sc = _scenario(PolicySpec(kind="sync"))
+    for r in evaluate_scenario(sc, [{"keepalive_s": float(ka)}
+                                    for ka in KEEPALIVES], scale=scale):
+        rows.append({**r, "name": f"sync_ka{int(r['keepalive_s'])}"})
+    for w in WINDOWS:
+        sc = _scenario(PolicySpec(kind="async", window_s=float(w)))
+        for r in evaluate_scenario(sc, [{"target": float(t)}
+                                        for t in TARGETS], scale=scale):
+            rows.append({**r, "name": f"async_w{w}_t{r['target']}"})
+    return rows
+
+
+def run(scale: float = 1.0):
+    t0 = time.time()
+    rows = sweep_rows(scale)
+    front = pareto_front(rows, x="normalized_memory",
+                         y="slowdown_geomean_p99")
+    front_names = {r["name"] for r in front}
+    for r in rows:
+        tag = "PARETO" if r["name"] in front_names else "dom"
+        emit(f"fig8_{r['name']}", 0.0,
+             f"mem={r['normalized_memory']:.2f};"
+             f"slowdown={r['slowdown_geomean_p99']:.2f};"
+             f"cost={r['cost_per_million']:.2f};{tag}")
+    wall = time.time() - t0
+    return rows, front, wall
 
 
 if __name__ == "__main__":

@@ -1,5 +1,35 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver.
+
+Default: every figure benchmark, printing ``name,us_per_call,derived`` CSV.
+
+``--quick`` is the CI regression tier: fig8 through the frontier engine at
+0.1x plus the scenario suite at 0.1x (oracle legs included at that scale),
+collected into a flat {metric: value} dict where EVERY metric is
+lower-is-better (wall seconds, p99 slowdown, $/1M requests, memory ratio).
+``--json`` writes it (BENCH_ci.json in CI); ``--baseline`` compares against
+a checked-in reference and exits non-zero when any metric regresses more
+than ``--tolerance`` (default 25%) — the bench-smoke CI gate.
+
+  PYTHONPATH=src:. python benchmarks/run.py                      # full CSV
+  PYTHONPATH=src:. python benchmarks/run.py --quick \\
+      --json BENCH_ci.json --baseline benchmarks/baseline.json
+
+``benchmarks/baseline.json`` provenance: deterministic metrics (p99 / cost
+/ memory — fixed seeds) are checked in at their measured values; wall-clock
+entries carry 3x headroom over the authoring machine, so with the 25% gate
+tolerance a CI runner may be ~3.75x slower before the gate trips while a
+lost-vmap-class regression (10x+) still fails.  To refresh: run --quick
+--json, copy metric values verbatim, multiply *_wall_s by 3.
+"""
+
+from __future__ import annotations
+
+import argparse
 import importlib
+import json
+import math
+import sys
+import time
 
 MODULES = [
     "benchmarks.fig2_queueing_cdf",
@@ -16,13 +46,94 @@ MODULES = [
     "benchmarks.roofline",
 ]
 
+QUICK_SCALE = 0.1
 
-def main() -> None:
+
+def run_quick() -> dict:
+    """The regression-gate metric set: small, deterministic (fixed seeds)
+    except the wall clocks, every value lower-is-better."""
+    from benchmarks import fig8_tradeoff, scenario_suite
+    metrics: dict[str, float] = {}
+
+    rows, front, wall = fig8_tradeoff.run(scale=QUICK_SCALE)
+    metrics["fig8_wall_s"] = round(wall, 3)
+    metrics["fig8_best_p99"] = min(r["slowdown_geomean_p99"] for r in rows)
+    metrics["fig8_best_mem"] = min(r["normalized_memory"] for r in rows)
+    metrics["fig8_best_cost_per_million"] = min(r["cost_per_million"]
+                                                for r in rows)
+
+    t0 = time.time()
+    suite = scenario_suite.run(scale=QUICK_SCALE)
+    metrics["scenario_suite_wall_s"] = round(time.time() - t0, 3)
+    for name, res in suite.items():
+        for r in res["rows"]:
+            if r["engine"] == "simjax":
+                metrics[f"{name}_p99"] = r["slowdown_geomean_p99"]
+                metrics[f"{name}_simjax_wall_s"] = r["wall_s"]
+    return metrics
+
+
+def compare(measured: dict, baseline: dict, tolerance: float) -> list[str]:
+    """Every baseline metric must satisfy measured <= ref * (1+tolerance);
+    a baseline key missing from the measurement is itself a failure (the
+    gate must not silently narrow)."""
+    failures = []
+    for key, ref in baseline.items():
+        got = measured.get(key)
+        if got is None:
+            failures.append(f"{key}: missing from measurement")
+        elif not math.isfinite(got):
+            # NaN compares False against everything — a NaN'd metric must
+            # fail the gate, not slip through the > comparison
+            failures.append(f"{key}: non-finite measurement {got}")
+        elif got > ref * (1.0 + tolerance):
+            failures.append(f"{key}: {got:.4g} > {ref:.4g} "
+                            f"(+{(got / ref - 1) * 100:.0f}%, "
+                            f"tolerance {tolerance * 100:.0f}%)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="figure benchmarks / CI gate")
+    ap.add_argument("--quick", action="store_true",
+                    help="regression tier: fig8 via the frontier engine at "
+                         f"{QUICK_SCALE}x + scenario suite at {QUICK_SCALE}x")
+    ap.add_argument("--json", default=None,
+                    help="write the quick-tier metrics here")
+    ap.add_argument("--baseline", default=None,
+                    help="compare against this reference; exit 1 on regression")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed relative regression (default 0.25)")
+    args = ap.parse_args(argv)
+
+    if not args.quick:
+        if args.baseline or args.json:
+            # the gate must fail closed: a miswired invocation that forgot
+            # --quick would otherwise "pass" without ever comparing
+            ap.error("--json/--baseline require --quick")
+        print("name,us_per_call,derived")
+        for mod_name in MODULES:
+            mod = importlib.import_module(mod_name)
+            mod.run()
+        return 0
+
     print("name,us_per_call,derived")
-    for mod_name in MODULES:
-        mod = importlib.import_module(mod_name)
-        mod.run()
+    metrics = run_quick()
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(metrics, fh, indent=2, sort_keys=True)
+    if args.baseline:
+        with open(args.baseline) as fh:
+            baseline = json.load(fh)
+        failures = compare(metrics, baseline, args.tolerance)
+        for f in failures:
+            print(f"BENCH REGRESSION: {f}", file=sys.stderr)
+        if failures:
+            return 1
+        print(f"bench gate: {len(baseline)} metrics within "
+              f"{args.tolerance * 100:.0f}% of baseline", file=sys.stderr)
+    return 0
 
 
 if __name__ == '__main__':
-    main()
+    raise SystemExit(main())

@@ -14,12 +14,13 @@ from benchmarks.common import emit
 from repro.scenarios import list_scenarios, parity_report, run_scenario
 
 
-def run():
+def run(scale: float = 1.0):
     out = {}
     for name in list_scenarios():
         t0 = time.time()
-        # oracle joins at full scale only where oracle_ok (runner decides)
-        rows = run_scenario(name, scale=1.0)
+        # oracle joins only where feasible at this scale (runner decides);
+        # shrunk runs (the --quick CI tier) get it on every scenario
+        rows = run_scenario(name, scale=scale)
         elapsed = time.time() - t0
         gaps = parity_report(rows)
         for r in rows:

@@ -56,12 +56,24 @@ from repro.core.trace import Trace, rate_matrix
 
 @dataclasses.dataclass(frozen=True)
 class JaxPolicy:
-    """Branchless policy parameters; kind: 0=sync keepalive, 1=async window."""
+    """Branchless policy parameters; kind: 0=sync keepalive, 1=async window,
+    2=hybrid histogram (Shahrad'20: adaptive keepalive capped at
+    ``keepalive_s`` plus a ``prewarm_s`` pre-warm lead).
+
+    ``keepalive_s``/``target``/``cc``/``prewarm_s`` are TRACED (sweepable
+    batch axes, see ``_PPOL``); only ``kind`` and ``window_s`` (the window
+    buffer depth) are structural."""
     kind: int
     keepalive_s: float = 600.0
     window_s: float = 60.0
     target: float = 0.7
     cc: int = 1
+    prewarm_s: float = 0.0
+
+    def params(self) -> np.ndarray:
+        """The traced parameter vector (see _PPOL indices)."""
+        return np.asarray([self.keepalive_s, self.target, self.cc,
+                           self.prewarm_s], np.float32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,9 +97,13 @@ class JaxFleet:
 
 
 # traced parameter vector layouts
-_PPOL = ("keepalive_s", "target")
+_PPOL = ("keepalive_s", "target", "cc", "prewarm_s")
 _PFLEET = ("min_nodes", "max_nodes", "util_target", "warm_frac",
            "cooldown_s", "node_memory_mb")
+
+# hybrid (kind=2) floor on the adaptive keepalive, mirroring
+# HybridHistogramPolicy.min_s (its max_s cap maps to JaxPolicy.keepalive_s)
+HYBRID_MIN_KA_S = 30.0
 
 
 def _init_state(f, cold_ticks, wbuf, prov_ticks, init_nodes):
@@ -97,7 +113,7 @@ def _init_state(f, cold_ticks, wbuf, prov_ticks, init_nodes):
 
 
 def _make_step(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
-               *, kind: int, cc: int, dt: float, cold_ticks: int,
+               *, kind: int, dt: float, cold_ticks: int,
                wbuf: int, prov_ticks: int, has_fleet: bool):
     """One simulated tick, shared by the full-history scan (`_sim_impl`) and
     the chunked-summary scan (`_chunk_impl`) so the policy math exists once.
@@ -110,10 +126,13 @@ def _make_step(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
     for the Poisson-renewal model (trace parity holds within a few percent
     for Poisson gaps; strongly bursty gap distributions under SHORT
     keepalives under-expire somewhat — see EXPERIMENTS.md).
+
+    All of ``pol`` (keepalive, utilization target, container concurrency,
+    hybrid pre-warm lead) is traced, so the frontier engine can vmap over
+    any of the four policy knobs; only ``kind`` selects branches.
     """
     f = dur.shape[0]
-    ccf = float(cc)
-    keepalive_s, target = pol[0], pol[1]
+    keepalive_s, target, ccf, prewarm_s = pol[0], pol[1], pol[2], pol[3]
 
     def step(state, tick):
         (inst, in_service, queue, starting, win, wcur,
@@ -157,7 +176,14 @@ def _make_step(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
         # integral (ceil) — the oracle can only retire instances with ZERO
         # in-flight requests at the tick instant.
         served_avg = in_service + completions * jnp.minimum(dur / dt, 1.0)
-        busy_inst = jnp.minimum(inst, served_avg / ccf)
+        # cc > 1 packing: the oracle charges a partially-occupied instance's
+        # memory as FULLY busy, so expected busy instances is ~ceil(B/cc)
+        # under its first-free (packing) dispatch, not B/cc slot-utilization.
+        # The smooth analogue B/cc + (1-1/cc)(1-e^-B) is exact at cc=1 and
+        # reproduces the one-partial-instance bin for sparse load; remaining
+        # cc>1 gaps are documented in EXPERIMENTS.md (frontier envelope).
+        packed = served_avg / ccf + (1.0 - 1.0 / ccf) * -jnp.expm1(-served_avg)
+        busy_inst = jnp.minimum(inst, packed)
         # two idle views: the EXPECTED idle mass (fractional — drives the
         # sync expiry flux; a ceil would pin idle to zero for as long as any
         # exponential in-service tail persists, i.e. forever for dur > dt)
@@ -199,8 +225,19 @@ def _make_step(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
             # matching the oracle's warm-hit probability P(gap < ka).
             # The naive flux idle*dt/ka churns chatty functions forever.
             lam_inst = jnp.maximum(lam0 / jnp.maximum(inst, 1.0), 1e-9)
+            if kind == 2:
+                # hybrid histogram (Shahrad'20): keep warm for ~the p99 of
+                # the function's idle-gap distribution x 1.1 headroom.  For
+                # the Poisson-renewal model that quantile is -ln(0.01)/lam,
+                # clipped to [HYBRID_MIN_KA_S, keepalive_s] (keepalive_s
+                # plays the policy's max_s cap) — short effective keepalives
+                # for chatty functions, bounded warmth for sparse ones.
+                ka_eff = jnp.clip(1.1 * 4.60517 / lam_inst,
+                                  HYBRID_MIN_KA_S, keepalive_s)
+            else:
+                ka_eff = keepalive_s
             r_expire = lam_inst / jnp.expm1(
-                jnp.minimum(lam_inst * keepalive_s, 60.0))
+                jnp.minimum(lam_inst * ka_eff, 60.0))
             retire = idle_frac * dt * r_expire
 
         inst = inst - retire
@@ -245,11 +282,18 @@ def _make_step(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
         drain = jnp.maximum(future_slots / dur, 1e-6)
         # async arrivals additionally wait for the reconcile tick that
         # notices them before their instance even starts (sync creates on
-        # the arrival path, so its wait is the cold start alone)
-        cold_full = (1.5 if kind == 1 else 1.0) * cold_ticks * dt
+        # the arrival path, so its wait is the cold start alone); the
+        # hybrid's pre-warm lead hides up to prewarm_s of the cold start
+        # (the sandbox was requested that early), paid for below in
+        # standing pre-warmed memory
+        prewarm_hide = prewarm_s if kind == 2 else 0.0
+        cold_full = jnp.maximum(
+            (1.5 if kind == 1 else 1.0) * cold_ticks * dt - prewarm_hide, 0.0)
         cold_wait = jnp.where(pending > 0, cold_full,
                               jnp.where(future_slots < 0.5,
-                                        2.0 * cold_ticks * dt, 0.0))
+                                        jnp.maximum(2.0 * cold_ticks * dt
+                                                    - prewarm_hide, 0.0),
+                                        0.0))
         # a delayed arrival waits behind the backlog ahead of it — its own
         # cohort sits half in front, half behind on average
         queue_pos = jnp.maximum(queue - 0.5 * arr_delayed, 0.0)
@@ -263,9 +307,13 @@ def _make_step(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
         useful = (completions * dur).sum()
 
         # total allocated memory counts still-starting sandboxes, as the
-        # oracle's per-tick sample does
+        # oracle's per-tick sample does; the hybrid additionally holds each
+        # new sandbox warm for its prewarm_s lead — a standing mass of
+        # (creations/s x prewarm_s) pre-warmed instances in steady state
+        prewarm_mass = (create * mem).sum() * prewarm_hide / dt
         ys = (delay, arr, arr_delayed, inst.sum(),
-              ((inst + pending) * mem).sum(), (busy_inst * mem).sum(),
+              ((inst + pending) * mem).sum() + prewarm_mass,
+              (busy_inst * mem).sum(),
               create.sum(), cpu_worker, cpu_master, useful, nodes_billed,
               completions.sum())
         return (inst, in_service, queue, starting, win_, wcur + 1,
@@ -275,10 +323,10 @@ def _make_step(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
 
 
 def _sim_impl(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
-              *, kind: int, cc: int, n_ticks: int, dt: float, cold_ticks: int,
+              *, kind: int, n_ticks: int, dt: float, cold_ticks: int,
               wbuf: int, prov_ticks: int, has_fleet: bool):
     step = _make_step(arrivals, dur, mem, lam0, pol, fleet, cpu_consts,
-                      static_nodes, kind=kind, cc=cc, dt=dt,
+                      static_nodes, kind=kind, dt=dt,
                       cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
                       has_fleet=has_fleet)
     init_nodes = fleet[0] if has_fleet else jnp.asarray(static_nodes, jnp.float32)
@@ -288,7 +336,7 @@ def _sim_impl(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
 
 
 _simulate = partial(jax.jit, static_argnames=(
-    "kind", "cc", "n_ticks", "dt", "cold_ticks", "wbuf", "prov_ticks",
+    "kind", "n_ticks", "dt", "cold_ticks", "wbuf", "prov_ticks",
     "has_fleet"))(_sim_impl)
 
 
@@ -351,12 +399,12 @@ def simulate(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
     arr, dur, mem, cold_ticks, wbuf, cpu_consts = _prep(trace, policy, sim, dt)
     has_fleet = fleet is not None
     prov_ticks = max(1, int(round((fleet.provision_s if has_fleet else 0.0) / dt)))
-    pol = jnp.asarray([policy.keepalive_s, policy.target], jnp.float32)
+    pol = jnp.asarray(policy.params())
     fl = jnp.asarray(fleet.params() if has_fleet else np.zeros(len(_PFLEET)),
                      jnp.float32)
     lam0 = jnp.asarray(np.asarray(arr).mean(axis=0) / dt, jnp.float32)
     ys = _simulate(arr, dur, mem, lam0, pol, fl, cpu_consts, float(num_nodes),
-                   kind=policy.kind, cc=policy.cc, n_ticks=arr.shape[0], dt=dt,
+                   kind=policy.kind, n_ticks=arr.shape[0], dt=dt,
                    cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
                    has_fleet=has_fleet)
     vals = {n: np.asarray(v) for n, v in zip(_YS_NAMES, ys)}
@@ -364,7 +412,7 @@ def simulate(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
                         dur_median=np.asarray(trace.profile.dur_median),
                         dur_sigma=np.asarray(trace.profile.dur_sigma),
                         warm_latency_s=sim.warm_latency_s,
-                        sync_tail=policy.kind == 0, **vals)
+                        sync_tail=policy.kind != 1, **vals)
 
 
 def summarize(res: JaxSimResult, warmup_frac: float = 0.5,
@@ -500,7 +548,7 @@ def _slowdown_geomean(hist, arrtot, edges, dur_median, dur_sigma, warm,
 
 def _chunk_impl(state, arr_chunk, lam0, dur, mem, pol, fleet, cpu_consts,
                 static_nodes, edges, tick0, *, warm_tick: int,
-                total_ticks: int, kind: int, cc: int, dt: float,
+                total_ticks: int, kind: int, dt: float,
                 cold_ticks: int, wbuf: int, prov_ticks: int, has_fleet: bool):
     """Advance the simulation by one time chunk; return the carried state and
     this chunk's summary-statistic partials (host accumulates across chunks).
@@ -509,7 +557,7 @@ def _chunk_impl(state, arr_chunk, lam0, dur, mem, pol, fleet, cpu_consts,
     f = arr_chunk.shape[1]
     nbins = edges.shape[0] + 1
     step = _make_step(arr_chunk, dur, mem, lam0, pol, fleet, cpu_consts,
-                      static_nodes, kind=kind, cc=cc, dt=dt,
+                      static_nodes, kind=kind, dt=dt,
                       cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
                       has_fleet=has_fleet)
 
@@ -560,6 +608,31 @@ def _acc_summary(hist, arrtot, sums, n, edges, dur_median, dur_sigma, warm,
     }
 
 
+def _chunk_batch_impl(state, arr_chunk, lam0, dur, mem, pols, fleets,
+                      cpu_consts, static_nodes, edges, tick0, *,
+                      warm_tick: int, total_ticks: int, kind: int, dt: float,
+                      cold_ticks: int, wbuf: int, prov_ticks: int,
+                      has_fleet: bool):
+    """One time chunk for a whole batch of parameter points (vmap over the
+    point axis of state/lam0/pols/fleets)."""
+    def one(st, l0, p, fl):
+        return _chunk_impl(st, arr_chunk, l0, dur, mem, p, fl, cpu_consts,
+                           static_nodes, edges, tick0, warm_tick=warm_tick,
+                           total_ticks=total_ticks, kind=kind, dt=dt,
+                           cold_ticks=cold_ticks, wbuf=wbuf,
+                           prov_ticks=prov_ticks, has_fleet=has_fleet)
+    return jax.vmap(one)(state, lam0, pols, fleets)
+
+
+# module-level jit so repeated simulate_chunked / sweep calls with the same
+# shapes and static config hit the compile cache (a per-call jit(vmap(...))
+# closure would retrace every invocation); tick0 is a traced scalar, so the
+# host chunk loop reuses one executable across chunks
+_chunk_batch = partial(jax.jit, static_argnames=(
+    "warm_tick", "total_ticks", "kind", "dt", "cold_ticks", "wbuf",
+    "prov_ticks", "has_fleet"), donate_argnums=(0,))(_chunk_batch_impl)
+
+
 def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: np.ndarray,
                        fleets: np.ndarray, *, sim: SimConfig, dt: float,
                        num_nodes: float, provision_s: float, has_fleet: bool,
@@ -581,17 +654,7 @@ def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: np.ndarray,
 
     lam_eff = jnp.broadcast_to(jnp.asarray(arr_np.mean(axis=0) / dt,
                                jnp.float32), (n_points, f))
-
-    def one_chunk(state, arr_chunk, lam0, pol, fl, tick0):
-        return _chunk_impl(state, arr_chunk, lam0, dur, mem, pol, fl,
-                           cpu_consts, float(num_nodes), jnp.asarray(edges),
-                           tick0, warm_tick=warm_tick, total_ticks=n_ticks,
-                           kind=policy.kind, cc=policy.cc, dt=dt,
-                           cold_ticks=cold_ticks, wbuf=wbuf,
-                           prov_ticks=prov_ticks, has_fleet=has_fleet)
-
-    chunk_fn = jax.jit(jax.vmap(one_chunk, in_axes=(0, None, 0, 0, 0, None)),
-                       donate_argnums=(0,))
+    edges_j = jnp.asarray(edges)
 
     def init_point(fl):
         init_nodes = fl[0] if has_fleet else jnp.asarray(float(num_nodes))
@@ -610,16 +673,20 @@ def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: np.ndarray,
         if a.shape[0] < chunk_ticks:        # pad the tail chunk; the padded
             a = np.concatenate(             # ticks are masked out of the stats
                 [a, np.zeros((chunk_ticks - a.shape[0], f), a.dtype)])
-        state, (h, at, s, nn) = chunk_fn(state, jnp.asarray(a), lam_eff,
-                                         pols_j, fleets_j,
-                                         jnp.asarray(t0, jnp.int32))
+        state, (h, at, s, nn) = _chunk_batch(
+            state, jnp.asarray(a), lam_eff, dur, mem, pols_j, fleets_j,
+            cpu_consts, float(num_nodes), edges_j,
+            jnp.asarray(t0, jnp.int32), warm_tick=warm_tick,
+            total_ticks=n_ticks, kind=policy.kind, dt=dt,
+            cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
+            has_fleet=has_fleet)
         hist += np.asarray(h)
         arrtot += np.asarray(at)
         sums += np.asarray(s)
         n += np.asarray(nn)
     return [_acc_summary(hist[i], arrtot[i], sums[i], n[i], edges, dur_median,
                          dur_sigma, sim.warm_latency_s, dt,
-                         iid_tail=policy.kind == 0)
+                         iid_tail=policy.kind != 1)
             for i in range(n_points)]
 
 
@@ -632,7 +699,7 @@ def simulate_chunked(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig
     segmented scan so arbitrarily long / wide traces (the 2000-function
     Fig. 9 replay, and beyond) never materialize (T, F) histories."""
     has_fleet = fleet is not None
-    pols = np.asarray([[policy.keepalive_s, policy.target]], np.float32)
+    pols = policy.params()[None, :]
     fleets = np.asarray([fleet.params() if has_fleet
                          else np.zeros(len(_PFLEET))], np.float32)
     return _chunked_summaries(

@@ -7,11 +7,6 @@ parameter vectors of ``repro.core.simjax``: every (keepalive x warm-pool x
 node-cap x target) combination shares a single compiled scan, so a
 hundred-point frontier costs about as much as one simulation.
 
-The sweep rides the *chunked* scan (``simjax._chunked_summaries``): summary
-statistics accumulate inside the scan carry instead of materializing a
-(points x ticks x functions) history, so grids stay cheap even on the
-2000-function production-scale traces.
-
     rows = sweep(trace, JaxPolicy(kind=0), JaxFleet(),
                  grid={"keepalive_s": [60, 300, 600],
                        "warm_frac": [0.0, 0.25, 0.5],
@@ -19,30 +14,27 @@ statistics accumulate inside the scan carry instead of materializing a
 
 Each row carries the swept parameters, the standard summary metrics, and
 the dollar bill (cost_per_million) from ``repro.fleet.costs``.
+
+This module is the stable fleet-facing surface; the machinery itself lives
+in ``repro.opt`` (``opt.search.evaluate_points`` generalizes it so ALL four
+policy knobs — keepalive, utilization target, container concurrency,
+hybrid pre-warm lead — are traced batch axes, which is what the frontier
+engine sweeps).  ``grid_points``/``pareto_front`` are re-exported from
+their canonical homes there.
 """
 
 from __future__ import annotations
 
-import itertools
 from typing import Optional, Sequence
 
-import numpy as np
-
 from repro.core.eventsim import SimConfig
-from repro.core.simjax import (_PFLEET, _PPOL, JaxFleet, JaxPolicy,
-                               _chunked_summaries)
+from repro.core.simjax import JaxFleet, JaxPolicy
 from repro.core.trace import Trace
-from repro.fleet.costs import PriceBook, cost_report
+from repro.fleet.costs import PriceBook
 from repro.fleet.nodes import NodeType
-
-SWEEPABLE = set(_PPOL) | set(_PFLEET)
-
-
-def grid_points(grid: dict) -> list[dict]:
-    """Cartesian product of a {param: values} grid, as one dict per point."""
-    keys = list(grid)
-    return [dict(zip(keys, combo))
-            for combo in itertools.product(*(grid[k] for k in keys))]
+from repro.opt.frontier import pareto_front  # noqa: F401  (canonical home)
+from repro.opt.search import evaluate_points
+from repro.opt.space import SWEEPABLE, grid_points  # noqa: F401
 
 
 def sweep(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
@@ -54,69 +46,6 @@ def sweep(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
     """Run every parameter point through one vmapped chunked scan; return one
     row per point: {params..., metrics..., cost fields...}."""
     pts = list(points) if points is not None else grid_points(grid or {})
-    if not pts:
-        pts = [{}]
-    unknown = {k for p in pts for k in p} - SWEEPABLE
-    if unknown:
-        raise ValueError(f"unsweepable params {sorted(unknown)}; "
-                         f"traced params are {sorted(SWEEPABLE)}")
-
-    base_pol = np.asarray([policy.keepalive_s, policy.target], np.float32)
-    base_fleet = fleet.params()
-    pols = np.tile(base_pol, (len(pts), 1))
-    fleets = np.tile(base_fleet, (len(pts), 1))
-    for i, p in enumerate(pts):
-        for k, v in p.items():
-            if k in _PPOL:
-                pols[i, _PPOL.index(k)] = v
-            else:
-                fleets[i, _PFLEET.index(k)] = v
-
-    summaries = _chunked_summaries(
-        trace, policy, pols, fleets, sim=sim, dt=dt, num_nodes=0,
-        provision_s=fleet.provision_s, has_fleet=True,
-        chunk_ticks=chunk_ticks, warmup_frac=warmup_frac, nbins=256)
-
-    if node_type is None:
-        # derive a shape from the fleet's node size at the default $/GB-hour
-        base = NodeType()
-        ratio = fleet.node_memory_mb / base.memory_mb
-        node_type = NodeType(memory_mb=fleet.node_memory_mb,
-                             vcpus=base.vcpus * ratio,
-                             price_per_hour=base.price_per_hour * ratio,
-                             provision_s=fleet.provision_s)
-    nt = node_type
-    rows = []
-    for i, p in enumerate(pts):
-        s = summaries[i]
-        node_mem = fleets[i, _PFLEET.index("node_memory_mb")]
-        if node_mem != nt.memory_mb:
-            # sweeping node size: scale price and vCPUs linearly ($/GB-hour
-            # held constant) so cost rows stay comparable across shapes
-            ratio = node_mem / nt.memory_mb
-            nt_i = NodeType(name=nt.name, memory_mb=float(node_mem),
-                            vcpus=nt.vcpus * ratio,
-                            price_per_hour=nt.price_per_hour * ratio,
-                            provision_s=nt.provision_s)
-        else:
-            nt_i = nt
-        cap_mb = max(s["nodes_mean"] * node_mem, 1e-9)
-        idle_mb = s["mem_total_mean"] - s["mem_busy_mean"]
-        cost = cost_report(
-            node_seconds=s["node_seconds"],
-            cpu_worker_overhead_s=s["cpu_worker_s"],
-            cpu_master_overhead_s=s["cpu_master_s"],
-            idle_node_share=idle_mb / cap_mb,
-            completed=int(s["completed"]),
-            node_type=nt_i, prices=prices)
-        rows.append({**p, **s, **cost.row()})
-    return rows
-
-
-def pareto_front(rows: list[dict], x: str = "cost_per_million",
-                 y: str = "slowdown_geomean_p99") -> list[dict]:
-    """Non-dominated subset (minimize both axes), sorted by x."""
-    out = [r for r in rows
-           if not any(o[x] <= r[x] and o[y] <= r[y]
-                      and (o[x] < r[x] or o[y] < r[y]) for o in rows)]
-    return sorted(out, key=lambda r: r[x])
+    return evaluate_points(trace, policy, fleet, pts, sim=sim, dt=dt,
+                           node_type=node_type, prices=prices,
+                           warmup_frac=warmup_frac, chunk_ticks=chunk_ticks)

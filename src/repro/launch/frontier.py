@@ -1,0 +1,135 @@
+"""Frontier-search CLI — discover cost-efficient autoscaling configs.
+
+Sweeps the joint (policy x fleet) parameter space through the vmapped
+chunked ``lax.scan`` simulator across registered scenarios (coarse grid at
+``coarse_frac`` x scale, successive-halving refine at full scale), then
+emits per-scenario Pareto fronts, the cross-scenario robust frontier, and
+oracle spot-check verdicts on sampled winners.
+
+  PYTHONPATH=src python -m repro.launch.frontier --scale 0.1
+  PYTHONPATH=src python -m repro.launch.frontier --scenario cold_tail \\
+      --scenario diurnal --scale 0.25 --out-dir frontier_out
+  PYTHONPATH=src python -m repro.launch.frontier --scale 1.0 --spot-check 5
+
+Outputs in ``--out-dir``:
+  frontier_<scenario>.csv   refined rows, with ``front``/``robust`` flags
+  frontier_robust.csv       the robust frontier (one row per point x scenario)
+  frontier.json             search summary + spot-check records
+
+Exit status is non-zero when a scenario ends with an empty oracle-confirmed
+front or (with spot checks enabled) an oracle-feasible scenario where no
+sampled winner passed the parity band.
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+import sys
+
+from repro.opt.search import frontier_search, oracle_spot_check
+from repro.opt.space import SWEEPABLE
+from repro.scenarios import list_scenarios
+
+_METRICS = ["cost_per_million", "slowdown_geomean_p99", "normalized_memory",
+            "creation_rate", "cpu_overhead", "nodes_mean", "node_cost",
+            "idle_cost", "churn_cost", "completed"]
+
+
+def _columns(rows: list[dict]) -> list[str]:
+    knobs = sorted({k for r in rows for k in r} & SWEEPABLE)
+    return (["scenario", "point_id"] + knobs + _METRICS
+            + ["front", "robust", "scale"])
+
+
+def _write_csv(path: str, rows: list[dict]) -> None:
+    # an empty robust frontier is a finding, not a missing artifact: the
+    # file still lands, header-only, so downstream tooling sees the schema
+    cols = _columns(rows) if rows else (["scenario", "point_id"] + _METRICS
+                                        + ["front", "robust", "scale"])
+    with open(path, "w", newline="") as fh:
+        w = csv.DictWriter(fh, fieldnames=cols, extrasaction="ignore")
+        w.writeheader()
+        for r in rows:
+            w.writerow({k: (f"{v:.6g}" if isinstance(v, float) else v)
+                        for k, v in r.items() if k in cols})
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.frontier",
+        description="Cross-scenario multi-objective autoscaling-parameter "
+                    "search (coarse+refine, Pareto + robust fronts).")
+    ap.add_argument("--scenario", action="append", default=None,
+                    help="scenario name (repeatable; default: all registered)")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="refine-stage trace scale (default 1.0)")
+    ap.add_argument("--coarse-frac", type=float, default=0.1,
+                    help="coarse stage runs at this fraction of --scale")
+    ap.add_argument("--eps", type=float, default=0.15,
+                    help="survivor slack band around the coarse front")
+    ap.add_argument("--cap", type=int, default=12,
+                    help="max survivors per scenario")
+    ap.add_argument("--spot-check", type=int, default=3, metavar="K",
+                    help="oracle-verify K winners per oracle-feasible "
+                         "scenario, demoting refuted points (0 disables)")
+    ap.add_argument("--out-dir", default="frontier_out",
+                    help="where CSV/JSON land (default frontier_out/)")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    say = (lambda s: None) if args.quiet else \
+        (lambda s: print(s, file=sys.stderr))
+    names = args.scenario or list_scenarios()
+    result = frontier_search(names, scale=args.scale,
+                             coarse_frac=args.coarse_frac, eps=args.eps,
+                             survivor_cap=args.cap, log=say)
+    checks = []
+    if args.spot_check > 0:
+        checks = oracle_spot_check(result, k=args.spot_check, log=say)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    robust = set(result.robust_ids)
+    for name, rows in sorted(result.refined.items()):
+        front_ids = {r["point_id"] for r in result.fronts[name]}
+        for r in rows:
+            r["front"] = r["point_id"] in front_ids
+            r["robust"] = r["point_id"] in robust
+        _write_csv(os.path.join(args.out_dir, f"frontier_{name}.csv"), rows)
+    _write_csv(os.path.join(args.out_dir, "frontier_robust.csv"),
+               result.robust_rows())
+
+    payload = {"summary": result.summary(),
+               "spot_checks": checks,
+               "argv": {"scale": args.scale, "coarse_frac": args.coarse_frac,
+                        "eps": args.eps, "cap": args.cap,
+                        "spot_check": args.spot_check}}
+    with open(os.path.join(args.out_dir, "frontier.json"), "w") as fh:
+        json.dump(payload, fh, indent=2, default=float)
+
+    failures = []
+    for name in sorted(result.fronts):
+        if not result.fronts[name]:
+            failures.append(f"{name}: empty oracle-confirmed front")
+    if args.spot_check > 0:
+        by = {}
+        for c in checks:
+            by.setdefault(c["scenario"], []).append(c)
+        for name, recs in sorted(by.items()):
+            n_ok = sum(r["pass"] for r in recs)
+            say(f"spot-check {name}: {n_ok}/{len(recs)} winners confirmed")
+            if n_ok == 0:
+                failures.append(f"{name}: no sampled winner passed the "
+                                f"oracle parity band")
+    say(f"robust frontier: {len(result.robust_ids)} point(s) "
+        f"{[result.points[i] for i in result.robust_ids]}")
+    say(f"total wall {result.wall_s:.1f}s; outputs in {args.out_dir}/")
+    for f in failures:
+        print(f"FRONTIER FAILURE: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-if os.environ.get("REPRO_XLA_EXTRA"):
-    os.environ["XLA_FLAGS"] += " " + os.environ["REPRO_XLA_EXTRA"]
-
 """Perf-iteration driver: lower+compile one cell under a named variant and
 report the roofline terms.  Used by the EXPERIMENTS.md §Perf loop.
 
@@ -12,7 +7,25 @@ report the roofline terms.  Used by the EXPERIMENTS.md §Perf loop.
 
 import argparse
 import json
+import os
 import time
+
+
+def _setup_xla_env() -> None:
+    """Fake a 512-device host for mesh experiments.  Called from main()
+    BEFORE jax is imported (run() imports it lazily): mutating XLA_FLAGS at
+    module import time would leak into anything that merely imports this
+    module (tests, tooling) and silently poison an already-initialized jax.
+    Caller-provided XLA_FLAGS are preserved; the device-count flag this
+    module REQUIRES (the production mesh lays out over 512 fake devices)
+    is appended unless the caller already pinned one."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        flags = (flags + " " if flags else "") \
+            + "--xla_force_host_platform_device_count=512"
+    if os.environ.get("REPRO_XLA_EXTRA"):
+        flags += " " + os.environ["REPRO_XLA_EXTRA"]
+    os.environ["XLA_FLAGS"] = flags
 
 VARIANTS: dict[str, dict] = {
     "baseline": {},
@@ -79,6 +92,7 @@ def run(arch: str, shape: str, variant: str) -> dict:
 
 
 def main():
+    _setup_xla_env()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)

@@ -1,0 +1,27 @@
+# Frontier engine: cross-scenario multi-objective search over the joint
+# (policy x fleet) parameter space — coarse vmapped grid, successive-halving
+# refine, per-scenario Pareto fronts, the cross-scenario robust frontier,
+# and oracle spot-checks on sampled winners.
+from repro.opt.frontier import (  # noqa: F401
+    epsilon_survivors,
+    frontier_slack,
+    pareto_front,
+    robust_front,
+)
+from repro.opt.search import (  # noqa: F401
+    FrontierResult,
+    default_fleet,
+    evaluate_points,
+    evaluate_scenario,
+    frontier_search,
+    oracle_spot_check,
+    point_scenario,
+    sample_front,
+)
+from repro.opt.space import (  # noqa: F401
+    DEFAULT_SPACE,
+    SWEEPABLE,
+    SearchSpace,
+    active_knobs,
+    grid_points,
+)

@@ -1,0 +1,95 @@
+"""Joint (policy x fleet) search spaces over the traced simulator knobs.
+
+A ``SearchSpace`` is two {knob: candidate values} grids — one over the
+traced policy axes (``simjax._PPOL``: keepalive, utilization target,
+container concurrency, hybrid pre-warm lead) and one over the traced fleet
+axes (``simjax._PFLEET``) — whose cartesian product is the candidate set
+the frontier engine sweeps through one vmapped chunked scan per scenario.
+
+Not every knob acts under every policy family (an async reconciler never
+reads the keepalive; a sync policy never reads the utilization target), so
+``active_knobs`` names the axes with effect per ``JaxPolicy.kind``; the
+engine collapses inert axes before simulating and broadcasts results back,
+turning e.g. a 96-point grid into 32 distinct simulations for a sync
+scenario while keeping point ids comparable across scenarios — which is
+what makes the cross-scenario robust frontier well-defined.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Mapping, Sequence, Tuple
+
+from repro.core.simjax import _PFLEET, _PPOL
+
+SWEEPABLE = set(_PPOL) | set(_PFLEET)
+
+# policy knobs with effect per JaxPolicy.kind (fleet knobs always act)
+_ACTIVE = {
+    0: ("keepalive_s", "cc"),                 # sync keepalive
+    1: ("target", "cc"),                      # async window reconciler
+    2: ("keepalive_s", "cc", "prewarm_s"),    # hybrid histogram + pre-warm
+}
+
+
+def active_knobs(kind: int) -> Tuple[str, ...]:
+    """The policy axes a ``JaxPolicy`` of this kind actually reads."""
+    return _ACTIVE[kind]
+
+
+def grid_points(grid: Mapping[str, Sequence]) -> list[dict]:
+    """Cartesian product of a {param: values} grid, as one dict per point."""
+    keys = list(grid)
+    return [dict(zip(keys, combo))
+            for combo in itertools.product(*(grid[k] for k in keys))]
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """A {knob: candidates} grid split along the policy/fleet seam."""
+    policy: Mapping[str, Sequence[float]] = dataclasses.field(
+        default_factory=dict)
+    fleet: Mapping[str, Sequence[float]] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        bad = (set(self.policy) - set(_PPOL)) | (set(self.fleet) - set(_PFLEET))
+        if bad:
+            raise ValueError(f"unsweepable knobs {sorted(bad)}; traced axes "
+                             f"are {sorted(SWEEPABLE)}")
+        for knob, vals in {**self.policy, **self.fleet}.items():
+            if len(vals) == 0:
+                raise ValueError(f"knob {knob!r} has no candidate values")
+
+    def points(self) -> list[dict]:
+        """The full candidate set; index order is the stable point id."""
+        return grid_points({**self.policy, **self.fleet})
+
+    def size(self) -> int:
+        vals = list(self.policy.values()) + list(self.fleet.values())
+        n = 1
+        for v in vals:
+            n *= len(v)
+        return n
+
+
+# The default joint space: the paper's keepalive ladder (Fig. 3-6) x the
+# Knative utilization targets (Fig. 7-8), crossed with the fleet's
+# warm-pool and packing-headroom knobs.  48 raw points; inert-axis
+# collapsing brings a sync scenario to 16 simulations and an async one
+# to 12.  ``cc`` and ``prewarm_s`` are fully traced axes and sweepable in
+# custom spaces, but stay out of the DEFAULT grid: the fluid model's cc>1
+# creation/slowdown fidelity and the hybrid's pre-warm are outside the
+# oracle-calibrated parity envelope (EXPERIMENTS.md, Frontier section), so
+# their winners would only be demoted by the oracle spot-check.
+DEFAULT_SPACE = SearchSpace(
+    policy={
+        "keepalive_s": (60.0, 300.0, 600.0, 1200.0),
+        "target": (0.5, 0.7, 1.0),
+    },
+    fleet={
+        "util_target": (0.6, 0.8),
+        "warm_frac": (0.0, 0.25),
+    },
+)

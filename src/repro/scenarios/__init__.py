@@ -9,6 +9,7 @@ from repro.scenarios.registry import (  # noqa: F401
 from repro.scenarios.runner import (  # noqa: F401
     ENGINES,
     PARITY_KEYS,
+    frontier,
     parity_report,
     run_scenario,
 )

@@ -104,6 +104,24 @@ def run_scenario(scenario: Union[str, Scenario],
     return rows
 
 
+def frontier(scenarios: Optional[Sequence[str]] = None, scale: float = 1.0,
+             space=None, spot_check: int = 0, log=None, **kw):
+    """Scenario-side entry point into the frontier engine: search the joint
+    (policy x fleet) space across the given scenarios (default: the whole
+    registry) with the coarse+refine schedule, optionally oracle-checking
+    ``spot_check`` sampled winners per scenario.
+
+    Returns ``(FrontierResult, spot_records)``; see ``repro.opt.search``.
+    (Imported lazily: ``repro.opt`` builds on this package.)
+    """
+    from repro.opt.search import (DEFAULT_SPACE, frontier_search,
+                                  oracle_spot_check)
+    result = frontier_search(scenarios, space=space or DEFAULT_SPACE,
+                             scale=scale, log=log, **kw)
+    checks = oracle_spot_check(result, k=spot_check) if spot_check else []
+    return result, checks
+
+
 def parity_report(rows: Sequence[dict]) -> dict:
     """Relative oracle-vs-fluid gap per parity metric; {} unless both
     engines are present."""

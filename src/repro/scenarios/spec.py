@@ -17,7 +17,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional, Tuple
 
-from repro.core.policies import (AsyncConcurrencyPolicy, Policy,
+from repro.core.policies import (AsyncConcurrencyPolicy,
+                                 HybridHistogramPolicy, Policy,
                                  SyncKeepalivePolicy)
 from repro.core.simjax import JaxFleet, JaxPolicy
 from repro.core.trace import Trace, TraceConfig, synthesize
@@ -33,17 +34,23 @@ class PolicySpec:
     periods conflates policy behavior with sampling granularity — a coarser
     oracle tick accumulates larger queue spikes and inflates churn.
     """
-    kind: str = "sync"                 # "sync" (keepalive) | "async" (window)
-    keepalive_s: float = 600.0
+    kind: str = "sync"     # "sync" (keepalive) | "async" (window) | "hybrid"
+    keepalive_s: float = 600.0         # hybrid: the adaptive keepalive's cap
     window_s: float = 60.0
     target: float = 0.7
     container_concurrency: int = 1
     tick_s: float = 1.0
+    prewarm_s: float = 0.0             # hybrid pre-warm lead (fluid side)
+
+    _KINDS = {"sync": 0, "async": 1, "hybrid": 2}
 
     def to_jax(self) -> JaxPolicy:
-        return JaxPolicy(kind=0 if self.kind == "sync" else 1,
+        if self.kind not in self._KINDS:
+            raise ValueError(f"unknown policy kind {self.kind!r}")
+        return JaxPolicy(kind=self._KINDS[self.kind],
                          keepalive_s=self.keepalive_s, window_s=self.window_s,
-                         target=self.target, cc=self.container_concurrency)
+                         target=self.target, cc=self.container_concurrency,
+                         prewarm_s=self.prewarm_s)
 
     def factory(self) -> Callable[[int], Policy]:
         if self.kind == "sync":
@@ -55,6 +62,10 @@ class PolicySpec:
                 window_s=self.window_s, target=self.target,
                 container_concurrency=self.container_concurrency,
                 tick_s=self.tick_s)
+        if self.kind == "hybrid":
+            return lambda f: HybridHistogramPolicy(
+                max_s=self.keepalive_s,
+                container_concurrency=self.container_concurrency)
         raise ValueError(f"unknown policy kind {self.kind!r}")
 
 

@@ -1,0 +1,235 @@
+"""Frontier engine: Pareto/robust reducers, search-space dedupe, traced
+policy axes (cc / pre-warm), the coarse+refine pipeline, and the CLI."""
+
+import math
+
+import numpy as np
+import pytest
+
+# the stable fleet-facing surface re-exports the canonical reducers
+from repro.fleet.sweep import grid_points, pareto_front
+from repro.core.simjax import JaxFleet, JaxPolicy, simulate_chunked
+from repro.core.trace import TraceConfig, synthesize
+from repro.opt import (DEFAULT_SPACE, SearchSpace, active_knobs,
+                       epsilon_survivors, evaluate_points, evaluate_scenario,
+                       frontier_search, point_scenario, robust_front)
+from repro.scenarios import PolicySpec, get_scenario
+
+TC = TraceConfig(num_functions=30, duration_s=600, target_total_rps=5, seed=11)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return synthesize(TC)
+
+
+# ---------------------------------------------------------------------------
+# grid_points / pareto_front edge cases (fleet/sweep's stable surface)
+# ---------------------------------------------------------------------------
+
+
+def test_grid_points_empty_grid_is_single_empty_point():
+    assert grid_points({}) == [{}]
+
+
+def test_grid_points_product_order():
+    assert grid_points({"a": [1, 2], "b": [3]}) == [
+        {"a": 1, "b": 3}, {"a": 2, "b": 3}]
+
+
+def test_pareto_front_empty_and_single():
+    assert pareto_front([]) == []
+    row = {"cost_per_million": 1.0, "slowdown_geomean_p99": 2.0}
+    assert pareto_front([row]) == [row]
+
+
+def _rows(pairs):
+    return [{"cost_per_million": c, "slowdown_geomean_p99": s, "point_id": i}
+            for i, (c, s) in enumerate(pairs)]
+
+
+def test_pareto_front_ties_survive_together():
+    rows = _rows([(1, 2), (1, 2), (2, 1)])
+    front = pareto_front(rows)
+    assert len(front) == 3                 # exact ties dominate neither way
+
+
+def test_pareto_front_drops_dominated_and_nan():
+    rows = _rows([(1, 5), (2, 3), (3, 4), (4, 1), (5, 2)])
+    rows.append({"cost_per_million": 0.1,
+                 "slowdown_geomean_p99": math.nan, "point_id": 9})
+    front = pareto_front(rows)
+    assert [(r["cost_per_million"], r["slowdown_geomean_p99"])
+            for r in front] == [(1, 5), (2, 3), (4, 1)]
+
+
+def test_epsilon_survivors_band_and_cap():
+    rows = _rows([(1.0, 1.0), (1.05, 1.05), (2.0, 2.0)])
+    keep = epsilon_survivors(rows, eps=0.10, cap=10)
+    assert {r["point_id"] for r in keep} == {0, 1}   # 2x point is out of band
+    assert len(epsilon_survivors(rows, eps=5.0, cap=2)) == 2
+
+
+# ---------------------------------------------------------------------------
+# robust-frontier reducer
+# ---------------------------------------------------------------------------
+
+
+def test_robust_front_requires_no_domination_anywhere():
+    by = {
+        # point 0 wins scenario A, loses B; point 1 the reverse; point 2 is
+        # non-dominated in both (cheapest in A, tied-best slowdown in B)
+        "A": _rows([(1, 5), (4, 4), (2, 2)]),
+        "B": _rows([(5, 1), (1, 5), (2, 1)]),
+    }
+    assert robust_front(by) == [2]
+
+
+def test_robust_front_needs_presence_in_every_scenario():
+    by = {"A": _rows([(1, 1)]), "B": _rows([(2, 2), (1, 1)])[1:]}
+    # point 0 is unbeatable in A but absent from B's row set
+    by["B"] = [{"cost_per_million": 1, "slowdown_geomean_p99": 1,
+                "point_id": 5}]
+    assert robust_front(by) == []
+    assert robust_front({}) == []
+
+
+# ---------------------------------------------------------------------------
+# search space
+# ---------------------------------------------------------------------------
+
+
+def test_search_space_validates_knobs():
+    with pytest.raises(ValueError):
+        SearchSpace(policy={"bogus": (1.0,)})
+    with pytest.raises(ValueError):
+        SearchSpace(fleet={"keepalive_s": (60.0,)})   # policy knob, wrong side
+    with pytest.raises(ValueError):
+        SearchSpace(policy={"target": ()})
+
+
+def test_search_space_points_and_active_knobs():
+    sp = SearchSpace(policy={"keepalive_s": (60.0, 600.0)},
+                     fleet={"warm_frac": (0.0, 0.5)})
+    assert sp.size() == 4 and len(sp.points()) == 4
+    assert "keepalive_s" in active_knobs(0)
+    assert "target" in active_knobs(1)
+    assert "prewarm_s" in active_knobs(2)
+    assert "target" not in active_knobs(0)
+
+
+# ---------------------------------------------------------------------------
+# traced policy axes: cc and pre-warm sweep through one vmapped scan
+# ---------------------------------------------------------------------------
+
+
+def test_cc_is_a_traced_batch_axis(trace):
+    jf = JaxFleet(node_memory_mb=8192.0)
+    rows = evaluate_points(trace, JaxPolicy(kind=1, window_s=60, target=0.7),
+                           jf, [{"cc": 1.0}, {"cc": 4.0}])
+    singles = [simulate_chunked(trace, JaxPolicy(kind=1, window_s=60,
+                                                 target=0.7, cc=cc), fleet=jf)
+               for cc in (1, 4)]
+    for row, single in zip(rows, singles):
+        assert row["instances_mean"] == pytest.approx(
+            single["instances_mean"], rel=1e-4)
+    # packing 4 requests per instance needs fewer instances
+    assert rows[1]["instances_mean"] < rows[0]["instances_mean"]
+
+
+def test_prewarm_trades_memory_for_latency(trace):
+    jf = JaxFleet(node_memory_mb=8192.0)
+    rows = evaluate_points(trace, JaxPolicy(kind=2, keepalive_s=1800.0), jf,
+                           [{"prewarm_s": 0.0}, {"prewarm_s": 4.0}])
+    assert rows[1]["slowdown_geomean_p99"] <= rows[0]["slowdown_geomean_p99"]
+    assert rows[1]["mem_total_mean"] > rows[0]["mem_total_mean"]
+
+
+def test_hybrid_policyspec_bridges_both_engines():
+    spec = PolicySpec(kind="hybrid", keepalive_s=900, prewarm_s=2.0)
+    assert spec.to_jax().kind == 2
+    assert spec.to_jax().prewarm_s == 2.0
+    pol = spec.factory()(0)
+    assert pol.max_s == 900 and pol.synchronous
+
+
+# ---------------------------------------------------------------------------
+# scenario evaluation + the coarse/refine pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_evaluate_scenario_collapses_inert_axes():
+    pts = grid_points({"keepalive_s": [60.0, 600.0], "target": [0.5, 1.0]})
+    rows = evaluate_scenario("cold_tail", pts, scale=0.05)
+    assert len(rows) == 4
+    assert rows[0]["sims"] == 2            # target is inert for sync
+    # inert twins share one simulation bit-for-bit
+    by = {(r["keepalive_s"], r["target"]): r for r in rows}
+    assert by[(60.0, 0.5)]["cost_per_million"] == \
+        by[(60.0, 1.0)]["cost_per_million"]
+    assert by[(60.0, 0.5)]["point_id"] != by[(60.0, 1.0)]["point_id"]
+
+
+def test_point_scenario_keeps_static_cluster_static():
+    sc = get_scenario("cold_tail")
+    pinned = point_scenario(sc, {"keepalive_s": 300.0, "warm_frac": 0.5})
+    assert pinned.fleet is None            # fleet knob dropped: no fleet leg
+    assert pinned.policy.keepalive_s == 300.0
+    fc = get_scenario("fleet_cost_stress")
+    pinned = point_scenario(fc, {"keepalive_s": 300.0, "warm_frac": 0.5})
+    assert pinned.fleet.warm_frac == 0.5
+
+
+def test_frontier_search_small():
+    space = SearchSpace(policy={"keepalive_s": (60.0, 600.0)},
+                        fleet={"warm_frac": (0.0, 0.25)})
+    res = frontier_search(["cold_tail", "fleet_cost_stress"], space=space,
+                          scale=0.1, coarse_frac=0.5)
+    assert set(res.coarse) == {"cold_tail", "fleet_cost_stress"}
+    for name, rows in res.refined.items():
+        assert rows, name
+        # the refine pool is shared across scenarios
+        assert {r["point_id"] for r in rows} == \
+            {r["point_id"] for r in res.refined["cold_tail"]}
+        assert res.fronts[name], name
+        for r in res.fronts[name]:
+            assert np.isfinite(r["cost_per_million"])
+            assert np.isfinite(r["slowdown_geomean_p99"])
+    # every robust point is non-dominated in every scenario's row set
+    for pid in res.robust_ids:
+        for rows in res.refined.values():
+            assert any(r["point_id"] == pid for r in rows)
+    summary = res.summary()
+    assert summary["n_points"] == 4 and "scenarios" in summary
+
+
+@pytest.mark.slow
+def test_frontier_spot_check_confirms_winners():
+    """Acceptance: sampled winners on an oracle-feasible scenario hold the
+    15% band (cold_tail's short-keepalive family is squarely inside the
+    calibrated envelope); refuted classes are demoted, not shipped."""
+    from repro.opt import oracle_spot_check
+    space = SearchSpace(policy={"keepalive_s": (60.0, 300.0)},
+                        fleet={"warm_frac": (0.0,)})
+    res = frontier_search(["cold_tail"], space=space, scale=0.25,
+                          coarse_frac=0.4)
+    recs = oracle_spot_check(res, k=2)
+    assert recs
+    assert any(r["pass"] for r in recs)
+    confirmed = {r["point_id"] for r in res.fronts["cold_tail"]}
+    for r in recs:
+        if r["demoted"]:
+            assert r["point_id"] not in confirmed
+
+
+def test_frontier_cli_writes_artifacts(tmp_path):
+    from repro.launch.frontier import main
+    rc = main(["--scenario", "cold_tail", "--scale", "0.1",
+               "--coarse-frac", "0.5", "--spot-check", "0",
+               "--out-dir", str(tmp_path), "--quiet"])
+    assert rc == 0
+    assert (tmp_path / "frontier_cold_tail.csv").exists()
+    assert (tmp_path / "frontier_robust.csv").exists()   # header even if empty
+    assert (tmp_path / "frontier.json").exists()
+    header = (tmp_path / "frontier_cold_tail.csv").read_text().splitlines()[0]
+    assert "cost_per_million" in header and "front" in header
