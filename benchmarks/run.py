@@ -41,12 +41,35 @@ MODULES = [
     "benchmarks.fig8_tradeoff",
     "benchmarks.fig9_large_scale",
     "benchmarks.fig10_fleet_cost",
+    "benchmarks.fig11_learned_policy",
     "benchmarks.scenario_suite",
     "benchmarks.table1_trends",
     "benchmarks.roofline",
 ]
 
 QUICK_SCALE = 0.1
+
+# hypervolume reference point on the (cost_per_million, p99 slowdown) plane
+# for the quick tier's 0.1x coarse grids: generously above every scenario's
+# observed front so the dominated area is well-defined and a frontier that
+# retreats ANYWHERE shrinks it.  The gate metric is 1/hypervolume
+# (lower-is-better, like every other gate metric).
+HV_REF = (2000.0, 50.0)
+
+
+def quick_hypervolume() -> dict:
+    """Per-scenario frontier hypervolume over the DEFAULT_SPACE coarse grid
+    (ROADMAP: multi-objective CI tracking — a point-wise metric gate misses
+    a front that got strictly worse between its endpoints)."""
+    from repro.opt import DEFAULT_SPACE, evaluate_scenario, hypervolume
+    from repro.scenarios import list_scenarios
+    points = DEFAULT_SPACE.points()
+    out = {}
+    for name in list_scenarios():
+        rows = evaluate_scenario(name, points, scale=QUICK_SCALE)
+        hv = hypervolume(rows, *HV_REF)
+        out[f"frontier_hv_inv_{name}"] = 1.0 / hv if hv > 0 else math.inf
+    return out
 
 
 def run_quick() -> dict:
@@ -70,6 +93,10 @@ def run_quick() -> dict:
             if r["engine"] == "simjax":
                 metrics[f"{name}_p99"] = r["slowdown_geomean_p99"]
                 metrics[f"{name}_simjax_wall_s"] = r["wall_s"]
+
+    t0 = time.time()
+    metrics.update(quick_hypervolume())
+    metrics["frontier_hv_wall_s"] = round(time.time() - t0, 3)
     return metrics
 
 

@@ -1,7 +1,10 @@
 """The REAL control plane: router + queue + autoscaler reconciler.
 
 This is the production-style implementation of the same policy objects used
-by the simulators.  Workers are pluggable (paper §3.4's KWOK methodology):
+by the simulators — any ``repro.core.policy_api`` family lowers to them via
+``PolicySpec.factory()``, so a policy registered once (including the
+gradient-learned keepalive) drives the oracle, the traced scan, AND this
+control plane.  Workers are pluggable (paper §3.4's KWOK methodology):
 
 * ``SimWorkerBackend``  — virtual-clock workers (instance creation latency,
   per-request service times); the control plane logic is real, the workers

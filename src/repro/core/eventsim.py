@@ -1,6 +1,9 @@
 """Discrete-event cluster simulator — the oracle for the paper's experiments.
 
 Replays a Trace against a Cluster under a Policy (per function), modelling:
+(policies are lowered from ``repro.core.policy_api`` family registrations
+via ``PolicySpec.factory()`` — the oracle leg every registered policy
+family, hand-written or gradient-learned, must hold the parity band on)
   instance lifecycle (cold start, busy/idle, keepalive expiry, teardown),
   container concurrency slots, request queueing (sync buffers per new
   instance, async queues until any instance frees), node failures with

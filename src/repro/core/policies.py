@@ -146,9 +146,103 @@ class HybridHistogramPolicy(Policy):
         return float(np.clip(q * 1.1, self.min_s, self.max_s))
 
 
+# ---------------------------------------------------------------------------
+# learned keepalive: the gradient-searched policy family
+# ---------------------------------------------------------------------------
+#
+# A tiny MLP maps a function's observed arrival rate to its keepalive — the
+# smooth, parameterized generalization of the hybrid histogram's rate->warmth
+# heuristic.  The NETWORK lives here (numpy by default, jnp when the fluid
+# simulator passes ``xp=jax.numpy``) so the oracle twin below and the traced
+# ``repro.core.policy_api.LearnedKeepaliveFamily`` evaluate literally the
+# same arithmetic; ``repro.opt.learned`` trains ``theta`` by ``jax.grad``
+# through the chunked scan.
+
+#: keepalive output range (log-interpolated by the network's sigmoid head)
+LEARNED_KA_MIN_S = 20.0
+LEARNED_KA_MAX_S = 1800.0
+#: arrival-rate feature normalization: z = (ln lam - _F_MU) / _F_SD
+_F_MU, _F_SD = -4.6, 3.0
+_LEARNED_HIDDEN = 4
+
+
+def init_theta(seed: int = 0) -> dict:
+    """Deterministic init with a ZERO output layer: the untrained network
+    emits exactly keepalive=600 s for every rate (the paper's default
+    ladder point), so at init the learned family is bit-identical to a
+    plain sync keepalive on BOTH engines and passes the parity gate before
+    any training.  ``w2=0`` also zeroes the first-step gradient into
+    ``w1``/``b1`` (standard zero-init-head trick); ``w2`` moves first and
+    unfreezes them."""
+    rng = np.random.default_rng(seed)
+    h = _LEARNED_HIDDEN
+    span = math.log(LEARNED_KA_MAX_S / LEARNED_KA_MIN_S)
+    s0 = math.log(600.0 / LEARNED_KA_MIN_S) / span       # target sigmoid out
+    return {
+        "w1": (0.3 * rng.standard_normal(h)).astype(np.float32),
+        "b1": np.zeros(h, np.float32),
+        "w2": np.zeros(h, np.float32),
+        "b2": np.float32(math.log(s0 / (1.0 - s0))),
+    }
+
+
+def learned_keepalive(theta, lam, xp=np):
+    """Per-function keepalive from the arrival rate ``lam`` (scalar or (F,)).
+
+    ka = KA_MIN * (KA_MAX/KA_MIN) ** sigmoid(MLP(z)),  z = (ln lam - mu)/sd
+
+    ``xp`` selects the array namespace: numpy for the oracle / control plane,
+    ``jax.numpy`` for the traced scan — one formula, two engines.
+    """
+    lam = xp.maximum(xp.asarray(lam, xp.float32), 1e-9)
+    z = (xp.log(lam) - _F_MU) / _F_SD
+    h = xp.tanh(z[..., None] * theta["w1"] + theta["b1"])
+    u = h @ theta["w2"] + theta["b2"]
+    s = 1.0 / (1.0 + xp.exp(-u))
+    log_span = xp.log(LEARNED_KA_MAX_S / LEARNED_KA_MIN_S)
+    return LEARNED_KA_MIN_S * xp.exp(s * log_span)
+
+
+@dataclasses.dataclass
+class LearnedKeepalivePolicy(Policy):
+    """Oracle twin of the learned family: sync creation path, keepalive from
+    the SAME network over the function's observed arrival rate.
+
+    The rate estimate is arrivals-so-far over elapsed time with a one-minute
+    prior window, which converges to the stationary mean the fluid engine
+    feeds the network (``lam0``); the measurement window starts at T/2, so
+    the early-estimate transient is excluded from parity metrics.
+    """
+    theta: Optional[dict] = None
+    container_concurrency: int = 1
+    synchronous: bool = True
+
+    def __post_init__(self):
+        Policy.__init__(self)
+        if self.theta is None:
+            self.theta = init_theta()
+        self._arrivals = 0
+        self._last_t = 0.0
+
+    def _rate(self) -> float:
+        return max(self._arrivals, 1) / max(self._last_t, 60.0)
+
+    def on_arrival(self, t, idle, busy_slots, starting, queued):
+        self._arrivals += 1
+        self._last_t = max(self._last_t, t)
+        if idle == 0 and busy_slots == 0:
+            return PolicyDecision(create=1)
+        return PolicyDecision()
+
+    def keepalive(self, t):
+        self._last_t = max(self._last_t, t)
+        return float(learned_keepalive(self.theta, self._rate()))
+
+
 def make_policy(name: str, **kw) -> Policy:
     return {
         "sync": SyncKeepalivePolicy,
         "async": AsyncConcurrencyPolicy,
         "hybrid": HybridHistogramPolicy,
+        "learned": LearnedKeepalivePolicy,
     }[name](**kw)

@@ -1,0 +1,442 @@
+"""Policy-as-pytree: the pluggable, differentiable autoscaling-policy API.
+
+A policy FAMILY is a registered, self-describing object instead of a bare
+``kind`` integer branched inside the simulator.  Each family bundles:
+
+* **axes** — the declared parameters (``AxisSpec``: bounds, sweepable /
+  learnable flags).  ``repro.opt.space`` derives its search space and
+  active-knob tables from these declarations instead of hand-written maps,
+  and ``repro.opt.learned`` trains the ``learnable`` leaves by ``jax.grad``
+  through the chunked scan.  Params flow through the scan as a traced
+  PYTREE (``{axis: leaf}``), so arbitrary-shaped policies — a weight
+  pytree, not just four scalar knobs — vmap as batch axes.
+* **decide** — a pure ``(params, PolicyObs) -> JaxDecision`` step usable
+  from the traced ``lax.scan`` (``repro.core.simjax``); bit-for-bit the
+  math that used to live in ``simjax._make_step``'s per-kind branches.
+* **oracle_factory** — lowers the same spec to the discrete-event oracle's
+  stateful per-function ``Policy`` objects (``eventsim`` and the real
+  ``control_plane`` share them), so every registered family is replayable
+  through BOTH engines and must hold the parity band.
+* **metadata** the frontier engine used to hard-code: synchronous-tail
+  behavior (``synchronous_tail`` drives the finite-sample percentile
+  correction), the async cold-start factor, and whether the family reads
+  the concurrency window buffer (``uses_window`` sizes the scan carry).
+
+New policies (spot-aware, cc-fidelity, bursty-gap variants, learned
+controllers) become registry entries — not simulator surgery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, NamedTuple, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policies import (AsyncConcurrencyPolicy, HybridHistogramPolicy,
+                                 LearnedKeepalivePolicy, Policy,
+                                 SyncKeepalivePolicy, init_theta,
+                                 learned_keepalive)
+from repro.core.trace import KA_GRID
+
+# hybrid floor on the adaptive keepalive, mirroring HybridHistogramPolicy
+# .min_s (its max_s cap maps to the ``keepalive_s`` axis)
+HYBRID_MIN_KA_S = 30.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisSpec:
+    """One declared policy parameter: its bounds and its role.
+
+    ``sweepable`` axes are grid axes the frontier engine may batch over;
+    ``learnable`` axes are pytree leaves ``jax.grad`` trains through the
+    scan.  Bounds are validated at ``JaxPolicy`` construction and on every
+    sweep point, so a NaN or out-of-range knob fails loudly instead of
+    propagating through the scan to the CI gate's fail-closed check."""
+    name: str
+    lo: float
+    hi: float
+    sweepable: bool = True
+    learnable: bool = False
+    doc: str = ""
+
+
+class PolicyObs(NamedTuple):
+    """What one simulated tick shows a policy (all (F,)-vectorized).
+
+    ``demand`` is the engine-computed count of arrivals/backlog not covered
+    by existing or in-flight capacity — the creation request a synchronous
+    policy answers; ``avg`` is the window-averaged concurrency an async
+    reconciler tracks; ``lam`` is the long-run mean arrival rate per
+    function (the renewal-expiry and learned-feature input)."""
+    arr: Any            # arrivals this tick
+    queue: Any          # backlog after dispatch
+    inst: Any           # warm instances
+    pending: Any        # instances still cold-starting
+    idle: Any           # integral idle count (async retire cap)
+    idle_frac: Any      # expected fractional idle mass (sync expiry flux)
+    free: Any           # free warm slots before this tick's dispatch
+    avg: Any            # window-averaged concurrency
+    demand: Any         # unserved demand requesting creation
+    lam: Any            # long-run mean arrival rate per function
+    gap_p99: Any        # empirical p99 inter-arrival gap per function
+    alive_tab: Any      # (F, K) E[min(gap, KA_GRID[k])] per function
+    tail_tab: Any       # (F, K) P(gap > KA_GRID[k]) per function
+    dt: float           # tick length (static)
+
+
+class JaxDecision(NamedTuple):
+    """A policy step's output: instances to create / retire per function,
+    plus how many seconds of the cold start the family hides (the hybrid's
+    pre-warm lead; charged back as standing pre-warmed memory)."""
+    create: Any
+    retire: Any
+    cold_hide: Any = 0.0
+
+
+def renewal_expiry_rate(lam_inst, ka, dt_cap: float = 60.0):
+    """Fluid keepalive expiry, renewal-matched for POISSON gaps: rate
+    lam/(e^{lam*ka}-1) per idle instance reproduces the oracle's
+    continuous-idleness timer in expectation (1/ka as lam->0, ~never for
+    chatty fns).  Kept as the analytic reference; the families below use
+    ``empirical_expiry_rate``, which generalizes this to the trace's
+    actual gap distribution and coincides with it when gaps are
+    exponential."""
+    return lam_inst / jnp.expm1(jnp.minimum(lam_inst * ka, dt_cap))
+
+
+def _interp_table(tab, ka):
+    """Per-function linear interpolation of a (F, K) gap table over KA_GRID
+    at the traced keepalive ``ka`` (scalar or (F,)); piecewise-linear, so
+    the expiry flux stays differentiable w.r.t. the keepalive."""
+    grid = jnp.asarray(KA_GRID, jnp.float32)
+    ka_c = jnp.clip(ka, grid[0], grid[-1])
+    idx = jnp.clip(jnp.searchsorted(grid, ka_c, side="right") - 1,
+                   0, len(KA_GRID) - 2)
+    g0, g1 = grid[idx], grid[idx + 1]
+    rows = jnp.arange(tab.shape[0])
+    e0, e1 = tab[rows, idx], tab[rows, idx + 1]
+    w = (ka_c - g0) / (g1 - g0)
+    return e0 + w * (e1 - e0)
+
+
+def empirical_expiry_rate(obs: "PolicyObs", ka):
+    """Fluid keepalive expiry matched to the EMPIRICAL gap distribution.
+
+    An oracle instance's idle cycle lasts E[min(gap, ka)] and ends in a
+    teardown with probability P(gap > ka), so the renewal-exact expiry
+    rate per idle instance is
+
+        r = P(gap > ka) / E[min(gap, ka)]
+
+    with both moments measured from the trace (``trace.gap_tables``).  For
+    exponential gaps this IS the analytic ``renewal_expiry_rate``
+    lam/(e^{lam*ka}-1); for the bursty / time-warped distributions the
+    analytic form under-expires (clustered gaps rarely exceed a short ka
+    where an exponential tail would), and matching only the cycle length
+    would over-expire burst-heavy functions.  Instance thinning keeps the
+    classic scaling approximation: per-instance gaps at 1/inst the rate,
+    i.e. gap_inst ~ inst * gap, so both tables are read at ka/inst — an
+    identity for exponential gaps."""
+    inst = jnp.maximum(obs.inst, 1.0)
+    ka_arg = ka / inst
+    e_alive = inst * _interp_table(obs.alive_tab, ka_arg)
+    p_tail = _interp_table(obs.tail_tab, ka_arg)
+    return p_tail / jnp.maximum(e_alive, 1e-9)
+
+
+class PolicyFamily:
+    """Base class: metadata + the two lowering directions (traced decide,
+    oracle factory).  Subclass and ``register_family`` to add a policy."""
+
+    #: registry key; static under jit (selects the compiled branch)
+    name: str = ""
+    #: legacy integer id (``JaxPolicy.kind``); None for post-redesign families
+    kind: Optional[int] = None
+    #: per-request latency tails are iid (sync cold starts) rather than
+    #: correlated backlog episodes — drives the finite-sample percentile
+    #: correction in the slowdown estimator
+    synchronous_tail: bool = True
+    #: multiplier on the modelled cold-start wait (an async reconciler adds
+    #: the reconcile-tick delay before the sandbox is even requested)
+    cold_factor: float = 1.0
+    #: reads the window-averaged concurrency: the scan carries a real
+    #: window buffer (length window_s/dt) instead of a depth-1 stub
+    uses_window: bool = False
+    axes: Tuple[AxisSpec, ...] = ()
+
+    # -- declarations ------------------------------------------------------
+
+    def axis(self, name: str) -> AxisSpec:
+        for a in self.axes:
+            if a.name == name:
+                return a
+        raise KeyError(f"policy family {self.name!r} has no axis {name!r}")
+
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(a.name for a in self.axes)
+
+    def sweepable_axes(self) -> Tuple[str, ...]:
+        return tuple(a.name for a in self.axes if a.sweepable)
+
+    def learnable_axes(self) -> Tuple[str, ...]:
+        return tuple(a.name for a in self.axes if a.learnable)
+
+    # -- lowering ----------------------------------------------------------
+
+    def init_params(self, policy) -> dict:
+        """The params pytree for one ``JaxPolicy`` — {axis name: leaf}.
+        Default: pull each declared axis off the policy's field of the same
+        name, falling back to the policy's ``extra`` mapping for axes the
+        legacy field set does not carry (families with structured leaves
+        override)."""
+        out = {}
+        extra = getattr(policy, "extra", None) or {}
+        for a in self.axes:
+            if hasattr(policy, a.name):
+                out[a.name] = float(getattr(policy, a.name))
+            elif a.name in extra:
+                out[a.name] = float(extra[a.name])
+            else:
+                raise ValueError(
+                    f"policy family {self.name!r}: no value for axis "
+                    f"{a.name!r} — pass it via JaxPolicy(extra={{...}})")
+        return out
+
+    def decide(self, params: Mapping, obs: PolicyObs) -> JaxDecision:
+        raise NotImplementedError
+
+    def oracle_factory(self, spec) -> Callable[[int], Policy]:
+        """Lower an engine-neutral ``PolicySpec`` to per-function oracle
+        policy objects (the ``eventsim`` / ``control_plane`` side)."""
+        raise NotImplementedError
+
+    # -- validation --------------------------------------------------------
+
+    def validate(self, params: Mapping) -> None:
+        """Reject NaN / out-of-bounds leaves at construction time (the scan
+        would otherwise propagate a NaN keepalive silently until the CI
+        gate's final fail-closed check)."""
+        for a in self.axes:
+            if a.name not in params:
+                raise ValueError(f"policy family {self.name!r}: missing "
+                                 f"param {a.name!r}")
+            for leaf in _leaves(params[a.name]):
+                vals = np.asarray(leaf, np.float64)
+                if not np.all(np.isfinite(vals)):
+                    raise ValueError(
+                        f"policy family {self.name!r}: non-finite value in "
+                        f"param {a.name!r} ({vals!r})")
+                if np.any(vals < a.lo) or np.any(vals > a.hi):
+                    raise ValueError(
+                        f"policy family {self.name!r}: param {a.name!r} out "
+                        f"of bounds [{a.lo}, {a.hi}] (got {vals!r})")
+        extra = set(params) - set(self.axis_names())
+        if extra:
+            raise ValueError(f"policy family {self.name!r}: unknown params "
+                             f"{sorted(extra)}; declared axes are "
+                             f"{sorted(self.axis_names())}")
+
+
+def _leaves(x):
+    if isinstance(x, Mapping):
+        for v in x.values():
+            yield from _leaves(v)
+    elif isinstance(x, (list, tuple)):
+        for v in x:
+            yield from _leaves(v)
+    else:
+        yield x
+
+
+# every family shares the container-concurrency axis: the ENGINE reads it
+# (slot capacity, memory packing), so it acts under any policy and
+# ``register_family`` requires it to be declared (reuse this spec)
+CC_AXIS = AxisSpec("cc", 1.0, 64.0, doc="container concurrency (slots per "
+                   "instance; engine-level packing knob)")
+_CC_AXIS = CC_AXIS
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_FAMILIES: dict[str, PolicyFamily] = {}
+_BY_KIND: dict[int, PolicyFamily] = {}
+
+
+def register_family(family: PolicyFamily) -> PolicyFamily:
+    if not family.name:
+        raise ValueError("policy family needs a name")
+    if family.name in _FAMILIES:
+        raise ValueError(f"duplicate policy family {family.name!r}")
+    if "cc" not in family.axis_names():
+        raise ValueError(
+            f"policy family {family.name!r} must declare a 'cc' axis — the "
+            f"engine reads params['cc'] for slot capacity and memory "
+            f"packing (reuse policy_api.CC_AXIS)")
+    _FAMILIES[family.name] = family
+    if family.kind is not None:
+        if family.kind in _BY_KIND:
+            raise ValueError(f"duplicate legacy kind {family.kind}")
+        _BY_KIND[family.kind] = family
+    return family
+
+
+def get_family(key: Union[str, int]) -> PolicyFamily:
+    """Look a family up by registry name (or legacy integer kind)."""
+    if isinstance(key, (int, np.integer)) and not isinstance(key, bool):
+        try:
+            return _BY_KIND[int(key)]
+        except KeyError:
+            raise KeyError(f"unknown policy kind {key}; registered kinds: "
+                           f"{sorted(_BY_KIND)}") from None
+    try:
+        return _FAMILIES[key]
+    except KeyError:
+        raise KeyError(f"unknown policy family {key!r}; registered: "
+                       f"{sorted(_FAMILIES)}") from None
+
+
+def list_families() -> list[str]:
+    return sorted(_FAMILIES)
+
+
+def sweepable_policy_axes() -> set:
+    """Union of every registered family's sweepable axes — the policy side
+    of ``repro.opt.space.SWEEPABLE`` (derived, not hand-written)."""
+    out: set = set()
+    for fam in _FAMILIES.values():
+        out |= set(fam.sweepable_axes())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the three ported families (bit-for-bit the former _make_step branches)
+# ---------------------------------------------------------------------------
+
+
+class SyncKeepaliveFamily(PolicyFamily):
+    """AWS-Lambda-like (paper §2.1.1): create on the request critical path,
+    retire idle instances by the renewal-matched keepalive expiry flux."""
+    name = "sync"
+    kind = 0
+    synchronous_tail = True
+    axes = (AxisSpec("keepalive_s", 1.0, 86_400.0,
+                     doc="idle-instance retention"), _CC_AXIS)
+
+    def _ka_eff(self, params, obs):
+        return params["keepalive_s"]
+
+    def decide(self, params, obs):
+        ka_eff = self._ka_eff(params, obs)
+        r = empirical_expiry_rate(obs, ka_eff)
+        # survival form of the expiry flux: equals r*dt to first order but
+        # saturates at the idle mass, so a large empirical rate (bursty
+        # functions under a short keepalive) can never retire instances
+        # that do not exist and drive the carry negative
+        retire = obs.idle_frac * -jnp.expm1(-r * obs.dt)
+        return JaxDecision(create=obs.demand, retire=retire)
+
+    def oracle_factory(self, spec):
+        return lambda f: SyncKeepalivePolicy(
+            keepalive_s=spec.keepalive_s,
+            container_concurrency=spec.container_concurrency)
+
+
+class AsyncWindowFamily(PolicyFamily):
+    """Knative-KPA-like (paper §2.1.2): reconcile instance count to
+    ceil(window_avg(concurrency) / (target * cc)) each tick."""
+    name = "async"
+    kind = 1
+    synchronous_tail = False     # backlog episodes correlate request tails
+    cold_factor = 1.5            # reconcile tick precedes the sandbox request
+    uses_window = True
+    axes = (AxisSpec("target", 0.05, 4.0, doc="utilization target"), _CC_AXIS)
+
+    def decide(self, params, obs):
+        desired = jnp.ceil(obs.avg / (params["target"] * params["cc"]) - 1e-9)
+        have = obs.inst + obs.pending
+        create = jnp.maximum(desired - have, 0.0)
+        retire = jnp.minimum(jnp.maximum(have - desired, 0.0), obs.idle)
+        return JaxDecision(create=create, retire=retire)
+
+    def oracle_factory(self, spec):
+        return lambda f: AsyncConcurrencyPolicy(
+            window_s=spec.window_s, target=spec.target,
+            container_concurrency=spec.container_concurrency,
+            tick_s=spec.tick_s)
+
+
+class HybridHistogramFamily(SyncKeepaliveFamily):
+    """Shahrad'20 hybrid histogram (beyond-paper): keepalive ~ the p99 of
+    the function's idle-gap distribution (clipped to [HYBRID_MIN_KA_S,
+    keepalive_s]) plus a pre-warm lead that hides part of the cold start."""
+    name = "hybrid"
+    kind = 2
+    axes = (AxisSpec("keepalive_s", 1.0, 86_400.0,
+                     doc="cap on the adaptive keepalive (maps to max_s)"),
+            _CC_AXIS,
+            AxisSpec("prewarm_s", 0.0, 300.0, doc="pre-warm lead"))
+
+    def _ka_eff(self, params, obs):
+        # the oracle keeps warm for ~the p99 of the function's OBSERVED
+        # idle-gap histogram x 1.1 headroom; the fluid twin uses the
+        # trace-side empirical gap quantile (``trace.gap_quantile``) rather
+        # than a Poisson quantile at the mean rate — on time-warped /
+        # bursty traces the Poisson -ln(0.01)/lam overstates chatty
+        # functions' gaps severalfold and breaks the parity band
+        return jnp.clip(1.1 * obs.gap_p99,
+                        HYBRID_MIN_KA_S, params["keepalive_s"])
+
+    def decide(self, params, obs):
+        base = super().decide(params, obs)
+        return base._replace(cold_hide=params["prewarm_s"])
+
+    def oracle_factory(self, spec):
+        return lambda f: HybridHistogramPolicy(
+            max_s=spec.keepalive_s,
+            container_concurrency=spec.container_concurrency)
+
+
+# ---------------------------------------------------------------------------
+# the first post-redesign client: a gradient-learned keepalive policy
+# ---------------------------------------------------------------------------
+
+
+class LearnedKeepaliveFamily(SyncKeepaliveFamily):
+    """Per-function adaptive keepalive as a tiny MLP over the observed
+    arrival rate — the smooth, parameterized generalization of the hybrid
+    heuristic.  ``theta`` is a LEARNABLE pytree leaf axis: it rides the
+    scan as traced leaves, so ``jax.grad`` through ``simulate_chunked``'s
+    step math trains it on a differentiable cost+latency surrogate
+    (``repro.opt.learned``); the oracle spot-check machinery gates what the
+    trained policy may claim.  The network itself lives in
+    ``repro.core.policies.learned_keepalive`` so the oracle twin evaluates
+    identical arithmetic."""
+    name = "learned"
+    kind = 3
+    axes = (_CC_AXIS,
+            AxisSpec("theta", -1e3, 1e3, sweepable=False, learnable=True,
+                     doc="MLP weights: per-function keepalive from rate"))
+
+    def init_params(self, policy) -> dict:
+        theta = policy.theta if policy.theta is not None else init_theta()
+        return {"cc": float(policy.cc), "theta": theta}
+
+    def _ka_eff(self, params, obs):
+        # the feature is the FUNCTION's rate (what the oracle twin can
+        # estimate online); the expiry conversion stays per-instance
+        return learned_keepalive(params["theta"], obs.lam, xp=jnp)
+
+    def oracle_factory(self, spec):
+        theta = getattr(spec, "theta", None)
+        return lambda f: LearnedKeepalivePolicy(
+            theta=theta, container_concurrency=spec.container_concurrency)
+
+
+register_family(SyncKeepaliveFamily())
+register_family(AsyncWindowFamily())
+register_family(HybridHistogramFamily())
+register_family(LearnedKeepaliveFamily())

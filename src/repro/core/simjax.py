@@ -18,7 +18,15 @@ Numeric policy and fleet parameters are *traced*, not compile-time
 constants, so ``repro.fleet.sweep`` can ``vmap`` thousands of policy
 configurations through one compiled scan (the fast path behind the Fig. 8 /
 Fig. 10 trade-off frontiers).  Only structural sizes (window buffer,
-cold-start/provision pipeline depths, policy kind) are static.
+cold-start/provision pipeline depths, the policy FAMILY name) are static.
+
+Policies dispatch through ``repro.core.policy_api``: the scan asks the
+registered family for one pure ``decide(params, PolicyObs) -> JaxDecision``
+call per tick, with ``params`` a traced PYTREE ({axis: leaf}) rather than a
+fixed four-knob vector — a learned policy's weight pytree batches exactly
+like a keepalive scalar.  Family metadata (synchronous tails, async cold
+factor, window-buffer use) replaces the per-kind special cases that used to
+be duplicated here and in ``repro.opt``.
 
 Approximations vs the discrete-event oracle (validated in tests):
 * fluid service: completions per tick = in_service * dt / mean_dur_f
@@ -44,36 +52,62 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.eventsim import SimConfig
-from repro.core.trace import Trace, rate_matrix
+from repro.core.policy_api import (HYBRID_MIN_KA_S, PolicyObs,  # noqa: F401
+                                   get_family)
+from repro.core.trace import Trace, gap_statistics, rate_matrix
 
 
 @dataclasses.dataclass(frozen=True)
 class JaxPolicy:
-    """Branchless policy parameters; kind: 0=sync keepalive, 1=async window,
-    2=hybrid histogram (Shahrad'20: adaptive keepalive capped at
-    ``keepalive_s`` plus a ``prewarm_s`` pre-warm lead).
+    """One traced policy configuration: a registered FAMILY plus its params.
 
-    ``keepalive_s``/``target``/``cc``/``prewarm_s`` are TRACED (sweepable
-    batch axes, see ``_PPOL``); only ``kind`` and ``window_s`` (the window
-    buffer depth) are structural."""
-    kind: int
+    ``family`` names a ``repro.core.policy_api`` registry entry ("sync",
+    "async", "hybrid", "learned", ...); the legacy integer ``kind`` is kept
+    as an alias (0/1/2/3) and either selector may be given.  ``params()``
+    lowers the declared axes to the traced params PYTREE the scan consumes
+    — every leaf (scalar knob or weight array) is a sweepable/learnable
+    batch axis.  Only ``family`` and ``window_s`` (the window buffer depth)
+    are structural.  Knob values are validated against the family's
+    declared bounds at construction: a NaN or out-of-range keepalive fails
+    HERE, not at the end of a scan."""
+    kind: int = -1
     keepalive_s: float = 600.0
     window_s: float = 60.0
     target: float = 0.7
     cc: int = 1
     prewarm_s: float = 0.0
+    family: str = ""
+    theta: Any = None          # learnable pytree (learned family)
+    extra: Any = None          # {axis: value} for axes beyond these fields
 
-    def params(self) -> np.ndarray:
-        """The traced parameter vector (see _PPOL indices)."""
-        return np.asarray([self.keepalive_s, self.target, self.cc,
-                           self.prewarm_s], np.float32)
+    def __post_init__(self):
+        if not self.family:
+            if self.kind < 0:
+                raise ValueError("JaxPolicy needs a family name or a "
+                                 "legacy kind")
+            object.__setattr__(self, "family", get_family(self.kind).name)
+        fam = get_family(self.family)      # raises KeyError on unknown names
+        if fam.kind is not None:
+            object.__setattr__(self, "kind", fam.kind)
+        for nm in ("keepalive_s", "window_s", "target", "cc", "prewarm_s"):
+            if not np.isfinite(float(getattr(self, nm))):
+                raise ValueError(f"JaxPolicy.{nm} is not finite: "
+                                 f"{getattr(self, nm)!r}")
+        if self.window_s <= 0:
+            raise ValueError(f"JaxPolicy.window_s must be > 0, got "
+                             f"{self.window_s!r}")
+        fam.validate(self.params())
+
+    def params(self) -> dict:
+        """The traced params pytree ({axis name: leaf})."""
+        return get_family(self.family).init_params(self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,14 +130,10 @@ class JaxFleet:
                            self.node_memory_mb], np.float32)
 
 
-# traced parameter vector layouts
-_PPOL = ("keepalive_s", "target", "cc", "prewarm_s")
+# traced fleet parameter vector layout (policy params are a pytree now —
+# see repro.core.policy_api; the fleet layer keeps its fixed vector)
 _PFLEET = ("min_nodes", "max_nodes", "util_target", "warm_frac",
            "cooldown_s", "node_memory_mb")
-
-# hybrid (kind=2) floor on the adaptive keepalive, mirroring
-# HybridHistogramPolicy.min_s (its max_s cap maps to JaxPolicy.keepalive_s)
-HYBRID_MIN_KA_S = 30.0
 
 
 def _init_state(f, cold_ticks, wbuf, prov_ticks, init_nodes):
@@ -112,27 +142,30 @@ def _init_state(f, cold_ticks, wbuf, prov_ticks, init_nodes):
             init_nodes * jnp.ones(()), jnp.zeros(prov_ticks), jnp.zeros(()))
 
 
-def _make_step(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
-               *, kind: int, dt: float, cold_ticks: int,
+def _make_step(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
+               cpu_consts,
+               static_nodes, *, family: str, dt: float, cold_ticks: int,
                wbuf: int, prov_ticks: int, has_fleet: bool):
     """One simulated tick, shared by the full-history scan (`_sim_impl`) and
     the chunked-summary scan (`_chunk_impl`) so the policy math exists once.
 
     ``lam0`` is the (F,) long-run mean arrival rate per function, the
-    input to the renewal-matched keepalive expiry below.  A windowed
-    estimate would adapt to regime changes, but its per-arrival spikes are
-    huge relative to sparse functions' rates and bias the (convex) expiry
-    rate exactly while an instance is alive; the stationary mean is exact
-    for the Poisson-renewal model (trace parity holds within a few percent
-    for Poisson gaps; strongly bursty gap distributions under SHORT
-    keepalives under-expire somewhat — see EXPERIMENTS.md).
+    input to the renewal-matched keepalive expiry (see
+    ``policy_api.renewal_expiry_rate``).  A windowed estimate would adapt
+    to regime changes, but its per-arrival spikes are huge relative to
+    sparse functions' rates and bias the (convex) expiry rate exactly while
+    an instance is alive; the stationary mean is exact for the
+    Poisson-renewal model (trace parity holds within a few percent for
+    Poisson gaps; strongly bursty gap distributions under SHORT keepalives
+    under-expire somewhat — see EXPERIMENTS.md).
 
-    All of ``pol`` (keepalive, utilization target, container concurrency,
-    hybrid pre-warm lead) is traced, so the frontier engine can vmap over
-    any of the four policy knobs; only ``kind`` selects branches.
+    All of ``pol`` (a params PYTREE — scalar knobs or weight arrays) is
+    traced, so the frontier engine can vmap over any leaf; only ``family``
+    (the registry key) selects the compiled decide branch.
     """
     f = dur.shape[0]
-    keepalive_s, target, ccf, prewarm_s = pol[0], pol[1], pol[2], pol[3]
+    fam = get_family(family)
+    ccf = pol["cc"]
 
     def step(state, tick):
         (inst, in_service, queue, starting, win, wcur,
@@ -196,49 +229,24 @@ def _make_step(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
         # backlog), mirroring what the oracle's reconcile tick observes
         concurrency = in_service + queue
 
-        # ---- instance-level policy ----
+        # ---- instance-level policy: registry dispatch ----
         win_ = win.at[:, wcur % wbuf].set(concurrency)
         n_valid = jnp.minimum(wcur + 1, wbuf).astype(jnp.float32)
         avg = win_.sum(axis=1) / n_valid
 
         pending = starting.sum(axis=1)
-        if kind == 1:          # async: reconcile to desired
-            desired = jnp.ceil(avg / (target * ccf) - 1e-9)
-            have = inst + pending
-            create = jnp.maximum(desired - have, 0.0)
-            retire = jnp.minimum(jnp.maximum(have - desired, 0.0), idle)
-        else:                  # sync: create per unserveable arrival, expire flux
-            if has_fleet:
-                # queued demand not already covered by in-flight cold starts
-                # re-requests creation — capacity-capped creates retry here
-                unserved = jnp.maximum(queue - pending * ccf, 0.0)
-            else:
-                unserved = jnp.maximum(arr - (free + pending), 0.0)
-            create = unserved
-            # Keepalive expiry, renewal-matched: the oracle tears down only
-            # after `keepalive` of CONTINUOUS idleness, so per renewal cycle
-            # an instance is alive E[min(gap, ka)] = (1-e^{-l*ka})/l with l
-            # its per-instance arrival rate.  A fluid decay rate r
-            # reproduces that expectation iff 1/(l+r) = (1-e^{-l*ka})/l,
-            # i.e. r = l/(e^{l*ka}-1) — which degrades to the pure timer
-            # 1/ka as l -> 0 and to ~no expiry for chatty functions, also
-            # matching the oracle's warm-hit probability P(gap < ka).
-            # The naive flux idle*dt/ka churns chatty functions forever.
-            lam_inst = jnp.maximum(lam0 / jnp.maximum(inst, 1.0), 1e-9)
-            if kind == 2:
-                # hybrid histogram (Shahrad'20): keep warm for ~the p99 of
-                # the function's idle-gap distribution x 1.1 headroom.  For
-                # the Poisson-renewal model that quantile is -ln(0.01)/lam,
-                # clipped to [HYBRID_MIN_KA_S, keepalive_s] (keepalive_s
-                # plays the policy's max_s cap) — short effective keepalives
-                # for chatty functions, bounded warmth for sparse ones.
-                ka_eff = jnp.clip(1.1 * 4.60517 / lam_inst,
-                                  HYBRID_MIN_KA_S, keepalive_s)
-            else:
-                ka_eff = keepalive_s
-            r_expire = lam_inst / jnp.expm1(
-                jnp.minimum(lam_inst * ka_eff, 60.0))
-            retire = idle_frac * dt * r_expire
+        if has_fleet:
+            # queued demand not already covered by in-flight cold starts
+            # re-requests creation — capacity-capped creates retry here
+            demand = jnp.maximum(queue - pending * ccf, 0.0)
+        else:
+            demand = jnp.maximum(arr - (free + pending), 0.0)
+        obs = PolicyObs(arr=arr, queue=queue, inst=inst, pending=pending,
+                        idle=idle, idle_frac=idle_frac, free=free, avg=avg,
+                        demand=demand, lam=lam0, gap_p99=gaps,
+                        alive_tab=gap_tab[0], tail_tab=gap_tab[1], dt=dt)
+        dec = fam.decide(pol, obs)
+        create, retire = dec.create, dec.retire
 
         inst = inst - retire
 
@@ -281,14 +289,14 @@ def _make_step(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
         future_slots = (inst + pending) * ccf
         drain = jnp.maximum(future_slots / dur, 1e-6)
         # async arrivals additionally wait for the reconcile tick that
-        # notices them before their instance even starts (sync creates on
-        # the arrival path, so its wait is the cold start alone); the
-        # hybrid's pre-warm lead hides up to prewarm_s of the cold start
-        # (the sandbox was requested that early), paid for below in
-        # standing pre-warmed memory
-        prewarm_hide = prewarm_s if kind == 2 else 0.0
+        # notices them before their instance even starts (the family's
+        # cold_factor; sync creates on the arrival path, so its wait is the
+        # cold start alone); a pre-warming family hides up to cold_hide
+        # seconds of the cold start (the sandbox was requested that early),
+        # paid for below in standing pre-warmed memory
+        prewarm_hide = dec.cold_hide
         cold_full = jnp.maximum(
-            (1.5 if kind == 1 else 1.0) * cold_ticks * dt - prewarm_hide, 0.0)
+            fam.cold_factor * cold_ticks * dt - prewarm_hide, 0.0)
         cold_wait = jnp.where(pending > 0, cold_full,
                               jnp.where(future_slots < 0.5,
                                         jnp.maximum(2.0 * cold_ticks * dt
@@ -322,11 +330,13 @@ def _make_step(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
     return step
 
 
-def _sim_impl(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
-              *, kind: int, n_ticks: int, dt: float, cold_ticks: int,
-              wbuf: int, prov_ticks: int, has_fleet: bool):
-    step = _make_step(arrivals, dur, mem, lam0, pol, fleet, cpu_consts,
-                      static_nodes, kind=kind, dt=dt,
+def _sim_impl(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
+              cpu_consts,
+              static_nodes, *, family: str, n_ticks: int, dt: float,
+              cold_ticks: int, wbuf: int, prov_ticks: int, has_fleet: bool):
+    step = _make_step(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
+                      cpu_consts,
+                      static_nodes, family=family, dt=dt,
                       cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
                       has_fleet=has_fleet)
     init_nodes = fleet[0] if has_fleet else jnp.asarray(static_nodes, jnp.float32)
@@ -336,7 +346,7 @@ def _sim_impl(arrivals, dur, mem, lam0, pol, fleet, cpu_consts, static_nodes,
 
 
 _simulate = partial(jax.jit, static_argnames=(
-    "kind", "n_ticks", "dt", "cold_ticks", "wbuf", "prov_ticks",
+    "family", "n_ticks", "dt", "cold_ticks", "wbuf", "prov_ticks",
     "has_fleet"))(_sim_impl)
 
 
@@ -378,7 +388,8 @@ def _prep_static(trace: Trace, policy: JaxPolicy, sim: SimConfig, dt: float):
     dur = jnp.asarray(np.maximum(dur_mean, dt * 0.25), jnp.float32)
     mem = jnp.asarray(trace.profile.memory_mb + sim.instance_overhead_mb, jnp.float32)
     cold_ticks = max(1, int(round(sim.cold_start_s / dt)))
-    wbuf = max(1, int(round(policy.window_s / dt))) if policy.kind == 1 else 1
+    wbuf = max(1, int(round(policy.window_s / dt))) \
+        if get_family(policy.family).uses_window else 1
     cpu_consts = (sim.cpu_create_worker_s, sim.cpu_create_master_s,
                   sim.cpu_teardown_worker_s, sim.cpu_teardown_master_s,
                   sim.cpu_request_s, sim.cpu_idle_per_s,
@@ -399,12 +410,17 @@ def simulate(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
     arr, dur, mem, cold_ticks, wbuf, cpu_consts = _prep(trace, policy, sim, dt)
     has_fleet = fleet is not None
     prov_ticks = max(1, int(round((fleet.provision_s if has_fleet else 0.0) / dt)))
-    pol = jnp.asarray(policy.params())
+    pol = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), policy.params())
     fl = jnp.asarray(fleet.params() if has_fleet else np.zeros(len(_PFLEET)),
                      jnp.float32)
     lam0 = jnp.asarray(np.asarray(arr).mean(axis=0) / dt, jnp.float32)
-    ys = _simulate(arr, dur, mem, lam0, pol, fl, cpu_consts, float(num_nodes),
-                   kind=policy.kind, n_ticks=arr.shape[0], dt=dt,
+    gq, alive_tab, tail_tab = gap_statistics(trace)
+    gaps = jnp.asarray(gq, jnp.float32)
+    gap_tab = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32),
+                           (alive_tab, tail_tab))
+    ys = _simulate(arr, dur, mem, lam0, gaps, gap_tab, pol, fl, cpu_consts,
+                   float(num_nodes),
+                   family=policy.family, n_ticks=arr.shape[0], dt=dt,
                    cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
                    has_fleet=has_fleet)
     vals = {n: np.asarray(v) for n, v in zip(_YS_NAMES, ys)}
@@ -412,7 +428,8 @@ def simulate(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
                         dur_median=np.asarray(trace.profile.dur_median),
                         dur_sigma=np.asarray(trace.profile.dur_sigma),
                         warm_latency_s=sim.warm_latency_s,
-                        sync_tail=policy.kind != 1, **vals)
+                        sync_tail=get_family(policy.family).synchronous_tail,
+                        **vals)
 
 
 def summarize(res: JaxSimResult, warmup_frac: float = 0.5,
@@ -546,9 +563,9 @@ def _slowdown_geomean(hist, arrtot, edges, dur_median, dur_sigma, warm,
     return float(np.exp(np.mean(np.log(np.maximum(0.5 * (lo + hi), 1.0)))))
 
 
-def _chunk_impl(state, arr_chunk, lam0, dur, mem, pol, fleet, cpu_consts,
-                static_nodes, edges, tick0, *, warm_tick: int,
-                total_ticks: int, kind: int, dt: float,
+def _chunk_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem, pol, fleet,
+                cpu_consts, static_nodes, edges, tick0, *, warm_tick: int,
+                total_ticks: int, family: str, dt: float,
                 cold_ticks: int, wbuf: int, prov_ticks: int, has_fleet: bool):
     """Advance the simulation by one time chunk; return the carried state and
     this chunk's summary-statistic partials (host accumulates across chunks).
@@ -556,8 +573,8 @@ def _chunk_impl(state, arr_chunk, lam0, dur, mem, pol, fleet, cpu_consts,
     the final chunk) advance state but are excluded from the statistics."""
     f = arr_chunk.shape[1]
     nbins = edges.shape[0] + 1
-    step = _make_step(arr_chunk, dur, mem, lam0, pol, fleet, cpu_consts,
-                      static_nodes, kind=kind, dt=dt,
+    step = _make_step(arr_chunk, dur, mem, lam0, gaps, gap_tab, pol, fleet,
+                      cpu_consts, static_nodes, family=family, dt=dt,
                       cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
                       has_fleet=has_fleet)
 
@@ -608,17 +625,21 @@ def _acc_summary(hist, arrtot, sums, n, edges, dur_median, dur_sigma, warm,
     }
 
 
-def _chunk_batch_impl(state, arr_chunk, lam0, dur, mem, pols, fleets,
+def _chunk_batch_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem,
+                      pols, fleets,
                       cpu_consts, static_nodes, edges, tick0, *,
-                      warm_tick: int, total_ticks: int, kind: int, dt: float,
+                      warm_tick: int, total_ticks: int, family: str, dt: float,
                       cold_ticks: int, wbuf: int, prov_ticks: int,
                       has_fleet: bool):
     """One time chunk for a whole batch of parameter points (vmap over the
-    point axis of state/lam0/pols/fleets)."""
+    point axis of state/lam0/pols/fleets; ``pols`` is a STACKED params
+    pytree — every leaf, scalar knob or weight array, carries a leading
+    point axis)."""
     def one(st, l0, p, fl):
-        return _chunk_impl(st, arr_chunk, l0, dur, mem, p, fl, cpu_consts,
+        return _chunk_impl(st, arr_chunk, l0, gaps, gap_tab, dur, mem, p, fl,
+                           cpu_consts,
                            static_nodes, edges, tick0, warm_tick=warm_tick,
-                           total_ticks=total_ticks, kind=kind, dt=dt,
+                           total_ticks=total_ticks, family=family, dt=dt,
                            cold_ticks=cold_ticks, wbuf=wbuf,
                            prov_ticks=prov_ticks, has_fleet=has_fleet)
     return jax.vmap(one)(state, lam0, pols, fleets)
@@ -629,18 +650,29 @@ def _chunk_batch_impl(state, arr_chunk, lam0, dur, mem, pols, fleets,
 # closure would retrace every invocation); tick0 is a traced scalar, so the
 # host chunk loop reuses one executable across chunks
 _chunk_batch = partial(jax.jit, static_argnames=(
-    "warm_tick", "total_ticks", "kind", "dt", "cold_ticks", "wbuf",
+    "warm_tick", "total_ticks", "family", "dt", "cold_ticks", "wbuf",
     "prov_ticks", "has_fleet"), donate_argnums=(0,))(_chunk_batch_impl)
 
 
-def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: np.ndarray,
+def stack_params(param_trees: "list[dict]") -> dict:
+    """Stack per-point params pytrees into one batched pytree: every leaf
+    (scalar knob or weight array) gains a leading point axis — the batch
+    axes ``_chunk_batch_impl`` vmaps over."""
+    return jax.tree.map(
+        lambda *leaves: np.stack([np.asarray(lf, np.float32)
+                                  for lf in leaves]), *param_trees)
+
+
+def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: dict,
                        fleets: np.ndarray, *, sim: SimConfig, dt: float,
                        num_nodes: float, provision_s: float, has_fleet: bool,
                        chunk_ticks: int, warmup_frac: float,
                        nbins: int) -> list[dict]:
     """Run a batch of policy/fleet parameter points through the chunked scan
     (vmapped over points, host loop over time chunks, carry donated) and
-    return one ``summarize``-style dict per point."""
+    return one ``summarize``-style dict per point.  ``pols`` is a stacked
+    params pytree (see ``stack_params``); ``policy`` supplies the family
+    and the structural knobs."""
     arr_np = rate_matrix(trace, dt)
     n_ticks, f = arr_np.shape
     dur, mem, cold_ticks, wbuf, cpu_consts = _prep_static(trace, policy, sim, dt)
@@ -650,10 +682,14 @@ def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: np.ndarray,
     edges = _delay_edges(nbins)
     warm_tick = int(n_ticks * warmup_frac)
     chunk_ticks = max(1, min(chunk_ticks, n_ticks))
-    n_points = pols.shape[0]
+    n_points = fleets.shape[0]
 
     lam_eff = jnp.broadcast_to(jnp.asarray(arr_np.mean(axis=0) / dt,
                                jnp.float32), (n_points, f))
+    gq, alive_tab, tail_tab = gap_statistics(trace)
+    gaps = jnp.asarray(gq, jnp.float32)
+    gap_tab = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32),
+                           (alive_tab, tail_tab))
     edges_j = jnp.asarray(edges)
 
     def init_point(fl):
@@ -661,7 +697,7 @@ def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: np.ndarray,
         return _init_state(f, cold_ticks, wbuf, prov_ticks, init_nodes)
 
     state = jax.vmap(init_point)(jnp.asarray(fleets, jnp.float32))
-    pols_j = jnp.asarray(pols, jnp.float32)
+    pols_j = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), pols)
     fleets_j = jnp.asarray(fleets, jnp.float32)
 
     hist = np.zeros((n_points, f, nbins))
@@ -674,19 +710,20 @@ def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: np.ndarray,
             a = np.concatenate(             # ticks are masked out of the stats
                 [a, np.zeros((chunk_ticks - a.shape[0], f), a.dtype)])
         state, (h, at, s, nn) = _chunk_batch(
-            state, jnp.asarray(a), lam_eff, dur, mem, pols_j, fleets_j,
+            state, jnp.asarray(a), lam_eff, gaps, gap_tab, dur, mem,
+            pols_j, fleets_j,
             cpu_consts, float(num_nodes), edges_j,
             jnp.asarray(t0, jnp.int32), warm_tick=warm_tick,
-            total_ticks=n_ticks, kind=policy.kind, dt=dt,
+            total_ticks=n_ticks, family=policy.family, dt=dt,
             cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
             has_fleet=has_fleet)
         hist += np.asarray(h)
         arrtot += np.asarray(at)
         sums += np.asarray(s)
         n += np.asarray(nn)
+    iid = get_family(policy.family).synchronous_tail
     return [_acc_summary(hist[i], arrtot[i], sums[i], n[i], edges, dur_median,
-                         dur_sigma, sim.warm_latency_s, dt,
-                         iid_tail=policy.kind != 1)
+                         dur_sigma, sim.warm_latency_s, dt, iid_tail=iid)
             for i in range(n_points)]
 
 
@@ -699,7 +736,7 @@ def simulate_chunked(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig
     segmented scan so arbitrarily long / wide traces (the 2000-function
     Fig. 9 replay, and beyond) never materialize (T, F) histories."""
     has_fleet = fleet is not None
-    pols = policy.params()[None, :]
+    pols = stack_params([policy.params()])
     fleets = np.asarray([fleet.params() if has_fleet
                          else np.zeros(len(_PFLEET))], np.float32)
     return _chunked_summaries(

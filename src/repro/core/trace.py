@@ -148,3 +148,101 @@ def rate_matrix(trace: Trace, tick_s: float = 1.0) -> np.ndarray:
     tick = np.minimum((trace.t / tick_s).astype(np.int64), t_ticks - 1)
     np.add.at(out, (tick, trace.fn), 1)
     return out
+
+
+def _function_gaps(trace: Trace):
+    """One shared extraction pass behind the gap statistics: per-function
+    inter-arrival gaps, time-ordered.  Yields (fn, gaps, gap_end_times)
+    per function with >= 2 arrivals — the sort/group work every caller of
+    ``gap_quantile``/``gap_tables`` would otherwise redo on multi-million
+    event traces."""
+    order = np.lexsort((trace.t, trace.fn))
+    fn, t = trace.fn[order], trace.t[order]
+    gaps = np.diff(t)
+    same = np.diff(fn) == 0
+    gfn, gv, gt = fn[1:][same], gaps[same], t[1:][same]
+    starts = np.flatnonzero(np.r_[True, np.diff(gfn) != 0]) \
+        if len(gfn) else np.zeros(0, np.int64)
+    bounds = np.r_[starts, len(gfn)]
+    for s, e in zip(bounds[:-1], bounds[1:]):
+        yield int(gfn[s]), gv[s:e], gt[s:e]
+
+
+def gap_quantile(trace: Trace, q: float = 0.99, window: int = 256,
+                 stride: int = 16, gaps=None) -> np.ndarray:
+    """(F,) empirical q-quantile of each function's inter-arrival gap, as
+    the oracle hybrid policy OBSERVES it: over a rolling ``window`` of the
+    most recent gaps (its histogram is a maxlen-256 deque), averaged across
+    the trace's measurement half.
+
+    An adaptive-keepalive fluid model needs the gap distribution the oracle
+    sees, not a Poisson quantile at the mean rate — on time-warped / bursty
+    traces the two differ severalfold, and for chatty functions the rolling
+    window tracks the current phase where a whole-trace quantile would mix
+    day and night gaps.  Functions with fewer than two arrivals report the
+    trace duration (a gap never observed; callers clip to their keepalive
+    cap)."""
+    out = np.full(trace.num_functions, trace.duration_s, np.float64)
+    half = trace.duration_s / 2
+    for i, g, gtime in (gaps if gaps is not None else _function_gaps(trace)):
+        if len(g) <= window:
+            out[i] = np.quantile(g, q)
+            continue
+        ends = np.arange(window, len(g) + 1,
+                         max(1, min(stride, (len(g) - window) // 8 + 1)))
+        # windows the measurement half consults (fall back to the tail)
+        meas = ends[gtime[ends - 1] >= half]
+        if len(meas) == 0:
+            meas = ends[-1:]
+        out[i] = np.mean([np.quantile(g[m - window:m], q) for m in meas])
+    return out
+
+
+#: keepalive grid for ``gap_tables`` (log-spaced ms .. a day)
+KA_GRID = np.geomspace(1e-3, 86_400.0, 56)
+
+
+def gap_tables(trace: Trace, grid: np.ndarray = KA_GRID,
+               gaps=None) -> tuple[np.ndarray, np.ndarray]:
+    """Two (F, K) tables over the keepalive grid, per function:
+
+    * ``alive``: E[min(gap, grid[k])] — mean renewal-cycle length under a
+      keepalive of grid[k] (the cycle ends at the next arrival or the
+      timer, whichever first);
+    * ``tail``:  P(gap > grid[k]) — the probability that cycle ends in an
+      expiry.
+
+    Their ratio tail/alive is the renewal-exact expiry rate for the
+    function's ACTUAL gap distribution (``policy_api
+    .empirical_expiry_rate``): the analytic Poisson form under-expires
+    strongly bursty traces (diurnal warps, production tails) under short
+    keepalives, while matching cycle length alone over-expires burst-heavy
+    functions whose clustered gaps shrink the mean cycle without adding
+    expiry events.  Interpolating both inside the scan reproduces
+    lam/(e^{lam*ka}-1) exactly when gaps ARE exponential and the measured
+    truth when they are not.  Functions with fewer than two arrivals get
+    alive = ka, tail = 1 (a gap never observed: the pure idle-timer
+    limit)."""
+    f = trace.num_functions
+    alive = np.broadcast_to(grid, (f, len(grid))).copy()
+    tail = np.ones((f, len(grid)))
+    for i, gv, _ in (gaps if gaps is not None else _function_gaps(trace)):
+        g = np.sort(gv)
+        csum = np.concatenate([[0.0], np.cumsum(g)])
+        k = np.searchsorted(g, grid, side="right")
+        # mean of min(gap, ka): gaps below ka contribute themselves,
+        # gaps above contribute ka
+        alive[i] = (csum[k] + grid * (len(g) - k)) / len(g)
+        tail[i] = (len(g) - k) / len(g)
+    return alive, tail
+
+
+def gap_statistics(trace: Trace, q: float = 0.99,
+                   grid: np.ndarray = KA_GRID):
+    """(gap_p99, alive_tab, tail_tab) from ONE extraction pass — what the
+    fluid engines consume per simulate/sweep/training call; calling
+    ``gap_quantile`` and ``gap_tables`` separately would redo the
+    O(N log N) sort+group on multi-million-event traces."""
+    per_fn = list(_function_gaps(trace))
+    return (gap_quantile(trace, q, gaps=per_fn),
+            *gap_tables(trace, grid, gaps=per_fn))

@@ -16,11 +16,12 @@ Each row carries the swept parameters, the standard summary metrics, and
 the dollar bill (cost_per_million) from ``repro.fleet.costs``.
 
 This module is the stable fleet-facing surface; the machinery itself lives
-in ``repro.opt`` (``opt.search.evaluate_points`` generalizes it so ALL four
-policy knobs — keepalive, utilization target, container concurrency,
-hybrid pre-warm lead — are traced batch axes, which is what the frontier
-engine sweeps).  ``grid_points``/``pareto_front`` are re-exported from
-their canonical homes there.
+in ``repro.opt`` (``opt.search.evaluate_points`` generalizes it so EVERY
+policy axis a registered ``repro.core.policy_api`` family declares
+sweepable — keepalive, utilization target, container concurrency, pre-warm
+lead, and whatever future families declare — is a traced batch axis, which
+is what the frontier engine sweeps).  ``grid_points``/``pareto_front`` are
+re-exported from their canonical homes there.
 """
 
 from __future__ import annotations

@@ -10,11 +10,18 @@ oracle spot-check verdicts on sampled winners.
   PYTHONPATH=src python -m repro.launch.frontier --scenario cold_tail \\
       --scenario diurnal --scale 0.25 --out-dir frontier_out
   PYTHONPATH=src python -m repro.launch.frontier --scale 1.0 --spot-check 5
+  PYTHONPATH=src python -m repro.launch.frontier --scenario cold_tail \\
+      --scale 0.25 --learned --learn-steps 60
+
+``--learned`` additionally trains the gradient-learned policy family per
+scenario (``repro.opt.learned``: jax.grad through the chunked scan),
+evaluates it at the refine scale against the swept frontier, and
+oracle-confirms it where the discrete replay is feasible.
 
 Outputs in ``--out-dir``:
   frontier_<scenario>.csv   refined rows, with ``front``/``robust`` flags
   frontier_robust.csv       the robust frontier (one row per point x scenario)
-  frontier.json             search summary + spot-check records
+  frontier.json             search summary + spot-check + learned records
 
 Exit status is non-zero when a scenario ends with an empty oracle-confirmed
 front or (with spot checks enabled) an oracle-feasible scenario where no
@@ -29,9 +36,10 @@ import json
 import os
 import sys
 
+from repro.opt.frontier import frontier_slack
 from repro.opt.search import frontier_search, oracle_spot_check
 from repro.opt.space import SWEEPABLE
-from repro.scenarios import list_scenarios
+from repro.scenarios import get_scenario, list_scenarios
 
 _METRICS = ["cost_per_million", "slowdown_geomean_p99", "normalized_memory",
             "creation_rate", "cpu_overhead", "nodes_mean", "node_cost",
@@ -75,20 +83,69 @@ def main(argv=None) -> int:
     ap.add_argument("--spot-check", type=int, default=3, metavar="K",
                     help="oracle-verify K winners per oracle-feasible "
                          "scenario, demoting refuted points (0 disables)")
+    ap.add_argument("--learned", action="store_true",
+                    help="also train the gradient-learned policy per "
+                         "scenario and compare it against the swept front")
+    ap.add_argument("--learn-steps", type=int, default=60,
+                    help="gradient steps for --learned (default 60)")
+    ap.add_argument("--learn-scale", type=float, default=None,
+                    help="training trace scale for --learned "
+                         "(default: the coarse scale)")
     ap.add_argument("--out-dir", default="frontier_out",
                     help="where CSV/JSON land (default frontier_out/)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered scenarios and exit")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
+
+    if args.list:
+        for name in list_scenarios():
+            sc = get_scenario(name)
+            print(f"{name:20s} {sc.figure:45s} {sc.description}")
+        return 0
 
     say = (lambda s: None) if args.quiet else \
         (lambda s: print(s, file=sys.stderr))
     names = args.scenario or list_scenarios()
+    unknown = [n for n in names if n not in list_scenarios()]
+    if unknown:
+        # a friendly listing, not a KeyError traceback
+        print(f"unknown scenario(s): {', '.join(unknown)}", file=sys.stderr)
+        print(f"registered: {', '.join(list_scenarios())} (see --list)",
+              file=sys.stderr)
+        return 2
     result = frontier_search(names, scale=args.scale,
                              coarse_frac=args.coarse_frac, eps=args.eps,
                              survivor_cap=args.cap, log=say)
     checks = []
     if args.spot_check > 0:
         checks = oracle_spot_check(result, k=args.spot_check, log=say)
+
+    learned_records = []
+    if args.learned:
+        from repro.opt.learned import confirm, evaluate_trained, train_policy
+        learn_scale = args.learn_scale if args.learn_scale is not None \
+            else result.coarse_scale
+        for name in sorted(result.fronts):
+            sc = get_scenario(name)
+            res = train_policy(name, scale=learn_scale,
+                               steps=args.learn_steps, log=say)
+            row = evaluate_trained(name, res, scale=args.scale)
+            front = result.fronts[name]
+            slack = frontier_slack(row, front)
+            rec = {"scenario": name, "train": res.summary(),
+                   "cost_per_million": row["cost_per_million"],
+                   "slowdown_geomean_p99": row["slowdown_geomean_p99"],
+                   "frontier_slack": slack,
+                   "on_front": slack <= 1.0 + 1e-9}
+            if sc.oracle_ok:
+                rec["oracle"] = confirm(name, res)
+            learned_records.append(rec)
+            say(f"learned {name}: cost {row['cost_per_million']:.3g} "
+                f"p99 {row['slowdown_geomean_p99']:.3g} "
+                f"slack {slack:.3f}"
+                + (f" oracle {'ok' if rec.get('oracle', {}).get('pass') else 'REFUTED'}"
+                   if "oracle" in rec else ""))
 
     os.makedirs(args.out_dir, exist_ok=True)
     robust = set(result.robust_ids)
@@ -103,9 +160,11 @@ def main(argv=None) -> int:
 
     payload = {"summary": result.summary(),
                "spot_checks": checks,
+               "learned": learned_records,
                "argv": {"scale": args.scale, "coarse_frac": args.coarse_frac,
                         "eps": args.eps, "cap": args.cap,
-                        "spot_check": args.spot_check}}
+                        "spot_check": args.spot_check,
+                        "learned": args.learned}}
     with open(os.path.join(args.out_dir, "frontier.json"), "w") as fh:
         json.dump(payload, fh, indent=2, default=float)
 

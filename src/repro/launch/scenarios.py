@@ -73,6 +73,15 @@ def main(argv=None) -> int:
     names = list_scenarios() if args.all else (args.scenario or [])
     if not names:
         ap.error("pick --scenario NAME (repeatable), --all, or --list")
+    unknown = [n for n in names if n not in list_scenarios()]
+    if unknown:
+        # a friendly listing, not a KeyError traceback
+        print(f"unknown scenario(s): {', '.join(unknown)}", file=sys.stderr)
+        print("registered scenarios (see --list for details):",
+              file=sys.stderr)
+        for n in list_scenarios():
+            print(f"  {n}", file=sys.stderr)
+        return 2
     engines = ENGINES if args.engines == "both" else (args.engines,)
 
     rows = []

@@ -1,12 +1,21 @@
 # Frontier engine: cross-scenario multi-objective search over the joint
 # (policy x fleet) parameter space — coarse vmapped grid, successive-halving
 # refine, per-scenario Pareto fronts, the cross-scenario robust frontier,
-# and oracle spot-checks on sampled winners.
+# oracle spot-checks on sampled winners, and gradient-learned policies
+# through the differentiable chunked scan.
 from repro.opt.frontier import (  # noqa: F401
     epsilon_survivors,
     frontier_slack,
+    hypervolume,
     pareto_front,
     robust_front,
+)
+from repro.opt.learned import (  # noqa: F401
+    TrainResult,
+    confirm,
+    evaluate_trained,
+    make_loss,
+    train_policy,
 )
 from repro.opt.search import (  # noqa: F401
     FrontierResult,

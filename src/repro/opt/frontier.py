@@ -67,6 +67,26 @@ def epsilon_survivors(rows: Sequence[dict], x: str = X_DEFAULT,
             if frontier_slack(r, front, x, y) <= 1.0 + eps][:cap]
 
 
+def hypervolume(rows: Sequence[dict], x_ref: float, y_ref: float,
+                x: str = X_DEFAULT, y: str = Y_DEFAULT) -> float:
+    """Dominated-area hypervolume of the rows' Pareto front w.r.t. the
+    reference point ``(x_ref, y_ref)`` (both axes minimized).
+
+    One scalar that shrinks when the frontier retreats ANYWHERE — the
+    multi-objective regression signal bench-smoke tracks per scenario over
+    time (ROADMAP: "multi-objective CI tracking"): a point-wise metric gate
+    misses a front that got strictly worse in the middle while its
+    endpoints held.  Points at or beyond the reference contribute nothing;
+    0.0 means no row dominates the reference point at all."""
+    front = [r for r in pareto_front(rows, x, y)
+             if r[x] < x_ref and r[y] < y_ref]
+    hv, y_prev = 0.0, y_ref
+    for r in front:                       # sorted by x ascending, y descending
+        hv += (x_ref - r[x]) * (y_prev - r[y])
+        y_prev = r[y]
+    return hv
+
+
 def robust_front(rows_by_scenario: Mapping[str, Sequence[dict]],
                  x: str = X_DEFAULT, y: str = Y_DEFAULT,
                  key: str = "point_id") -> list:

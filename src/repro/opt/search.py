@@ -34,8 +34,9 @@ from typing import Callable, Mapping, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.eventsim import SimConfig
-from repro.core.simjax import (_PFLEET, _PPOL, JaxFleet, JaxPolicy,
-                               _chunked_summaries)
+from repro.core.policy_api import get_family
+from repro.core.simjax import (_PFLEET, JaxFleet, JaxPolicy,
+                               _chunked_summaries, stack_params)
 from repro.core.trace import Trace
 from repro.fleet.costs import PriceBook, cost_report
 from repro.fleet.nodes import NodeType
@@ -55,24 +56,51 @@ def evaluate_points(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
     """Run every parameter point through one vmapped chunked scan; return
     one row per point: {params..., metrics..., cost fields...}.
 
-    This is the generalized core behind ``repro.fleet.sweep.sweep``: ALL
-    four policy knobs (keepalive, target, container concurrency, pre-warm
-    lead) are traced batch axes alongside the six fleet knobs.
+    This is the generalized core behind ``repro.fleet.sweep.sweep``: every
+    policy axis the family declares sweepable is a traced batch axis
+    alongside the six fleet knobs (the per-point params pytrees are stacked
+    leaf-wise, so arbitrary-shaped policies batch the same way four scalar
+    knobs did).  A knob another family declares (e.g. ``target`` under a
+    sync scenario) is accepted but inert, exactly as the flat parameter
+    vector behaved; ``evaluate_scenario`` collapses such duplicates before
+    simulating.  Every override is bounds-checked against its declaration,
+    so a NaN or out-of-range sweep value fails loudly here.
     """
     pts = list(points) if points else [{}]
-    unknown = {k for p in pts for k in p} - SWEEPABLE
+    # validate against the LIVE registry (sweepable_knobs()), not the
+    # import-time SWEEPABLE snapshot — families registered later must be
+    # honored here exactly as SearchSpace honors them
+    from repro.opt.space import sweepable_knobs
+    legal = sweepable_knobs()
+    unknown = {k for p in pts for k in p} - legal
     if unknown:
         raise ValueError(f"unsweepable params {sorted(unknown)}; "
-                         f"traced params are {sorted(SWEEPABLE)}")
+                         f"traced params are {sorted(legal)}")
 
-    pols = np.tile(policy.params(), (len(pts), 1))
-    fleets = np.tile(fleet.params(), (len(pts), 1))
+    fam = get_family(policy.family)
+    base = policy.params()
+    trees, fleets = [], np.tile(fleet.params(), (len(pts), 1))
+    axis_names = set(fam.axis_names())
     for i, p in enumerate(pts):
+        tree = dict(base)
         for k, v in p.items():
-            if k in _PPOL:
-                pols[i, _PPOL.index(k)] = v
-            else:
+            if not np.isfinite(v):
+                # every override — fleet knobs and other families' inert
+                # knobs included — must at least be finite, or a NaN rides
+                # silently to the CI gate's last-resort check
+                raise ValueError(f"sweep value {k}={v!r} is not finite")
+            if k in _PFLEET:
                 fleets[i, _PFLEET.index(k)] = v
+            elif k in axis_names:
+                ax = fam.axis(k)
+                if v < ax.lo or v > ax.hi:
+                    raise ValueError(
+                        f"sweep value {k}={v!r} outside the declared bounds "
+                        f"[{ax.lo}, {ax.hi}] of family {fam.name!r}")
+                tree[k] = float(v)
+            # else: another family's sweepable knob — inert here
+        trees.append(tree)
+    pols = stack_params(trees)
 
     summaries = _chunked_summaries(
         trace, policy, pols, fleets, sim=sim, dt=dt, num_nodes=0,
@@ -125,10 +153,10 @@ def default_fleet(sc: Scenario) -> JaxFleet:
                     min_nodes=1.0, max_nodes=float(max(4, 2 * sc.num_nodes)))
 
 
-def _effective_key(point: dict, kind: int) -> tuple:
+def _effective_key(point: dict, family: str) -> tuple:
     """Collapse knobs the scenario's policy family never reads, so inert
     grid axes do not multiply simulation work (point ids stay distinct)."""
-    active = set(active_knobs(kind)) | set(_PFLEET)
+    active = set(active_knobs(family)) | set(_PFLEET)
     return tuple(sorted((k, v) for k, v in point.items() if k in active))
 
 
@@ -150,12 +178,12 @@ def evaluate_scenario(scenario: Union[str, Scenario], points: Sequence[dict],
         uniq: dict[tuple, int] = {}
         order = []
         for p in pts:
-            key = _effective_key(p, policy.kind)
+            key = _effective_key(p, policy.family)
             if key not in uniq:
                 uniq[key] = len(order)
                 order.append(p)
             # remember which unique simulation backs each point
-        backing = [uniq[_effective_key(p, policy.kind)] for p in pts]
+        backing = [uniq[_effective_key(p, policy.family)] for p in pts]
     else:
         order, backing = pts, list(range(len(pts)))
 
@@ -370,7 +398,7 @@ def oracle_spot_check(result: FrontierResult, k: int = 3,
         if not (sc.oracle_ok or include_infeasible):
             continue
         exclude = set(_PARITY_EXCLUDE.get(name, ()))
-        kind = sc.policy.to_jax().kind
+        family = sc.policy.to_jax().family
 
         def check_key(pid: int) -> tuple:
             # the configuration class one oracle replay actually verifies:
@@ -379,7 +407,7 @@ def oracle_spot_check(result: FrontierResult, k: int = 3,
             # differing only in knobs the check cannot see share one
             # verdict, so checking them separately would waste the budget
             # on duplicate replays
-            active = set(active_knobs(kind))
+            active = set(active_knobs(family))
             if sc.fleet is not None:
                 active |= set(_PFLEET)
             return tuple(sorted((kk, v) for kk, v in

@@ -1,15 +1,17 @@
 """Joint (policy x fleet) search spaces over the traced simulator knobs.
 
 A ``SearchSpace`` is two {knob: candidate values} grids — one over the
-traced policy axes (``simjax._PPOL``: keepalive, utilization target,
-container concurrency, hybrid pre-warm lead) and one over the traced fleet
-axes (``simjax._PFLEET``) — whose cartesian product is the candidate set
-the frontier engine sweeps through one vmapped chunked scan per scenario.
+policy axes the registered families DECLARE sweepable
+(``repro.core.policy_api``: keepalive, utilization target, container
+concurrency, hybrid pre-warm lead, ...) and one over the traced fleet axes
+(``simjax._PFLEET``) — whose cartesian product is the candidate set the
+frontier engine sweeps through one vmapped chunked scan per scenario.
 
 Not every knob acts under every policy family (an async reconciler never
 reads the keepalive; a sync policy never reads the utilization target), so
-``active_knobs`` names the axes with effect per ``JaxPolicy.kind``; the
-engine collapses inert axes before simulating and broadcasts results back,
+``active_knobs`` names the axes with effect per family — DERIVED from each
+family's ``AxisSpec`` declarations, not a hand-written table; the engine
+collapses inert axes before simulating and broadcasts results back,
 turning e.g. a 96-point grid into 32 distinct simulations for a sync
 scenario while keeping point ids comparable across scenarios — which is
 what makes the cross-scenario robust frontier well-defined.
@@ -19,23 +21,29 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Mapping, Sequence, Tuple
+import math
+from typing import Mapping, Sequence, Tuple, Union
 
-from repro.core.simjax import _PFLEET, _PPOL
-
-SWEEPABLE = set(_PPOL) | set(_PFLEET)
-
-# policy knobs with effect per JaxPolicy.kind (fleet knobs always act)
-_ACTIVE = {
-    0: ("keepalive_s", "cc"),                 # sync keepalive
-    1: ("target", "cc"),                      # async window reconciler
-    2: ("keepalive_s", "cc", "prewarm_s"),    # hybrid histogram + pre-warm
-}
+from repro.core.policy_api import get_family, sweepable_policy_axes
+from repro.core.simjax import _PFLEET
 
 
-def active_knobs(kind: int) -> Tuple[str, ...]:
-    """The policy axes a ``JaxPolicy`` of this kind actually reads."""
-    return _ACTIVE[kind]
+def sweepable_knobs() -> set:
+    """Every knob a ``SearchSpace`` may grid over: the union of all
+    registered families' sweepable axes plus the fleet vector."""
+    return sweepable_policy_axes() | set(_PFLEET)
+
+
+# snapshot at import for cheap membership checks; families registered later
+# are still honored by sweepable_knobs() / SearchSpace validation
+SWEEPABLE = sweepable_knobs()
+
+
+def active_knobs(family: Union[str, int]) -> Tuple[str, ...]:
+    """The sweepable policy axes a family actually reads — straight from
+    its ``AxisSpec`` declarations (accepts a registry name or the legacy
+    integer kind)."""
+    return get_family(family).sweepable_axes()
 
 
 def grid_points(grid: Mapping[str, Sequence]) -> list[dict]:
@@ -54,13 +62,18 @@ class SearchSpace:
         default_factory=dict)
 
     def __post_init__(self):
-        bad = (set(self.policy) - set(_PPOL)) | (set(self.fleet) - set(_PFLEET))
+        pol_axes = sweepable_policy_axes()
+        bad = (set(self.policy) - pol_axes) | (set(self.fleet) - set(_PFLEET))
         if bad:
             raise ValueError(f"unsweepable knobs {sorted(bad)}; traced axes "
-                             f"are {sorted(SWEEPABLE)}")
+                             f"are {sorted(pol_axes | set(_PFLEET))}")
         for knob, vals in {**self.policy, **self.fleet}.items():
             if len(vals) == 0:
                 raise ValueError(f"knob {knob!r} has no candidate values")
+            for v in vals:
+                if not math.isfinite(float(v)):
+                    raise ValueError(f"knob {knob!r} has a non-finite "
+                                     f"candidate {v!r}")
 
     def points(self) -> list[dict]:
         """The full candidate set; index order is the stable point id."""

@@ -15,11 +15,10 @@ branchless traced ``JaxPolicy`` on the other.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
-from repro.core.policies import (AsyncConcurrencyPolicy,
-                                 HybridHistogramPolicy, Policy,
-                                 SyncKeepalivePolicy)
+from repro.core.policies import Policy
+from repro.core.policy_api import get_family
 from repro.core.simjax import JaxFleet, JaxPolicy
 from repro.core.trace import Trace, TraceConfig, synthesize
 from repro.scenarios.transforms import Transform, apply_transforms
@@ -29,44 +28,42 @@ from repro.scenarios.transforms import Transform, apply_transforms
 class PolicySpec:
     """Engine-neutral autoscaling-policy description.
 
+    ``kind`` names a ``repro.core.policy_api`` registry family ("sync",
+    "async", "hybrid", "learned", ...); both lowering directions — the
+    traced ``JaxPolicy`` and the oracle's per-function ``Policy`` factory —
+    are delegated to that family, so a newly registered policy is runnable
+    through every engine and scenario without touching this module.
+
     ``tick_s`` is the control-loop period used on BOTH sides (the oracle's
     reconcile tick and the fluid dt): comparing engines at different loop
     periods conflates policy behavior with sampling granularity — a coarser
     oracle tick accumulates larger queue spikes and inflates churn.
     """
-    kind: str = "sync"     # "sync" (keepalive) | "async" (window) | "hybrid"
+    kind: str = "sync"
     keepalive_s: float = 600.0         # hybrid: the adaptive keepalive's cap
     window_s: float = 60.0
     target: float = 0.7
     container_concurrency: int = 1
     tick_s: float = 1.0
     prewarm_s: float = 0.0             # hybrid pre-warm lead (fluid side)
+    theta: Any = None                  # learned-family weight pytree
+    extra: Any = None                  # {axis: value} for novel family axes
 
-    _KINDS = {"sync": 0, "async": 1, "hybrid": 2}
+    def family(self):
+        try:
+            return get_family(self.kind)
+        except KeyError as e:
+            raise ValueError(str(e)) from None
 
     def to_jax(self) -> JaxPolicy:
-        if self.kind not in self._KINDS:
-            raise ValueError(f"unknown policy kind {self.kind!r}")
-        return JaxPolicy(kind=self._KINDS[self.kind],
+        return JaxPolicy(family=self.family().name,
                          keepalive_s=self.keepalive_s, window_s=self.window_s,
                          target=self.target, cc=self.container_concurrency,
-                         prewarm_s=self.prewarm_s)
+                         prewarm_s=self.prewarm_s, theta=self.theta,
+                         extra=self.extra)
 
     def factory(self) -> Callable[[int], Policy]:
-        if self.kind == "sync":
-            return lambda f: SyncKeepalivePolicy(
-                keepalive_s=self.keepalive_s,
-                container_concurrency=self.container_concurrency)
-        if self.kind == "async":
-            return lambda f: AsyncConcurrencyPolicy(
-                window_s=self.window_s, target=self.target,
-                container_concurrency=self.container_concurrency,
-                tick_s=self.tick_s)
-        if self.kind == "hybrid":
-            return lambda f: HybridHistogramPolicy(
-                max_s=self.keepalive_s,
-                container_concurrency=self.container_concurrency)
-        raise ValueError(f"unknown policy kind {self.kind!r}")
+        return self.family().oracle_factory(self)
 
 
 @dataclasses.dataclass(frozen=True)
