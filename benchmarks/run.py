@@ -3,9 +3,11 @@
 Default: every figure benchmark, printing ``name,us_per_call,derived`` CSV.
 
 ``--quick`` is the CI regression tier: fig8 through the frontier engine at
-0.1x plus the scenario suite at 0.1x (oracle legs included at that scale),
-collected into a flat {metric: value} dict where EVERY metric is
-lower-is-better (wall seconds, p99 slowdown, $/1M requests, memory ratio).
+0.1x, the scenario suite at 0.1x (oracle legs included at that scale), the
+per-scenario frontier hypervolumes, and the fig12 spot-vs-on-demand cost
+ratio (fluid-only, deterministic), collected into a flat {metric: value}
+dict where EVERY metric is lower-is-better (wall seconds, p99 slowdown,
+$/1M requests, memory ratio, cost ratio).
 ``--json`` writes it (BENCH_ci.json in CI); ``--baseline`` compares against
 a checked-in reference and exits non-zero when any metric regresses more
 than ``--tolerance`` (default 25%) — the bench-smoke CI gate.
@@ -42,6 +44,7 @@ MODULES = [
     "benchmarks.fig9_large_scale",
     "benchmarks.fig10_fleet_cost",
     "benchmarks.fig11_learned_policy",
+    "benchmarks.fig12_spot_frontier",
     "benchmarks.scenario_suite",
     "benchmarks.table1_trends",
     "benchmarks.roofline",
@@ -97,6 +100,19 @@ def run_quick() -> dict:
     t0 = time.time()
     metrics.update(quick_hypervolume())
     metrics["frontier_hv_wall_s"] = round(time.time() - t0, 3)
+
+    # spot frontier: the fluid (deterministic) winner-vs-on-demand cost
+    # ratio must not regress — a rising ratio means the spot subsystem
+    # stopped finding savings; the oracle-confirm legs run in the full
+    # fig12 benchmark, not the gate (they are seeded but slow)
+    from benchmarks import fig12_spot_frontier
+    t0 = time.time()
+    _, _, winner, best_od, _ = fig12_spot_frontier.run(
+        scale=QUICK_SCALE / fig12_spot_frontier.EVAL_SCALE, confirm=False)
+    metrics["fig12_wall_s"] = round(time.time() - t0, 3)
+    metrics["fig12_spot_cost_ratio"] = (
+        winner["cost_per_million"] / best_od["cost_per_million"]
+        if winner is not None else math.inf)
     return metrics
 
 

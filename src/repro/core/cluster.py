@@ -33,6 +33,7 @@ class Node:
     alive: bool = True
     used_mb: float = 0.0
     state: str = UP                # provisioning | up | draining | gone
+    spot: bool = False             # spot-tier node (repro.fleet.spot)
 
     def fits(self, mb: float) -> bool:
         return self.alive and self.state == UP \

@@ -15,7 +15,11 @@ itself becomes elastic — nodes are provisioned (latency ≫ cold start),
 drained before termination (in-flight work finishes first), and billed by
 the second for the cost model in ``repro.fleet.costs``.  A placement
 failure then *defers* the instance creation and feeds the fleet reconciler
-as scale-up pressure, instead of dropping the request.
+as scale-up pressure, instead of dropping the request.  A
+``repro.fleet.spot.SpotNodeFleet`` adds preemptible capacity: the market
+announces reclaims, the node drains through its notice window, and the
+``node_evict`` event force-kills whatever is still running — its in-flight
+requests re-queue and recreate capacity (the eviction cold-start storm).
 
 CPU overhead model (calibrated against the paper's Fig. 5/6 in
 EXPERIMENTS.md):  churn dominates — a create+teardown pair costs ~8 CPU-s
@@ -35,7 +39,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core.cluster import DRAINING, UP, Cluster
+from repro.core.cluster import DRAINING, GONE, UP, Cluster
 from repro.core.policies import Policy
 from repro.core.trace import Trace
 
@@ -133,6 +137,9 @@ class SimResult:
     node_provisions: int = 0
     node_terminations: int = 0
     nodes_hint: int = 0
+    # spot-tier accounting (zero for an on-demand-only fleet)
+    spot_node_seconds: float = 0.0
+    node_evictions: int = 0
 
 
 class EventSim:
@@ -199,7 +206,9 @@ class EventSim:
             node_samples=np.asarray(self.node_samples),
             node_provisions=fl.provisions if fl else 0,
             node_terminations=fl.terminations if fl else 0,
-            nodes_hint=sum(1 for n in self.cluster.nodes if n.billable))
+            nodes_hint=sum(1 for n in self.cluster.nodes if n.billable),
+            spot_node_seconds=fl.spot_node_seconds if fl else 0.0,
+            node_evictions=fl.evictions if fl else 0)
 
     def _measuring(self, t) -> bool:
         return t >= self._measure_from
@@ -412,14 +421,21 @@ class EventSim:
                         self._pending_creates[fidx] = min(
                             self._pending_creates.get(fidx, 0) + 1,
                             len(fs.queue))
+        # spot preemptions announced this tick: the node is already
+        # draining (idle instances torn down above); whatever is still
+        # busy at the notice deadline is force-evicted
+        for node, deadline in fleet.pop_evictions():
+            self._push(deadline, "node_evict", node)
         fleet.maybe_reclaim(self.cluster)
         if self._measuring(t):
             billed = fleet.bill(self.cluster, self.cfg.tick_s)
             self.node_seconds += billed * self.cfg.tick_s
             self.node_samples.append(billed)
 
-    def _on_fail(self, t: float, node_id: int):
-        node = self.cluster.fail_node(node_id)
+    def _kill_node_instances(self, t: float, node):
+        """Mark every instance on ``node`` dead (abrupt death: teardowns
+        counted, no graceful-teardown CPU) — shared by node failures and
+        forced spot evictions."""
         for fs in self.fns:
             dead = [i for i in fs.instances if i.node is node]
             for inst in dead:
@@ -429,18 +445,22 @@ class EventSim:
                 fs.instances.remove(inst)
                 if self._measuring(t):
                     self.teardowns += 1
-        # in-flight requests on the dead node are re-queued when their 'done'
-        # fires: mark via node.alive in _on_done? simpler: scan outstanding
-        # events is O(E); instead requeue at fail time:
+
+    def _requeue_inflight(self, t: float, node):
+        """Re-queue the in-flight requests of ``node``'s dead instances
+        (their pending 'done' events are dropped); scanning the event heap
+        is O(E) but failures/evictions are rare events."""
         new_events = []
         for ev in self._events:
             tt, c, kind, payload = ev
-            if kind == "done" and payload[0].node is node and payload[0].state == "dead":
+            if kind == "done" and payload[0].node is node \
+                    and payload[0].state == "dead":
                 rec = payload[1]
                 rec.requeued += 1
                 fs = self.fns[rec.fn]
-                dec = fs.policy.on_arrival(t, fs.idle_count, fs.busy_free_slots,
-                                           fs.starting, len(fs.queue))
+                dec = fs.policy.on_arrival(t, fs.idle_count,
+                                           fs.busy_free_slots, fs.starting,
+                                           len(fs.queue))
                 for _ in range(dec.create):
                     self._create_instance(t, rec.fn)
                 fs.queue.append(rec)
@@ -448,5 +468,24 @@ class EventSim:
                 new_events.append(ev)
         heapq.heapify(new_events)
         self._events = new_events
+
+    def _on_node_evict(self, t: float, node):
+        """The reclaim notice expired: the provider takes the spot node
+        back.  Instances still on it die abruptly; their in-flight
+        requests re-queue and re-trigger creation — the eviction-driven
+        cold-start storm."""
+        fleet = self.fleet
+        if fleet is None or not node.alive or node.state == GONE:
+            return                      # drained empty and reclaimed already
+        self._kill_node_instances(t, node)
+        self._requeue_inflight(t, node)
+        fleet.force_evict(node, self.cluster)
+        for fs in self.fns:
+            self._drain_queue(t, fs)
+
+    def _on_fail(self, t: float, node_id: int):
+        node = self.cluster.fail_node(node_id)
+        self._kill_node_instances(t, node)
+        self._requeue_inflight(t, node)
         for fs in self.fns:
             self._drain_queue(t, fs)

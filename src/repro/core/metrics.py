@@ -41,6 +41,9 @@ class Metrics:
     node_hours: float = 0.0
     node_provisions: int = 0
     node_terminations: int = 0
+    # spot tier (0 for an on-demand-only fleet)
+    spot_node_hours: float = 0.0
+    node_evictions: int = 0
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -95,6 +98,8 @@ def compute(result: SimResult) -> Metrics:
         node_hours=result.node_seconds / 3600.0,
         node_provisions=result.node_provisions,
         node_terminations=result.node_terminations,
+        spot_node_hours=result.spot_node_seconds / 3600.0,
+        node_evictions=result.node_evictions,
     )
 
 

@@ -146,6 +146,36 @@ class HybridHistogramPolicy(Policy):
         return float(np.clip(q * 1.1, self.min_s, self.max_s))
 
 
+# how far ahead the spot-aware policy insures against preemption: warm
+# headroom covers the expected instance loss over roughly one node
+# provision cycle (rebuilding evicted capacity takes provision_s ≫ cold
+# start).  Shared by the oracle twin below and the traced
+# ``policy_api.SpotAwareFamily`` so both engines compute identical headroom.
+SPOT_HEADROOM_HORIZON_S = 120.0
+
+
+@dataclasses.dataclass
+class SpotAwarePolicy(SyncKeepalivePolicy):
+    """Sync keepalive scaling that over-provisions warm headroom against
+    spot preemption: each reconcile tick tops idle capacity up to the
+    expected instance loss rate (instances x spot_fraction x hazard) over
+    the headroom horizon, so an eviction lands on pre-warmed spares
+    instead of a cold-start storm.  ``spot_fraction``/``hazard_per_hour``
+    mirror the fleet tier actually purchased (the policy insures exactly
+    the capacity at risk)."""
+    spot_fraction: float = 0.0
+    hazard_per_hour: float = 0.0
+
+    def on_tick(self, t, concurrency, instances, starting, idle):
+        target = int(round(instances * self.spot_fraction
+                           * self.hazard_per_hour / 3600.0
+                           * SPOT_HEADROOM_HORIZON_S))
+        extra = max(target - idle - starting, 0)
+        if extra > 0:
+            return PolicyDecision(create=extra)
+        return PolicyDecision()
+
+
 # ---------------------------------------------------------------------------
 # learned keepalive: the gradient-searched policy family
 # ---------------------------------------------------------------------------
@@ -245,4 +275,5 @@ def make_policy(name: str, **kw) -> Policy:
         "async": AsyncConcurrencyPolicy,
         "hybrid": HybridHistogramPolicy,
         "learned": LearnedKeepalivePolicy,
+        "spot_aware": SpotAwarePolicy,
     }[name](**kw)

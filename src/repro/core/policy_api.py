@@ -34,10 +34,11 @@ from typing import Any, Callable, Mapping, NamedTuple, Optional, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policies import (AsyncConcurrencyPolicy, HybridHistogramPolicy,
+from repro.core.policies import (SPOT_HEADROOM_HORIZON_S,
+                                 AsyncConcurrencyPolicy, HybridHistogramPolicy,
                                  LearnedKeepalivePolicy, Policy,
-                                 SyncKeepalivePolicy, init_theta,
-                                 learned_keepalive)
+                                 SpotAwarePolicy, SyncKeepalivePolicy,
+                                 init_theta, learned_keepalive)
 from repro.core.trace import KA_GRID
 
 # hybrid floor on the adaptive keepalive, mirroring HybridHistogramPolicy
@@ -436,7 +437,62 @@ class LearnedKeepaliveFamily(SyncKeepaliveFamily):
             theta=theta, container_concurrency=spec.container_concurrency)
 
 
+# ---------------------------------------------------------------------------
+# spot-aware scaling: insure warm capacity against the preemption hazard
+# ---------------------------------------------------------------------------
+
+
+class SpotAwareFamily(SyncKeepaliveFamily):
+    """Sync keepalive scaling for a fleet buying ``spot_fraction`` of its
+    nodes on a preemptible tier with ``hazard_per_hour`` reclaims per
+    node-hour.  Two effects:
+
+    * the ENGINE reads the two spot axes (like it reads ``cc``): the fleet
+      layer splits node purchases across tiers at ``spot_fraction`` and
+      integrates the eviction flux at ``hazard_per_hour`` — warm instances
+      on reclaimed capacity die, their in-flight work re-queues as
+      scale-up pressure (``repro.fleet.spot`` is the discrete twin);
+    * the POLICY over-provisions warm headroom to the expected instance
+      loss over ``SPOT_HEADROOM_HORIZON_S``, so evictions land on
+      pre-warmed spares instead of the request critical path.
+
+    Declaring the axes sweepable puts (spot_fraction, hazard_per_hour) on
+    the frontier grid: the engine trades the spot discount against the
+    eviction-driven cold-start storms it causes."""
+    name = "spot_aware"
+    kind = None                      # post-redesign family: no legacy id
+    axes = (AxisSpec("keepalive_s", 1.0, 86_400.0,
+                     doc="idle-instance retention"), _CC_AXIS,
+            AxisSpec("spot_fraction", 0.0, 1.0,
+                     doc="share of the node fleet bought on the spot tier"),
+            AxisSpec("hazard_per_hour", 0.0, 60.0,
+                     doc="spot preemption rate (reclaims per node-hour)"))
+
+    def decide(self, params, obs):
+        base = super().decide(params, obs)
+        # top idle capacity up to the expected eviction loss over the
+        # headroom horizon — rounded to whole instances and netted against
+        # the INTEGRAL idle count, mirroring the oracle twin's arithmetic
+        # (a continuous target would hold fractional headroom the oracle
+        # never buys)
+        target = jnp.round(obs.inst * params["spot_fraction"]
+                           * params["hazard_per_hour"] / 3600.0
+                           * SPOT_HEADROOM_HORIZON_S)
+        extra = jnp.maximum(target - obs.idle - obs.pending, 0.0)
+        return base._replace(create=base.create + extra)
+
+    def oracle_factory(self, spec):
+        extra = dict(getattr(spec, "extra", None) or {})
+        sf = float(extra.get("spot_fraction", 0.0))
+        hz = float(extra.get("hazard_per_hour", 0.0))
+        return lambda f: SpotAwarePolicy(
+            keepalive_s=spec.keepalive_s,
+            container_concurrency=spec.container_concurrency,
+            spot_fraction=sf, hazard_per_hour=hz)
+
+
 register_family(SyncKeepaliveFamily())
 register_family(AsyncWindowFamily())
 register_family(HybridHistogramFamily())
 register_family(LearnedKeepaliveFamily())
+register_family(SpotAwareFamily())

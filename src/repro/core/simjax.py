@@ -12,7 +12,13 @@ latency ≫ cold start), and a scale-down cooldown timer — mirroring
 Instance creation is then capped by node capacity (capped creates stay
 queued and re-request, the fluid analogue of placement-failure deferral),
 and unplaceable demand feeds the node reconciler, so placement pressure
-scales the fleet up instead of dropping requests.
+scales the fleet up instead of dropping requests.  When the policy family
+declares the spot axes (``spot_fraction`` / ``hazard_per_hour`` — read off
+the policy params like ``cc``), the fleet splits across an on-demand and a
+spot tier and a traced hazard flux evicts spot capacity each tick: warm
+instances on reclaimed nodes die, in-flight work outliving the reclaim
+notice re-queues, and the spot share bills separately — the fluid twin of
+``repro.fleet.spot``.
 
 Numeric policy and fleet parameters are *traced*, not compile-time
 constants, so ``repro.fleet.sweep`` can ``vmap`` thousands of policy
@@ -114,7 +120,10 @@ class JaxPolicy:
 class JaxFleet:
     """Node-fleet layer parameters (mirrors UtilizationFleetPolicy +
     NodeFleet).  ``provision_s`` is structural (pipeline depth, static);
-    the rest are traced and sweepable."""
+    the rest are traced and sweepable.  ``reclaim_notice_s`` is the spot
+    tier's eviction warning (repro.fleet.spot); it only acts when the
+    policy family declares the spot axes (spot_fraction / hazard_per_hour
+    — the engine reads them off the policy params, like ``cc``)."""
     node_memory_mb: float = 192_000.0
     provision_s: float = 60.0
     min_nodes: float = 1.0
@@ -122,24 +131,32 @@ class JaxFleet:
     util_target: float = 0.7
     warm_frac: float = 0.25
     cooldown_s: float = 120.0
+    reclaim_notice_s: float = 120.0
 
     def params(self) -> np.ndarray:
         """The traced parameter vector (see _PFLEET indices)."""
         return np.asarray([self.min_nodes, self.max_nodes, self.util_target,
                            self.warm_frac, self.cooldown_s,
-                           self.node_memory_mb], np.float32)
+                           self.node_memory_mb, self.reclaim_notice_s],
+                          np.float32)
 
 
 # traced fleet parameter vector layout (policy params are a pytree now —
 # see repro.core.policy_api; the fleet layer keeps its fixed vector)
 _PFLEET = ("min_nodes", "max_nodes", "util_target", "warm_frac",
-           "cooldown_s", "node_memory_mb")
+           "cooldown_s", "node_memory_mb", "reclaim_notice_s")
 
 
 def _init_state(f, cold_ticks, wbuf, prov_ticks, init_nodes):
+    # the four trailing leaves are the spot tier (node count, provisioning
+    # pipeline, instance mass resident on spot capacity, evicted-warm
+    # deficit); they stay identically zero unless the policy family
+    # declares the spot axes
     return (jnp.zeros(f), jnp.zeros(f), jnp.zeros(f),
             jnp.zeros((f, cold_ticks)), jnp.zeros((f, wbuf)), jnp.asarray(0),
-            init_nodes * jnp.ones(()), jnp.zeros(prov_ticks), jnp.zeros(()))
+            init_nodes * jnp.ones(()), jnp.zeros(prov_ticks), jnp.zeros(()),
+            jnp.zeros(()), jnp.zeros(prov_ticks), jnp.zeros(f),
+            jnp.zeros(f))
 
 
 def _make_step(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
@@ -166,16 +183,24 @@ def _make_step(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
     f = dur.shape[0]
     fam = get_family(family)
     ccf = pol["cc"]
+    # the engine reads the spot axes off the policy params exactly like
+    # ``cc``: a family that never declares them runs the original
+    # single-tier fleet math (the spot carries stay identically zero)
+    has_spot = has_fleet and "spot_fraction" in pol
 
     def step(state, tick):
         (inst, in_service, queue, starting, win, wcur,
-         nodes, pipe, cool) = state
+         nodes, pipe, cool, nodes_spot, pipe_spot, spot_inst,
+         evict_deficit) = state
         arr = arrivals[tick].astype(jnp.float32)
 
         if has_fleet:
             # provisioning completes
             nodes = nodes + pipe[0]
             pipe = jnp.concatenate([pipe[1:], jnp.zeros((1,))])
+            if has_spot:
+                nodes_spot = nodes_spot + pipe_spot[0]
+                pipe_spot = jnp.concatenate([pipe_spot[1:], jnp.zeros((1,))])
 
         # instances finishing cold start
         ready = starting[:, 0]
@@ -254,33 +279,131 @@ def _make_step(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
         if has_fleet:
             min_n, max_n, util_t, warm_f, cool_s, node_mem = (
                 fleet[0], fleet[1], fleet[2], fleet[3], fleet[4], fleet[5])
-            capacity_mb = nodes * node_mem
+
+            # spot eviction flux: each UP spot node is reclaimed at the
+            # hazard rate; warm instances on reclaimed capacity die (the
+            # fleet spreads instances uniformly, so the instance loss is
+            # the evicted capacity fraction).  In-flight work whose
+            # memoryless remaining service outlives the reclaim notice
+            # re-queues (the rest completes while the node drains, as the
+            # oracle lets it).  The oracle recreates each killed warm
+            # instance on its function's NEXT ARRIVAL — a cold start — so
+            # the killed mass parks in ``evict_deficit`` and drains back
+            # into creation at the arrival rate: the eviction-driven
+            # cold-start storm.  The evicted node bills through its notice
+            # window.
+            if has_spot:
+                notice = fleet[6]
+                h_tick = -jnp.expm1(-(pol["hazard_per_hour"] / 3600.0) * dt)
+                evict = nodes_spot * h_tick
+                # the mass at risk is what actually RESIDES on spot
+                # capacity (``spot_inst``): evicted spot nodes are young —
+                # mean lifetime 1/hazard — so they only hold instances
+                # placed since they booted, not a uniform 1/nodes share of
+                # the fleet.  Each spot node evicts with probability
+                # h_tick, taking its resident share with it.
+                spot_inst = spot_inst \
+                    * jnp.clip(1.0 - retire / jnp.maximum(inst + retire,
+                                                          1e-9), 0.0, 1.0)
+                spot_inst = jnp.minimum(spot_inst, inst)
+                killed = spot_inst * h_tick
+                spot_inst = spot_inst - killed
+                inst = inst - killed
+                # in-flight work rides the same resident share; whatever
+                # outlives the reclaim notice re-queues
+                evict_frac = killed / jnp.maximum(inst + killed, 1e-9)
+                requeue = in_service * evict_frac * jnp.exp(-notice / dur)
+                in_service = in_service - requeue
+                queue = queue + requeue
+                # a sync arrival recreates a killed instance iff it finds
+                # no free slot: conditioned on one whole instance missing,
+                # the surviving free capacity is (inst + deficit - 1 +
+                # pending - busy slots).  The blocked-arrival probability
+                # falls geometrically per surviving free slot (each spare
+                # is busy with odds a/(1+a) at offered load a, the
+                # coincidence that birthed it in the first place), so even
+                # a killed EXCESS instance regenerates at the next
+                # concurrency peak within the keepalive — exactly how the
+                # oracle's per-arrival create maintains its equilibrium.
+                pool = evict_deficit + killed
+                free_cond = jnp.maximum(
+                    inst + pool - 1.0 + pending - in_service / ccf, 0.0)
+                a = in_service / ccf
+                p_need = (a / (1.0 + a)) ** free_cond
+                drain = pool * -jnp.expm1(-lam0 * dt)
+                rec = drain * p_need
+                evict_deficit = pool - rec
+                # sync semantics: every arrival queued DURING the recreate's
+                # cold start also creates (one sandbox per concurrent
+                # request), so each recreate overshoots by ~lam x cold —
+                # excess instances that then idle a full keepalive
+                create = create + rec * (1.0 + lam0 * cold_ticks * dt)
+                nodes_spot = nodes_spot - evict
+                evict_bill = evict * notice / dt
+            else:
+                killed = jnp.zeros(f)
+                evict_bill = jnp.zeros(())
+
+            capacity_mb = (nodes + nodes_spot) * node_mem
             committed = ((inst + starting.sum(axis=1)) * mem).sum()
             free_mb = jnp.maximum(capacity_mb - committed, 0.0)
             req_mb = (create * mem).sum()
             scale = jnp.minimum(1.0, free_mb / jnp.maximum(req_mb, 1e-9))
             create = create * scale
             starting = starting.at[:, cold_ticks - 1].add(create)
+            if has_spot:
+                # round-robin first-fit walks the node list and takes the
+                # first node with space — uniform by NODE COUNT while
+                # nodes have room (free-capacity weighting would cascade
+                # recreated mass straight back onto young spot nodes)
+                cap_share = nodes_spot / jnp.maximum(nodes + nodes_spot,
+                                                     1e-9)
+                spot_inst = spot_inst + create * cap_share
 
-            # reconcile: used memory plus unplaceable pressure -> desired nodes
+            # reconcile: used memory plus unplaceable pressure -> desired
+            # nodes, split across tiers at the policy's spot fraction
             used = ((inst + starting.sum(axis=1)) * mem).sum()
             pressure = jnp.maximum(req_mb * (1.0 - scale), 0.0)
             needed = jnp.ceil((used + pressure) / (util_t * node_mem) - 1e-9)
             warm = jnp.ceil(warm_f * jnp.maximum(needed, 1.0) - 1e-9)
             desired_n = jnp.clip(needed + warm, min_n, max_n)
-            have_n = nodes + pipe.sum()
-            up = jnp.maximum(desired_n - have_n, 0.0)
+            desired_spot = jnp.round(desired_n * pol["spot_fraction"]) \
+                if has_spot else jnp.zeros(())
+            desired_od = desired_n - desired_spot
+            have_od = nodes + pipe.sum()
+            have_spot = nodes_spot + pipe_spot.sum()
+            up = jnp.maximum(desired_od - have_od, 0.0)
             pipe = pipe.at[prov_ticks - 1].add(up)
-            down_want = jnp.maximum(have_n - desired_n, 0.0)
-            max_down = jnp.maximum(nodes - jnp.ceil(used / node_mem), 0.0)
-            down = jnp.where(cool <= 0.0, jnp.minimum(down_want, max_down), 0.0)
+            up_spot = jnp.maximum(desired_spot - have_spot, 0.0)
+            pipe_spot = pipe_spot.at[prov_ticks - 1].add(up_spot)
+            down_want = jnp.maximum(have_od - desired_od, 0.0)
+            down_want_spot = jnp.maximum(have_spot - desired_spot, 0.0)
+            max_down = jnp.maximum(nodes + nodes_spot
+                                   - jnp.ceil(used / node_mem), 0.0)
+            # each tier can only terminate its own UP nodes (down_want
+            # counts un-cancellable pipeline nodes, and max_down spans
+            # both tiers, so without the per-tier clamp a drained tier
+            # could be driven negative)
+            down_spot = jnp.where(cool <= 0.0,
+                                  jnp.minimum(jnp.minimum(down_want_spot,
+                                                          max_down),
+                                              nodes_spot), 0.0)
+            down = jnp.where(cool <= 0.0,
+                             jnp.minimum(jnp.minimum(down_want,
+                                                     max_down - down_spot),
+                                         nodes), 0.0)
             nodes = nodes - down
-            cool = jnp.where(down > 0.0, jnp.ceil(cool_s / dt),
+            nodes_spot = nodes_spot - down_spot
+            down_all = down + down_spot
+            cool = jnp.where(down_all > 0.0, jnp.ceil(cool_s / dt),
                              jnp.maximum(cool - 1.0, 0.0))
-            nodes_billed = nodes + pipe.sum()
+            nodes_billed = nodes + nodes_spot + pipe.sum() + pipe_spot.sum() \
+                + evict_bill
+            spot_billed = nodes_spot + pipe_spot.sum() + evict_bill
         else:
             starting = starting.at[:, cold_ticks - 1].add(create)
             nodes_billed = jnp.asarray(static_nodes, jnp.float32)
+            spot_billed = jnp.zeros(())
 
         # queue-delay estimator for THIS tick's arrivals: drain with the
         # capacity that will exist once in-flight creations finish, plus the
@@ -308,9 +431,12 @@ def _make_step(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
         delay = queue_pos / drain + cold_wait
 
         (c_cw, c_cm, c_tw, c_tm, c_rq, c_idle, c_wfloor_node, c_mfloor) = cpu_consts
-        cpu_worker = create.sum() * c_cw + retire.sum() * c_tw \
+        # eviction-drained instances tear down gracefully during the notice
+        # window, so they cost teardown CPU like a policy retire
+        teard = retire.sum() + killed.sum() if has_spot else retire.sum()
+        cpu_worker = create.sum() * c_cw + teard * c_tw \
             + idle.sum() * c_idle * dt + c_wfloor_node * nodes_billed * dt
-        cpu_master = create.sum() * c_cm + retire.sum() * c_tm \
+        cpu_master = create.sum() * c_cm + teard * c_tm \
             + dispatch.sum() * c_rq + c_mfloor * dt
         useful = (completions * dur).sum()
 
@@ -323,9 +449,10 @@ def _make_step(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
               ((inst + pending) * mem).sum() + prewarm_mass,
               (busy_inst * mem).sum(),
               create.sum(), cpu_worker, cpu_master, useful, nodes_billed,
-              completions.sum())
+              completions.sum(), spot_billed)
         return (inst, in_service, queue, starting, win_, wcur + 1,
-                nodes, pipe, cool), ys
+                nodes, pipe, cool, nodes_spot, pipe_spot, spot_inst,
+                evict_deficit), ys
 
     return step
 
@@ -364,6 +491,7 @@ class JaxSimResult:
     useful: np.ndarray
     nodes: np.ndarray      # (T,) billable node count (static fleet: constant)
     completions: np.ndarray  # (T,) fluid request completions
+    spot_nodes: np.ndarray  # (T,) billable SPOT share of nodes (0 w/o spot)
     dt: float
     dur: np.ndarray        # (F,)
     fleet: Optional[JaxFleet] = None
@@ -379,7 +507,7 @@ class JaxSimResult:
 
 _YS_NAMES = ["delay", "arrivals", "arr_delayed", "instances", "mem_total",
              "mem_busy", "creations", "cpu_worker", "cpu_master", "useful",
-             "nodes", "completions"]
+             "nodes", "completions", "spot_nodes"]
 
 
 def _prep_static(trace: Trace, policy: JaxPolicy, sim: SimConfig, dt: float):
@@ -457,7 +585,7 @@ def summarize(res: JaxSimResult, warmup_frac: float = 0.5,
                        res.mem_busy[sl].sum(), res.creations[sl].sum(),
                        res.cpu_worker[sl].sum(), res.cpu_master[sl].sum(),
                        res.useful[sl].sum(), res.nodes[sl].sum(),
-                       res.completions[sl].sum()])
+                       res.completions[sl].sum(), res.spot_nodes[sl].sum()])
     return _acc_summary(hist, weights.sum(axis=0), sums,
                         len(res.instances) - t0, edges, med, sig,
                         res.warm_latency_s, res.dt, iid_tail=res.sync_tail)
@@ -479,7 +607,7 @@ def summarize(res: JaxSimResult, warmup_frac: float = 0.5,
 # scalar per-tick series accumulated post-warmup (order matches ys[3:];
 # ys[0:3] are the per-function delay / arrivals / delayed-arrivals vectors)
 _ACC_NAMES = ("instances", "mem_total", "mem_busy", "creations", "cpu_worker",
-              "cpu_master", "useful", "nodes", "completions")
+              "cpu_master", "useful", "nodes", "completions", "spot_nodes")
 
 
 def _delay_edges(nbins: int) -> np.ndarray:
@@ -616,6 +744,8 @@ def _acc_summary(hist, arrtot, sums, n, edges, dur_median, dur_sigma, warm,
         "instances_mean": float(s["instances"] / n),
         "nodes_mean": float(s["nodes"] / n),
         "node_seconds": float(s["nodes"] * dt),
+        "spot_nodes_mean": float(s["spot_nodes"] / n),
+        "spot_node_seconds": float(s["spot_nodes"] * dt),
         "completed": float(s["completions"]),
         "cpu_worker_s": float(w),
         "cpu_master_s": float(m),

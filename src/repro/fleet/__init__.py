@@ -1,7 +1,8 @@
 # Two-level autoscaling: the node-fleet layer under the per-function
 # instance policies — node lifecycle + fleet policies + dollar-cost
 # accounting + the control-plane capacity manager + the vmapped
-# policy-parameter sweep over the lax.scan simulator.
+# policy-parameter sweep over the lax.scan simulator + the spot capacity
+# tiers (preemption hazards, reclaim notices, per-tier billing).
 from repro.fleet.costs import CostReport, PriceBook, cost_from_sim, cost_report  # noqa: F401
 from repro.fleet.manager import FleetManager  # noqa: F401
 from repro.fleet.nodes import NodeFleet, NodeType  # noqa: F401
@@ -10,4 +11,12 @@ from repro.fleet.policies import (  # noqa: F401
     ScheduleFleetPolicy,
     ThresholdFleetPolicy,
     UtilizationFleetPolicy,
+)
+from repro.fleet.spot import (  # noqa: F401
+    CapacityTier,
+    SpotMarket,
+    SpotNodeFleet,
+    get_tier,
+    list_tiers,
+    register_tier,
 )

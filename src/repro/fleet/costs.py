@@ -25,7 +25,11 @@ from repro.fleet.nodes import NodeType
 @dataclasses.dataclass(frozen=True)
 class PriceBook:
     master_vcpu_per_hour: float = 0.048   # managed control-plane vCPU $/h
-    spot_discount: float = 0.0            # 0.7 -> nodes at 30% of on-demand
+    # spot-tier discount: 0.65 -> SPOT node-hours bill at 35% of on-demand.
+    # Applied ONLY to the ``spot_node_seconds`` share of the fleet — a
+    # mixed fleet bills each tier at its own rate (it used to be applied
+    # fleet-wide, which overstated the savings of any partial-spot fleet).
+    spot_discount: float = 0.0
 
 
 @dataclasses.dataclass
@@ -47,17 +51,24 @@ class CostReport:
 def cost_report(*, node_seconds: float, cpu_worker_overhead_s: float,
                 cpu_master_overhead_s: float, idle_node_share: float,
                 completed: int, node_type: NodeType = NodeType(),
-                prices: PriceBook = PriceBook()) -> CostReport:
+                prices: PriceBook = PriceBook(),
+                spot_node_seconds: float = 0.0) -> CostReport:
     """``idle_node_share``: fraction of fleet capacity held by idle-warm
     instances (e.g. ``(mem_total - mem_busy) / fleet capacity`` averaged
-    over the measurement window)."""
+    over the measurement window).  ``spot_node_seconds`` is the share of
+    ``node_seconds`` billed on the spot tier (at ``1 - spot_discount`` of
+    the on-demand rate); billing is per tier, never fleet-wide."""
     node_hours = node_seconds / 3600.0
-    node_rate = node_type.price_per_hour * (1.0 - prices.spot_discount)
-    node_cost = node_hours * node_rate
+    od_rate = node_type.price_per_hour
+    spot_rate = od_rate * (1.0 - prices.spot_discount)
+    spot_hours = min(max(spot_node_seconds, 0.0), node_seconds) / 3600.0
+    node_cost = (node_hours - spot_hours) * od_rate + spot_hours * spot_rate
 
     # churn CPU runs on the workers: price it at the per-vCPU slice of the
-    # node rate it occupies.
-    churn_cost = (cpu_worker_overhead_s / 3600.0) * (node_rate / node_type.vcpus)
+    # fleet's BLENDED rate (a mixed fleet churns on both tiers).
+    blended_rate = node_cost / node_hours if node_hours > 0.0 else od_rate
+    churn_cost = (cpu_worker_overhead_s / 3600.0) \
+        * (blended_rate / node_type.vcpus)
     idle_cost = node_cost * max(0.0, min(1.0, idle_node_share))
 
     master_cpu_hours = cpu_master_overhead_s / 3600.0
@@ -88,4 +99,5 @@ def cost_from_sim(result, node_type: NodeType = NodeType(),
         cpu_master_overhead_s=result.cpu_master_overhead_s,
         idle_node_share=idle_mb / cap_mb,
         completed=len(result.records),
-        node_type=node_type, prices=prices)
+        node_type=node_type, prices=prices,
+        spot_node_seconds=result.spot_node_seconds)

@@ -51,6 +51,11 @@ class NodeFleet:
         self.provisions = 0
         self.terminations = 0
         self.node_seconds = 0.0
+        # spot-tier accounting: an on-demand-only fleet never touches these;
+        # repro.fleet.spot.SpotNodeFleet drives them (the simulators read
+        # them unconditionally, so they live on the base class)
+        self.evictions = 0
+        self.spot_node_seconds = 0.0
 
     # -- demand signals ---------------------------------------------------------
 
@@ -73,9 +78,7 @@ class NodeFleet:
         provisioned: list[Node] = []
         draining: list[Node] = []
         if desired > have:
-            for _ in range(desired - have):
-                node = cluster.add_node(self.node_type.memory_mb)
-                provisioned.append(node)
+            provisioned = self._provision(cluster, desired - have)
             self.provisions += len(provisioned)
         elif desired < have and t >= self._cooldown_until:
             # drain the emptiest up-nodes first so reclamation is fast
@@ -86,6 +89,18 @@ class NodeFleet:
             if draining:
                 self._cooldown_until = t + self.cooldown_s
         return provisioned, draining
+
+    def _provision(self, cluster: Cluster, count: int) -> list[Node]:
+        """Buy ``count`` nodes; the spot subclass overrides this to split
+        the purchase across capacity tiers."""
+        return [cluster.add_node(self.node_type.memory_mb)
+                for _ in range(count)]
+
+    def pop_evictions(self) -> list[tuple[Node, float]]:
+        """(node, force-termination deadline) pairs announced since the
+        last call — the reclaim notices the simulator must schedule.  An
+        on-demand fleet never announces any."""
+        return []
 
     def node_ready(self, node: Node) -> None:
         if node.state == PROVISIONING and node.alive:

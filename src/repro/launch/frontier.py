@@ -102,6 +102,18 @@ def main(argv=None) -> int:
         for name in list_scenarios():
             sc = get_scenario(name)
             print(f"{name:20s} {sc.figure:45s} {sc.description}")
+        from repro.core.policy_api import get_family, list_families
+        from repro.core.simjax import _PFLEET
+        from repro.fleet.spot import get_tier, list_tiers
+        print("\nsweepable policy axes (per registered family):")
+        for fam_name in list_families():
+            fam = get_family(fam_name)
+            axes = ", ".join(fam.sweepable_axes()) or "-"
+            print(f"  {fam_name:12s} {axes}")
+        print(f"fleet axes: {', '.join(_PFLEET)}")
+        print("capacity tiers: " + ", ".join(
+            f"{n} ({get_tier(n).price_multiplier:.2f}x, "
+            f"{get_tier(n).hazard_per_hour:g}/h)" for n in list_tiers()))
         return 0
 
     say = (lambda s: None) if args.quiet else \

@@ -25,8 +25,10 @@ import argparse
 import csv
 import sys
 
+from repro.fleet.spot import get_tier, list_tiers
 from repro.scenarios import (ENGINES, get_scenario, list_scenarios,
                              parity_report, run_scenario)
+from repro.scenarios.runner import apply_tier
 
 # stable CSV column order: identity, run info, then the paper metric core
 _COLUMNS = ["scenario", "engine", "scale", "num_functions", "invocations",
@@ -62,13 +64,34 @@ def main(argv=None) -> int:
     ap.add_argument("--force-oracle", action="store_true",
                     help="run the discrete-event oracle even for scenarios "
                          "flagged infeasible at this scale")
+    ap.add_argument("--tier", default=None,
+                    help="run spot-capable scenarios under this capacity "
+                         "tier (hazard, reclaim notice, discount); "
+                         "see --list for registered tiers")
     args = ap.parse_args(argv)
 
     if args.list:
         for name in list_scenarios():
             sc = get_scenario(name)
             print(f"{name:20s} {sc.figure:45s} {sc.description}")
+        print("\ncapacity tiers (--tier):")
+        for name in list_tiers():
+            t = get_tier(name)
+            print(f"  {name:12s} {t.price_multiplier:.2f}x on-demand, "
+                  f"{t.hazard_per_hour:g} reclaims/node-hour, "
+                  f"{t.reclaim_notice_s:g}s notice")
         return 0
+
+    tier = None
+    if args.tier is not None:
+        try:
+            tier = get_tier(args.tier)
+        except KeyError:
+            # a friendly listing, not a KeyError traceback
+            print(f"unknown capacity tier {args.tier!r}", file=sys.stderr)
+            print(f"registered tiers: {', '.join(list_tiers())} "
+                  f"(see --list)", file=sys.stderr)
+            return 2
 
     names = list_scenarios() if args.all else (args.scenario or [])
     if not names:
@@ -86,7 +109,15 @@ def main(argv=None) -> int:
 
     rows = []
     for name in names:
-        sc_rows = run_scenario(name, engines=engines, scale=args.scale,
+        target = name
+        if tier is not None:
+            tiered = apply_tier(get_scenario(name), tier)
+            if tiered is None:
+                print(f"note: {name} has no spot-capable policy/fleet; "
+                      f"--tier {tier.name} ignored for it", file=sys.stderr)
+            else:
+                target = tiered
+        sc_rows = run_scenario(target, engines=engines, scale=args.scale,
                                force_oracle=args.force_oracle)
         rows.extend(sc_rows)
         if args.parity:

@@ -95,7 +95,11 @@ def make_loss(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
     mask = jnp.asarray(((np.arange(n_chunks * trunc) >= warm_tick)
                         & (np.arange(n_chunks * trunc) < n_ticks))
                        .astype(np.float32))
-    node_rate = node_type.price_per_hour * (1.0 - prices.spot_discount)
+    # per-TIER node rates: the spot discount applies only to the scan's
+    # spot node-seconds (ys[12]), exactly as repro.fleet.costs bills —
+    # discounting the whole fleet would overstate any partial-spot savings
+    od_rate = node_type.price_per_hour
+    spot_rate = od_rate * (1.0 - prices.spot_discount)
     dur_mean = jnp.asarray(np.asarray(dur), jnp.float32)
     family = policy.family
 
@@ -113,7 +117,8 @@ def make_loss(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
             m = mask[t]
             w = arr_delayed * m
             scalars = scalars + m * jnp.stack(
-                [ys[10], ys[8], ys[11]])        # nodes, cpu_master, completed
+                [ys[10], ys[8], ys[11], ys[12]])
+            # ^ nodes, cpu_master, completed, spot nodes
             return (st, a_tot + arr_t * m, d1 + w * delay,
                     d2 + w * delay * delay, scalars), None
 
@@ -126,14 +131,18 @@ def make_loss(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
 
         init_nodes = fl[0] if has_fleet else jnp.asarray(float(num_nodes))
         init = (_init_state(f, cold_ticks, wbuf, prov_ticks, init_nodes),
-                jnp.zeros(f), jnp.zeros(f), jnp.zeros(f), jnp.zeros(3))
+                jnp.zeros(f), jnp.zeros(f), jnp.zeros(f), jnp.zeros(4))
         (_, a_tot, d1, d2, scalars), _ = jax.lax.scan(
             chunk, init, jnp.arange(n_chunks))
 
-        # $-cost proxy: node-seconds + master CPU, priced as fleet.costs
+        # $-cost proxy: per-tier node-seconds + master CPU, priced as
+        # fleet.costs (spot seconds at the discounted rate, the rest at
+        # on-demand)
         node_seconds, master_s = scalars[0] * dt, scalars[1]
+        spot_seconds = jnp.minimum(scalars[3] * dt, node_seconds)
         completed = jnp.maximum(scalars[2], 1.0)
-        cost = (node_seconds / 3600.0 * node_rate
+        cost = ((node_seconds - spot_seconds) / 3600.0 * od_rate
+                + spot_seconds / 3600.0 * spot_rate
                 + master_s / 3600.0 * prices.master_vcpu_per_hour)
         cost_per_million = cost / completed * 1e6
         # slowdown proxy: mean wait + delay-weighted mean wait per function
@@ -201,7 +210,7 @@ def train_policy(scenario: Union[str, Scenario], family: str = "learned",
     trace = sc.build_trace(scale)
     fleet = default_fleet(sc)
     loss_fn, params0 = make_loss(trace, policy, sim=sim, dt=sim.tick_s,
-                                 fleet=fleet, w_lat=w_lat)
+                                 fleet=fleet, w_lat=w_lat, prices=sc.prices)
 
     frozen = {k: v for k, v in params0.items() if k not in learnable}
     theta = {k: jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), v)
@@ -261,7 +270,7 @@ def learned_scenario(sc: Scenario, result: TrainResult) -> Scenario:
 
 def evaluate_trained(scenario: Union[str, Scenario], result: TrainResult,
                      scale: float = 1.0,
-                     prices: PriceBook = PriceBook()) -> dict:
+                     prices: Optional[PriceBook] = None) -> dict:
     """One frontier-style metric row (cost, p99, memory, ...) for the
     trained policy at the given scale — comparable against swept rows."""
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario

@@ -88,18 +88,24 @@ class SearchSpace:
 
 
 # The default joint space: the paper's keepalive ladder (Fig. 3-6) x the
-# Knative utilization targets (Fig. 7-8), crossed with the fleet's
-# warm-pool and packing-headroom knobs.  48 raw points; inert-axis
-# collapsing brings a sync scenario to 16 simulations and an async one
-# to 12.  ``cc`` and ``prewarm_s`` are fully traced axes and sweepable in
-# custom spaces, but stay out of the DEFAULT grid: the fluid model's cc>1
-# creation/slowdown fidelity and the hybrid's pre-warm are outside the
-# oracle-calibrated parity envelope (EXPERIMENTS.md, Frontier section), so
-# their winners would only be demoted by the oracle spot-check.
+# Knative utilization targets (Fig. 7-8) x the spot-tier purchase fraction
+# (Fig. 12), crossed with the fleet's warm-pool and packing-headroom
+# knobs.  96 raw points; inert-axis collapsing keeps a sync scenario at 16
+# simulations and an async one at 12 (``spot_fraction`` only acts under
+# the spot_aware family, so it collapses everywhere else).  ``cc`` and
+# ``prewarm_s`` are fully traced axes and sweepable in custom spaces, but
+# stay out of the DEFAULT grid: the fluid model's cc>1 creation/slowdown
+# fidelity and the hybrid's pre-warm are outside the oracle-calibrated
+# parity envelope (EXPERIMENTS.md, Frontier section), so their winners
+# would only be demoted by the oracle spot-check.  ``hazard_per_hour``
+# stays out too — it is the MARKET's reclaim rate, not an operator choice;
+# sweep it in custom spaces (benchmarks/fig12_spot_frontier.py) to compare
+# markets.
 DEFAULT_SPACE = SearchSpace(
     policy={
         "keepalive_s": (60.0, 300.0, 600.0, 1200.0),
         "target": (0.5, 0.7, 1.0),
+        "spot_fraction": (0.0, 0.6),
     },
     fleet={
         "util_target": (0.6, 0.8),

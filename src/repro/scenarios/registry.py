@@ -1,16 +1,19 @@
 """The scenario catalogue (EXPERIMENTS.md documents each one's knobs).
 
-Six scenarios spanning the workload families the serverless literature
+Seven scenarios spanning the workload families the serverless literature
 cares about: Shahrad'20's diurnal cycles and rare-but-bursty long tail,
 flash crowds, multi-tenant interference, the paper's own 2000-function /
-~3.5M-invocation KWOK-scale replay (Fig. 9), and a fleet-cost stress run
-for the two-level autoscaling layer (Fig. 10 territory).
+~3.5M-invocation KWOK-scale replay (Fig. 9), a fleet-cost stress run
+for the two-level autoscaling layer (Fig. 10 territory), and a spot-fleet
+preemption storm for the capacity-tier layer (Fig. 12 territory).
 """
 
 from __future__ import annotations
 
 from repro.core.simjax import JaxFleet
 from repro.core.trace import TraceConfig
+from repro.fleet.costs import PriceBook
+from repro.fleet.spot import SPOT_DEFAULT
 from repro.scenarios.spec import PolicySpec, Scenario
 from repro.scenarios.transforms import (BurstInject, RateScale, Splice,
                                         TenantMerge, TimeWarp)
@@ -124,4 +127,28 @@ register(Scenario(
     fleet=JaxFleet(node_memory_mb=32_768.0, provision_s=60.0, min_nodes=1,
                    max_nodes=48, util_target=0.7, warm_frac=0.25,
                    cooldown_s=120.0),
+))
+
+register(Scenario(
+    name="spot_storm",
+    description="A 60%-spot fleet under a preemption hazard: the market "
+                "keeps reclaiming warm capacity (2-min notice), in-flight "
+                "work re-queues, and every eviction triggers a cold-start "
+                "storm — the spot-aware policy holds hazard-scaled warm "
+                "headroom and the bill discounts only the spot tier.",
+    figure="new Fig. 12 (spot cost-vs-p99 frontier)",
+    # pure Poisson gaps (burst_amp=0): the keepalive-expiry renewal model's
+    # exact regime, so the parity band measures the SPOT model, not gap
+    # burstiness (see cold_tail)
+    base=TraceConfig(num_functions=300, duration_s=3600,
+                     target_total_rps=45.0, burst_amp=0.0, seed=27),
+    transforms=(RateScale(1.2),),
+    policy=PolicySpec(kind="spot_aware", keepalive_s=600,
+                      extra={"spot_fraction": 0.6,
+                             "hazard_per_hour": SPOT_DEFAULT.hazard_per_hour}),
+    fleet=JaxFleet(node_memory_mb=16_384.0, provision_s=60.0, min_nodes=1,
+                   max_nodes=64, util_target=0.7, warm_frac=0.25,
+                   cooldown_s=120.0,
+                   reclaim_notice_s=SPOT_DEFAULT.reclaim_notice_s),
+    prices=PriceBook(spot_discount=SPOT_DEFAULT.discount),
 ))

@@ -15,6 +15,7 @@ methodology of the paper's Fig. 9, generalized to a scenario family.
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Optional, Sequence, Union
 
@@ -24,8 +25,9 @@ from repro.core.metrics import compute
 from repro.core.simjax import JaxFleet, simulate_chunked
 from repro.fleet.nodes import NodeFleet, NodeType
 from repro.fleet.policies import UtilizationFleetPolicy
+from repro.fleet.spot import CapacityTier, SpotMarket, SpotNodeFleet
 from repro.scenarios.registry import get_scenario
-from repro.scenarios.spec import Scenario
+from repro.scenarios.spec import PolicySpec, Scenario
 
 ENGINES = ("eventsim", "simjax")
 
@@ -33,26 +35,74 @@ ENGINES = ("eventsim", "simjax")
 PARITY_KEYS = ("slowdown_geomean_p99", "normalized_memory", "creation_rate")
 
 
-def _oracle_fleet(jf: JaxFleet) -> NodeFleet:
-    """Lower the traced fleet parameters to the oracle's NodeFleet (the same
-    mapping the two-level parity tests pin)."""
+def _spot_knobs(spec: PolicySpec) -> tuple[float, float]:
+    """The (spot_fraction, hazard_per_hour) a policy spec carries, if its
+    family declares the spot axes (they ride the ``extra`` mapping)."""
+    extra = dict(spec.extra or {})
+    return (float(extra.get("spot_fraction", 0.0)),
+            float(extra.get("hazard_per_hour", 0.0)))
+
+
+def oracle_node_type(jf: JaxFleet) -> NodeType:
+    """The node shape a traced fleet lowers to: the default shape scaled
+    to the fleet's node size at constant $/GB-hour (also the basis the
+    frontier engine and fig12 bill on)."""
     base = NodeType()
     ratio = jf.node_memory_mb / base.memory_mb
-    nt = NodeType(memory_mb=jf.node_memory_mb, provision_s=jf.provision_s,
-                  vcpus=base.vcpus * ratio,
-                  price_per_hour=base.price_per_hour * ratio)
+    return NodeType(memory_mb=jf.node_memory_mb, provision_s=jf.provision_s,
+                    vcpus=base.vcpus * ratio,
+                    price_per_hour=base.price_per_hour * ratio)
+
+
+def _oracle_fleet(jf: JaxFleet, spec: Optional[PolicySpec] = None,
+                  seed: int = 0) -> NodeFleet:
+    """Lower the traced fleet parameters to the oracle's NodeFleet (the same
+    mapping the two-level parity tests pin).  A policy spec carrying spot
+    axes lowers to a ``SpotNodeFleet`` whose market runs the spec's hazard
+    with the fleet's reclaim notice (seeded: parity replays are
+    deterministic)."""
+    nt = oracle_node_type(jf)
     policy = UtilizationFleetPolicy(min_nodes=int(jf.min_nodes),
                                     max_nodes=int(jf.max_nodes),
                                     util_target=jf.util_target,
                                     warm_frac=jf.warm_frac)
+    sf, hz = _spot_knobs(spec) if spec is not None else (0.0, 0.0)
+    if sf > 0.0 or hz > 0.0:
+        tier = CapacityTier("spot", hazard_per_hour=hz,
+                            reclaim_notice_s=jf.reclaim_notice_s)
+        return SpotNodeFleet(policy, node_type=nt, cooldown_s=jf.cooldown_s,
+                             spot_fraction=sf,
+                             market=SpotMarket(tier, seed=seed))
     return NodeFleet(policy, node_type=nt, cooldown_s=jf.cooldown_s)
+
+
+def apply_tier(sc: Scenario, tier: CapacityTier) -> Optional[Scenario]:
+    """Re-spec a scenario to run under the given capacity tier: its
+    policy's ``hazard_per_hour`` axis, the fleet's reclaim notice, and the
+    tier discount in the PriceBook.  Returns None when the scenario cannot
+    express a tier (no fleet, or its policy family declares no spot axes) —
+    the CLI reports those instead of silently running them unchanged."""
+    if sc.fleet is None \
+            or "hazard_per_hour" not in sc.policy.family().axis_names():
+        return None
+    extra = {**dict(sc.policy.extra or {}),
+             "hazard_per_hour": tier.hazard_per_hour}
+    from repro.fleet.costs import PriceBook
+    return dataclasses.replace(
+        sc,
+        policy=dataclasses.replace(sc.policy, extra=extra),
+        fleet=dataclasses.replace(sc.fleet,
+                                  reclaim_notice_s=tier.reclaim_notice_s),
+        prices=PriceBook(
+            master_vcpu_per_hour=sc.prices.master_vcpu_per_hour,
+            spot_discount=tier.discount))
 
 
 def _run_eventsim(sc: Scenario, trace, sim: SimConfig) -> dict:
     if sc.fleet is not None:
         cluster = Cluster(max(1, int(sc.fleet.min_nodes)),
                           node_memory_mb=sc.fleet.node_memory_mb)
-        fleet = _oracle_fleet(sc.fleet)
+        fleet = _oracle_fleet(sc.fleet, sc.policy, seed=sim.seed)
     else:
         cluster = Cluster(sc.num_nodes)
         fleet = None
