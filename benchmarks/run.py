@@ -113,6 +113,26 @@ def run_quick() -> dict:
     metrics["fig12_spot_cost_ratio"] = (
         winner["cost_per_million"] / best_od["cost_per_million"]
         if winner is not None else math.inf)
+
+    # attribution ledger (repro.obs): trace diurnal through BOTH engines at
+    # the 0.25 parity-calibration point and gate on (a) attribution-sum
+    # consistency — components must reconstruct the aggregate ratios
+    # exactly, so the baseline is 0 and ANY inconsistency fails — and
+    # (b) the worst component-level oracle-vs-fluid gap (deterministic:
+    # fixed seeds, single scenario)
+    from repro.obs import (check_ledger, ledger_from_chunked,
+                           ledger_from_eventsim, ledger_parity)
+    from repro.scenarios import run_scenario
+    t0 = time.time()
+    detail: dict = {}
+    run_scenario("diurnal", scale=0.25, telemetry=64, detail=detail)
+    led_o = ledger_from_eventsim(detail["oracle_result"])
+    led_f = ledger_from_chunked(detail["fluid_summary"])
+    metrics["obs_wall_s"] = round(time.time() - t0, 3)
+    metrics["obs_attribution_problems"] = float(
+        len(check_ledger(led_o)) + len(check_ledger(led_f)))
+    metrics["obs_component_gap"] = max(
+        ledger_parity(led_o, led_f).values())
     return metrics
 
 

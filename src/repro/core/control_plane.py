@@ -159,10 +159,11 @@ class _Inst:
 
 class ControlPlane:
     def __init__(self, backend: WorkerBackend, policy_factory, num_functions: int,
-                 tick_s: float = 0.5, fleet=None):
+                 tick_s: float = 0.5, fleet=None, obs=None):
         self.backend = backend
         self.tick_s = tick_s
         self.fleet = fleet             # Optional[repro.fleet.FleetManager]
+        self.obs = obs                 # Optional[repro.obs.SpanRecorder]
         self.policies: list[Policy] = [policy_factory(f) for f in range(num_functions)]
         self.queues: list[deque] = [deque() for _ in range(num_functions)]
         self.instances: dict[int, _Inst] = {}
@@ -170,6 +171,11 @@ class ControlPlane:
         self.completed: list[ServeRequest] = []
         self._deferred_creates: deque = deque()
         self._last_tick = -math.inf
+        # span bookkeeping: req.rid -> [request sid, queue sid, execute sid]
+        # (-1 = closed/absent), iid -> open instance_create sid
+        self._rspans: dict = {}
+        self._cspans: dict[int, int] = {}
+        self._rtid = itertools.count()
 
     # -- helpers ------------------------------------------------------------------
 
@@ -202,17 +208,44 @@ class ControlPlane:
         inst = _Inst(iid, fn)
         self.instances[iid] = inst
         self.by_fn[fn].append(inst)
+        if self.obs:
+            self._cspans[iid] = self.obs.begin(
+                "instance_create", "instance", now, pid="instances",
+                tid=iid, fn=fn)
 
     def _teardown(self, inst, now):
         self.backend.teardown(inst.iid, now)
         self.instances.pop(inst.iid, None)
         self.by_fn[inst.fn].remove(inst)
+        if self.obs:
+            sid = self._cspans.pop(inst.iid, -1)
+            if sid >= 0:
+                self.obs.end(sid, now, aborted=True)
+            self.obs.instant("teardown", "instance", now, pid="instances",
+                             tid=inst.iid, fn=inst.fn)
+
+    def _dispatch(self, inst, req: ServeRequest, now: float):
+        inst.in_flight += 1
+        self.backend.dispatch(inst.iid, req, now)
+        if self.obs and req.rid in self._rspans:
+            sp = self._rspans[req.rid]
+            if sp[1] >= 0:
+                self.obs.end(sp[1], now)
+                sp[1] = -1
+            sp[2] = self.obs.begin(
+                "execute", "request", now, pid="requests",
+                tid=self.obs.spans[sp[0]].tid, parent=sp[0], fn=req.fn,
+                cold=req.cold, instance=inst.iid)
 
     # -- API ------------------------------------------------------------------------
 
     def submit(self, req: ServeRequest, now: float):
         fn = req.fn
         pol = self.policies[fn]
+        if self.obs:
+            sid = self.obs.begin("request", "request", now, pid="requests",
+                                 tid=next(self._rtid), fn=fn)
+            self._rspans[req.rid] = [sid, -1, -1]
         starting = sum(1 for i in self.by_fn[fn] if i.state == "starting")
         dec = pol.on_arrival(now, len(self._idle(fn)), self._busy_free_slots(fn),
                              starting, len(self.queues[fn]))
@@ -220,10 +253,14 @@ class ControlPlane:
             self._create(fn, now)
         inst = self._free_slot_inst(fn)
         if inst is not None:
-            inst.in_flight += 1
-            self.backend.dispatch(inst.iid, req, now)
+            self._dispatch(inst, req, now)
         else:
             req.cold = True
+            if self.obs and req.rid in self._rspans:
+                sp = self._rspans[req.rid]
+                sp[1] = self.obs.begin(
+                    "queue", "request", now, pid="requests",
+                    tid=self.obs.spans[sp[0]].tid, parent=sp[0], fn=fn)
             self.queues[fn].append(req)
 
     def tick(self, now: float):
@@ -241,6 +278,10 @@ class ControlPlane:
                 continue
             inst.state = "up"
             inst.idle_since = now
+            if self.obs:
+                sid = self._cspans.pop(iid, -1)
+                if sid >= 0:
+                    self.obs.end(sid, now)
         # 2. completions free slots
         for iid, req in self.backend.poll_completions(now):
             self.completed.append(req)
@@ -249,15 +290,19 @@ class ControlPlane:
                 inst.in_flight = max(0, inst.in_flight - 1)
                 if inst.in_flight == 0:
                     inst.idle_since = now
+            if self.obs:
+                sp = self._rspans.pop(req.rid, None)
+                if sp is not None:
+                    if sp[2] >= 0:
+                        self.obs.end(sp[2], now)
+                    self.obs.end(sp[0], now)
         # 3. drain queues into free slots
         for fn, q in enumerate(self.queues):
             while q:
                 inst = self._free_slot_inst(fn)
                 if inst is None:
                     break
-                req = q.popleft()
-                inst.in_flight += 1
-                self.backend.dispatch(inst.iid, req, now)
+                self._dispatch(inst, q.popleft(), now)
         # 4. policy reconciliation + keepalive expiry
         for fn, pol in enumerate(self.policies):
             conc = sum(i.in_flight for i in self.by_fn[fn]) + len(self.queues[fn])

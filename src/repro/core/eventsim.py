@@ -75,11 +75,16 @@ class RequestRecord:
     dur: float = 0.0
     cold: bool = False
     requeued: int = 0
+    # span bookkeeping (repro.obs): ids of this request's open request /
+    # queue / execute spans; -1 when tracing is off or the span is closed
+    sid: int = dataclasses.field(default=-1, repr=False, compare=False)
+    qsid: int = dataclasses.field(default=-1, repr=False, compare=False)
+    xsid: int = dataclasses.field(default=-1, repr=False, compare=False)
 
 
 class _Instance:
     __slots__ = ("iid", "fn", "node", "cc", "in_flight", "state", "idle_since",
-                 "expire_version", "memory_mb")
+                 "expire_version", "memory_mb", "csid")
 
     def __init__(self, iid, fn, node, cc, memory_mb):
         self.iid, self.fn, self.node, self.cc = iid, fn, node, cc
@@ -88,6 +93,7 @@ class _Instance:
         self.idle_since = math.nan
         self.expire_version = 0
         self.memory_mb = memory_mb
+        self.csid = -1                     # open instance_create span id
 
 
 class _FnState:
@@ -140,23 +146,34 @@ class SimResult:
     # spot-tier accounting (zero for an on-demand-only fleet)
     spot_node_seconds: float = 0.0
     node_evictions: int = 0
+    # overhead attribution (repro.obs.ledger): the measured-window CPU
+    # split into creation churn / eviction storms / keepalive idle (the
+    # control-plane remainder is the residual), plus the still-starting
+    # memory samples behind the pipeline share of normalized memory
+    mem_samples_starting_mb: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
+    cpu_churn_creation_s: float = 0.0
+    cpu_evict_storm_s: float = 0.0
+    cpu_keepalive_idle_s: float = 0.0
 
 
 class EventSim:
     def __init__(self, trace: Trace, cluster: Cluster, policy_factory: Callable[[int], Policy],
                  cfg: SimConfig = SimConfig(),
                  failures: Optional[list[tuple[float, int]]] = None,
-                 fleet=None):
+                 fleet=None, obs=None):
         self.trace = trace
         self.cluster = cluster
         self.cfg = cfg
         self.fleet = fleet                 # Optional[repro.fleet.NodeFleet]
+        self.obs = obs                     # Optional[repro.obs.SpanRecorder]
         self.rng = np.random.default_rng(cfg.seed)
         self.fns = [_FnState(policy_factory(f)) for f in range(trace.num_functions)]
         self.failures = sorted(failures or [])
         self._events: list = []
         self._counter = itertools.count()
         self._iid = itertools.count()
+        self._rid = itertools.count()      # request span track ids
         # deferred creations per function, clamped to real queued demand so
         # level-based policies re-issuing creates every tick can't stack
         # duplicate deferrals (and duplicate scale-up pressure)
@@ -169,10 +186,21 @@ class EventSim:
         self.cpu_master = 0.0
         self.mem_total: list[float] = []
         self.mem_busy: list[float] = []
+        self.mem_start: list[float] = []
         self.sample_t: list[float] = []
         self.node_samples: list[int] = []
         self.node_seconds = 0.0
         self.dropped = 0
+        # overhead attribution (repro.obs.ledger): measured-window CPU by
+        # cause; ``_evict_debt`` counts eviction-killed instances per
+        # function whose recreate (the next cold start) belongs to the
+        # eviction storm, not to ordinary creation churn — the discrete
+        # twin of the fluid engine's ``evict_deficit`` carry
+        self.att_create = 0.0
+        self.att_evict = 0.0
+        self.att_idle = 0.0
+        self._evict_debt: dict[int, int] = {}
+        self._drain_sids: dict[int, int] = {}   # node_id -> open drain span
         self._measure_from = cfg.warmup_s if cfg.warmup_s is not None \
             else trace.duration_s / 2
 
@@ -196,6 +224,10 @@ class EventSim:
             if t > end_t and kind in ("tick",):
                 continue
             getattr(self, f"_on_{kind}")(t, payload)
+        if self.obs:
+            # requests still queued / instances still starting when the
+            # trace ends close here, tagged ``truncated``
+            self.obs.finish(end_t)
         fl = self.fleet
         return SimResult(
             self.records, self.creations, self.teardowns, self.cpu_useful,
@@ -208,10 +240,20 @@ class EventSim:
             node_terminations=fl.terminations if fl else 0,
             nodes_hint=sum(1 for n in self.cluster.nodes if n.billable),
             spot_node_seconds=fl.spot_node_seconds if fl else 0.0,
-            node_evictions=fl.evictions if fl else 0)
+            node_evictions=fl.evictions if fl else 0,
+            mem_samples_starting_mb=np.asarray(self.mem_start),
+            cpu_churn_creation_s=self.att_create,
+            cpu_evict_storm_s=self.att_evict,
+            cpu_keepalive_idle_s=self.att_idle)
 
     def _measuring(self, t) -> bool:
         return t >= self._measure_from
+
+    def _node_evicting(self, node) -> bool:
+        """Is this node under an announced (not yet enforced) spot reclaim?
+        Teardowns on announced nodes belong to the eviction storm."""
+        return self.fleet is not None \
+            and node.node_id in getattr(self.fleet, "announced_ids", ())
 
     # -- instance lifecycle ----------------------------------------------------------
 
@@ -233,15 +275,33 @@ class EventSim:
         inst = _Instance(next(self._iid), fn, node, fs.policy.container_concurrency, mem)
         fs.instances.append(inst)
         fs.starting += 1
+        # an eviction-killed instance's recreate is eviction-storm CPU, not
+        # ordinary churn: each kill registers one debt unit, drained by the
+        # next create (the fluid twin drains ``evict_deficit`` identically)
+        evict_recreate = self._evict_debt.get(fn, 0) > 0
+        if evict_recreate:
+            self._evict_debt[fn] -= 1
+            if self._evict_debt[fn] <= 0:
+                del self._evict_debt[fn]
         if self._measuring(t):
             self.creations += 1
             self.cpu_worker += self.cfg.cpu_create_worker_s
             self.cpu_master += self.cfg.cpu_create_master_s
+            cpu = self.cfg.cpu_create_worker_s + self.cfg.cpu_create_master_s
+            if evict_recreate:
+                self.att_evict += cpu
+            else:
+                self.att_create += cpu
         delay = self.cfg.cold_start_s * (1 + self.cfg.cold_start_jitter * self.rng.uniform(-1, 1))
         delay *= inst.node.slowdown
+        if self.obs:
+            inst.csid = self.obs.begin(
+                "instance_create", "instance", t, pid="instances",
+                tid=inst.iid, fn=fn, node=node.node_id,
+                evict_recreate=evict_recreate)
         self._push(t + delay, "ready", inst)
 
-    def _teardown(self, t: float, inst: _Instance):
+    def _teardown(self, t: float, inst: _Instance, reason: str = "keepalive"):
         if inst.state == "dead":
             return
         if inst.state == "starting":
@@ -251,10 +311,24 @@ class EventSim:
         if inst in fs.instances:
             fs.instances.remove(inst)
         self.cluster.release(inst.node, inst.memory_mb)
+        evicting = self._node_evicting(inst.node)
         if self._measuring(t):
             self.teardowns += 1
+            # graceful-teardown CPU stays in the master_control residual of
+            # the attribution ledger (it is control-plane/kubelet work, and
+            # the engines disagree on WHEN idle mass sheds around the
+            # measurement boundary — pairing it with creation would
+            # concentrate that timing skew in one component)
             self.cpu_worker += self.cfg.cpu_teardown_worker_s
             self.cpu_master += self.cfg.cpu_teardown_master_s
+        if self.obs:
+            if inst.csid >= 0:
+                self.obs.end(inst.csid, t, aborted=True)
+                inst.csid = -1
+            self.obs.emit("teardown", "instance", t,
+                          t + self.cfg.teardown_s, pid="instances",
+                          tid=inst.iid, fn=inst.fn,
+                          reason="evict_notice" if evicting else reason)
 
     def _schedule_expire(self, t: float, inst: _Instance):
         fs = self.fns[inst.fn]
@@ -279,6 +353,14 @@ class EventSim:
         self._push(t + service, "done", (inst, rec))
         if self._measuring(t):
             self.cpu_master += self.cfg.cpu_request_s
+        if self.obs and rec.sid >= 0:
+            if rec.qsid >= 0:
+                self.obs.end(rec.qsid, rec.start)
+                rec.qsid = -1
+            rec.xsid = self.obs.begin(
+                "execute", "request", rec.start, pid="requests",
+                tid=self.obs.spans[rec.sid].tid, parent=rec.sid,
+                fn=rec.fn, cold=rec.cold, instance=inst.iid)
 
     def _drain_queue(self, t: float, fs: _FnState):
         while fs.queue:
@@ -291,6 +373,9 @@ class EventSim:
 
     def _on_arrival(self, t: float, rec: RequestRecord):
         fs = self.fns[rec.fn]
+        if self.obs:
+            rec.sid = self.obs.begin("request", "request", t, pid="requests",
+                                     tid=next(self._rid), fn=rec.fn)
         decision = fs.policy.on_arrival(
             t, fs.idle_count, fs.busy_free_slots, fs.starting, len(fs.queue))
         for _ in range(decision.create):
@@ -300,6 +385,11 @@ class EventSim:
             self._dispatch(t, inst, rec)
         else:
             rec.cold = True
+            if self.obs and rec.sid >= 0:
+                rec.qsid = self.obs.begin(
+                    "queue", "request", t, pid="requests",
+                    tid=self.obs.spans[rec.sid].tid, parent=rec.sid,
+                    fn=rec.fn)
             fs.queue.append(rec)
 
     def _on_ready(self, t: float, inst: _Instance):
@@ -309,16 +399,25 @@ class EventSim:
         inst.state = "up"
         fs.starting -= 1
         inst.idle_since = t
+        if self.obs and inst.csid >= 0:
+            self.obs.end(inst.csid, t)
+            inst.csid = -1
         self._drain_queue(t, fs)
         if inst.in_flight == 0:
             if inst.node.state == DRAINING:
-                self._teardown(t, inst)    # node is going away: don't linger
+                self._teardown(t, inst, reason="node_drain")
             else:
                 self._schedule_expire(t, inst)
 
     def _on_done(self, t: float, payload):
         inst, rec = payload
         rec.end = t
+        if self.obs and rec.sid >= 0:
+            if rec.xsid >= 0:
+                self.obs.end(rec.xsid, t)
+                rec.xsid = -1
+            self.obs.end(rec.sid, t, requeued=rec.requeued)
+            rec.sid = -1
         if self._measuring(rec.arrival) and not math.isnan(rec.start):
             self.cpu_useful += rec.dur
         if self._measuring(rec.arrival):
@@ -330,7 +429,7 @@ class EventSim:
         self._drain_queue(t, fs)
         if inst.in_flight == 0 and inst.state == "up":
             if inst.node.state == DRAINING:
-                self._teardown(t, inst)    # node is going away: don't linger
+                self._teardown(t, inst, reason="node_drain")
             else:
                 inst.idle_since = t
                 self._schedule_expire(t, inst)
@@ -363,7 +462,7 @@ class EventSim:
             self._drain_queue(t, fs)
 
     def _on_tick(self, t: float, _):
-        total_mb = busy_mb = 0.0
+        total_mb = busy_mb = start_mb = 0.0
         n_idle = 0
         for fidx, fs in enumerate(self.fns):
             dec = fs.policy.on_tick(t, fs.concurrency,
@@ -376,13 +475,15 @@ class EventSim:
                                 if i.state == "up" and i.in_flight == 0),
                                key=lambda i: i.idle_since)
                 for inst in idles[:dec.retire]:
-                    self._teardown(t, inst)
+                    self._teardown(t, inst, reason="retire")
             for i in fs.instances:
                 total_mb += i.memory_mb
                 if i.in_flight > 0:
                     busy_mb += i.memory_mb
                 elif i.state == "up":
                     n_idle += 1
+                elif i.state == "starting":
+                    start_mb += i.memory_mb
         if self.fleet is not None:
             self._fleet_tick(t)
         if self._measuring(t):
@@ -391,8 +492,10 @@ class EventSim:
                                 + alive_nodes * self.cfg.cpu_worker_floor_per_node_s
                                 ) * self.cfg.tick_s
             self.cpu_master += self.cfg.cpu_master_floor_per_s * self.cfg.tick_s
+            self.att_idle += n_idle * self.cfg.cpu_idle_per_s * self.cfg.tick_s
             self.mem_total.append(total_mb)
             self.mem_busy.append(busy_mb)
+            self.mem_start.append(start_mb)
             self.sample_t.append(t)
 
     def _fleet_tick(self, t: float):
@@ -404,8 +507,19 @@ class EventSim:
         fleet.note_pressure(self._pending_pressure_mb())
         provisioned, draining = fleet.reconcile(t, self.cluster)
         for node in provisioned:
+            if self.obs:
+                self.obs.emit("node_provision", "node", t,
+                              t + fleet.node_type.provision_s, pid="nodes",
+                              tid=node.node_id, spot=node.spot)
             self._push(t + fleet.node_type.provision_s, "node_ready", node)
         if draining:
+            if self.obs:
+                for node in draining:
+                    if node.node_id not in self._drain_sids:
+                        self._drain_sids[node.node_id] = self.obs.begin(
+                            "node_drain", "node", t, pid="nodes",
+                            tid=node.node_id,
+                            evict=self._node_evicting(node))
             # idle and still-starting instances on a draining node are torn
             # down now (busy ones finish via _on_done); demand they were
             # covering re-registers as a deferred create so it lands on a
@@ -416,7 +530,12 @@ class EventSim:
                              if id(i.node) in drain_set and i.in_flight == 0
                              and i.state in ("up", "starting")]:
                     was_starting = inst.state == "starting"
-                    self._teardown(t, inst)
+                    if self._node_evicting(inst.node):
+                        # an evicted warm/starting instance's replacement
+                        # cold start is eviction-storm work
+                        self._evict_debt[fidx] = \
+                            self._evict_debt.get(fidx, 0) + 1
+                    self._teardown(t, inst, reason="scale_down")
                     if was_starting and fs.queue:
                         self._pending_creates[fidx] = min(
                             self._pending_creates.get(fidx, 0) + 1,
@@ -426,16 +545,21 @@ class EventSim:
         # busy at the notice deadline is force-evicted
         for node, deadline in fleet.pop_evictions():
             self._push(deadline, "node_evict", node)
-        fleet.maybe_reclaim(self.cluster)
+        for node in (fleet.maybe_reclaim(self.cluster) or ()):
+            sid = self._drain_sids.pop(node.node_id, -1)
+            if self.obs and sid >= 0:
+                self.obs.end(sid, t, reclaimed=True)
         if self._measuring(t):
             billed = fleet.bill(self.cluster, self.cfg.tick_s)
             self.node_seconds += billed * self.cfg.tick_s
             self.node_samples.append(billed)
 
-    def _kill_node_instances(self, t: float, node):
+    def _kill_node_instances(self, t: float, node, evict: bool = False):
         """Mark every instance on ``node`` dead (abrupt death: teardowns
         counted, no graceful-teardown CPU) — shared by node failures and
-        forced spot evictions."""
+        forced spot evictions.  An eviction registers one unit of
+        ``_evict_debt`` per kill so the replacement cold start is
+        attributed to the storm."""
         for fs in self.fns:
             dead = [i for i in fs.instances if i.node is node]
             for inst in dead:
@@ -443,8 +567,19 @@ class EventSim:
                     fs.starting -= 1
                 inst.state = "dead"
                 fs.instances.remove(inst)
+                if evict:
+                    self._evict_debt[inst.fn] = \
+                        self._evict_debt.get(inst.fn, 0) + 1
                 if self._measuring(t):
                     self.teardowns += 1
+                if self.obs:
+                    if inst.csid >= 0:
+                        self.obs.end(inst.csid, t, aborted=True)
+                        inst.csid = -1
+                    self.obs.instant(
+                        "instance_evicted" if evict else "instance_failed",
+                        "instance", t, pid="instances", tid=inst.iid,
+                        fn=inst.fn)
 
     def _requeue_inflight(self, t: float, node):
         """Re-queue the in-flight requests of ``node``'s dead instances
@@ -457,6 +592,14 @@ class EventSim:
                     and payload[0].state == "dead":
                 rec = payload[1]
                 rec.requeued += 1
+                if self.obs and rec.sid >= 0:
+                    if rec.xsid >= 0:
+                        self.obs.end(rec.xsid, t, evicted=True)
+                        rec.xsid = -1
+                    rec.qsid = self.obs.begin(
+                        "queue", "request", t, pid="requests",
+                        tid=self.obs.spans[rec.sid].tid, parent=rec.sid,
+                        fn=rec.fn, requeue=rec.requeued)
                 fs = self.fns[rec.fn]
                 dec = fs.policy.on_arrival(t, fs.idle_count,
                                            fs.busy_free_slots, fs.starting,
@@ -477,9 +620,15 @@ class EventSim:
         fleet = self.fleet
         if fleet is None or not node.alive or node.state == GONE:
             return                      # drained empty and reclaimed already
-        self._kill_node_instances(t, node)
+        self._kill_node_instances(t, node, evict=True)
         self._requeue_inflight(t, node)
         fleet.force_evict(node, self.cluster)
+        if self.obs:
+            sid = self._drain_sids.pop(node.node_id, -1)
+            if sid >= 0:
+                self.obs.end(sid, t, evicted=True)
+            self.obs.instant("node_evict", "node", t, pid="nodes",
+                             tid=node.node_id)
         for fs in self.fns:
             self._drain_queue(t, fs)
 

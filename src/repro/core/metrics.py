@@ -36,6 +36,11 @@ class Metrics:
     queueing_p99: float
     cold_fraction: float
     completed: int
+    # requests the static cluster refused (creation failed, nothing queued
+    # them).  Non-zero dropped explains NaN queueing/cold columns: an
+    # all-drop run has no records at all, which would otherwise read as
+    # silently "no data".
+    dropped: int = 0
     # node-fleet layer (NaN/0 when simulating a static cluster)
     nodes_mean: float = math.nan
     node_hours: float = 0.0
@@ -50,17 +55,33 @@ class Metrics:
 
 
 def per_function_p99_slowdown(result: SimResult, min_requests: int = 5) -> np.ndarray:
-    by_fn: dict[int, list[float]] = {}
-    for r in result.records:
-        if math.isnan(r.end):
-            continue
-        slow = max((r.end - r.arrival) / max(r.dur, 1e-6), 1.0)
-        by_fn.setdefault(r.fn, []).append(slow)
-    out = []
-    for fn, v in by_fn.items():
-        if len(v) >= min_requests:
-            out.append(float(np.percentile(v, 99)))
-    return np.asarray(out)
+    """Vectorized sort/groupby: one lexsort over (fn, slowdown), then each
+    function's p99 by linear interpolation inside its sorted run — exactly
+    ``np.percentile(v, 99)`` per group, without the per-record Python loop
+    (the fig9-scale oracle replay has ~3.5M records)."""
+    n = len(result.records)
+    if n == 0:
+        return np.zeros(0)
+    fn = np.fromiter((r.fn for r in result.records), np.int64, n)
+    arrival = np.fromiter((r.arrival for r in result.records), np.float64, n)
+    end = np.fromiter((r.end for r in result.records), np.float64, n)
+    dur = np.fromiter((r.dur for r in result.records), np.float64, n)
+    ok = ~np.isnan(end)
+    slow = np.maximum((end[ok] - arrival[ok]) / np.maximum(dur[ok], 1e-6), 1.0)
+    fn = fn[ok]
+    if not len(fn):
+        return np.zeros(0)
+    order = np.lexsort((slow, fn))
+    fn, slow = fn[order], slow[order]
+    starts = np.flatnonzero(np.r_[True, fn[1:] != fn[:-1]])
+    counts = np.diff(np.r_[starts, len(fn)])
+    keep = counts >= min_requests
+    starts, counts = starts[keep], counts[keep]
+    pos = starts + 0.99 * (counts - 1)       # percentile index, per group
+    lo = np.floor(pos).astype(np.int64)
+    hi = np.minimum(lo + 1, starts + counts - 1)
+    frac = pos - lo
+    return slow[lo] * (1.0 - frac) + slow[hi] * frac
 
 
 def compute(result: SimResult) -> Metrics:
@@ -93,6 +114,7 @@ def compute(result: SimResult) -> Metrics:
         queueing_p99=float(np.percentile(qd, 99)) if len(qd) else math.nan,
         cold_fraction=float(colds.mean()) if len(colds) else math.nan,
         completed=len(result.records),
+        dropped=result.dropped,
         nodes_mean=float(result.node_samples.mean())
         if len(result.node_samples) else math.nan,
         node_hours=result.node_seconds / 3600.0,

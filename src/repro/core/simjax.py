@@ -68,6 +68,7 @@ from repro.core.eventsim import SimConfig
 from repro.core.policy_api import (HYBRID_MIN_KA_S, PolicyObs,  # noqa: F401
                                    get_family)
 from repro.core.trace import Trace, gap_statistics, rate_matrix
+from repro.obs.telemetry import TELEM_ATTR, TELEM_SERIES, assemble_telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,7 +163,8 @@ def _init_state(f, cold_ticks, wbuf, prov_ticks, init_nodes):
 def _make_step(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
                cpu_consts,
                static_nodes, *, family: str, dt: float, cold_ticks: int,
-               wbuf: int, prov_ticks: int, has_fleet: bool):
+               wbuf: int, prov_ticks: int, has_fleet: bool,
+               telem: bool = False):
     """One simulated tick, shared by the full-history scan (`_sim_impl`) and
     the chunked-summary scan (`_chunk_impl`) so the policy math exists once.
 
@@ -337,7 +339,8 @@ def _make_step(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
                 # cold start also creates (one sandbox per concurrent
                 # request), so each recreate overshoots by ~lam x cold —
                 # excess instances that then idle a full keepalive
-                create = create + rec * (1.0 + lam0 * cold_ticks * dt)
+                evict_rec = rec * (1.0 + lam0 * cold_ticks * dt)
+                create = create + evict_rec
                 nodes_spot = nodes_spot - evict
                 evict_bill = evict * notice / dt
             else:
@@ -450,6 +453,36 @@ def _make_step(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
               (busy_inst * mem).sum(),
               create.sum(), cpu_worker, cpu_master, useful, nodes_billed,
               completions.sum(), spot_billed)
+        if telem:
+            # in-scan telemetry (repro.obs): ys[13] is the per-tick series
+            # vector (TELEM_SERIES order), ys[14] the attribution vector
+            # (TELEM_ATTR order).  The eviction-storm share of this tick's
+            # creation is the (capacity-scaled) recreate wave the hazard
+            # triggered; everything else is ordinary churn, idle keepalive
+            # is priced directly, and creation+eviction+idle subtracted
+            # from cpu_worker+cpu_master leaves exactly the floors+dispatch
+            # residual (master_control) — the exact-sum the attribution
+            # ledger checks.
+            if has_spot:
+                ev_create = (evict_rec * scale).sum()
+                ev_kill = killed.sum()
+            else:
+                ev_create = jnp.zeros(())
+                ev_kill = jnp.zeros(())
+            # create-side CPU only: graceful-teardown CPU stays in the
+            # master_control residual on BOTH engines (the oracle does the
+            # same — see eventsim._teardown)
+            cpu_creation = (create.sum() - ev_create) * (c_cw + c_cm)
+            cpu_evict = ev_create * (c_cw + c_cm)
+            mem_pipe = (pending * mem).sum() + prewarm_mass
+            tser = jnp.stack([
+                inst.sum(), busy_inst.sum(), queue.sum(), create.sum(),
+                ev_kill, ys[4], ys[5], mem_pipe, nodes_billed, spot_billed,
+                cpu_worker, cpu_master])
+            tattr = jnp.stack([cpu_creation, cpu_evict,
+                               idle.sum() * c_idle * dt, mem_pipe,
+                               ev_kill, ev_create])
+            ys = ys + (tser, tattr)
         return (inst, in_service, queue, starting, win_, wcur + 1,
                 nodes, pipe, cool, nodes_spot, pipe_spot, spot_inst,
                 evict_deficit), ys
@@ -694,20 +727,29 @@ def _slowdown_geomean(hist, arrtot, edges, dur_median, dur_sigma, warm,
 def _chunk_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem, pol, fleet,
                 cpu_consts, static_nodes, edges, tick0, *, warm_tick: int,
                 total_ticks: int, family: str, dt: float,
-                cold_ticks: int, wbuf: int, prov_ticks: int, has_fleet: bool):
+                cold_ticks: int, wbuf: int, prov_ticks: int, has_fleet: bool,
+                telem_slots: int = 0):
     """Advance the simulation by one time chunk; return the carried state and
     this chunk's summary-statistic partials (host accumulates across chunks).
     Ticks at global index < warm_tick (warmup) or >= total_ticks (padding of
-    the final chunk) advance state but are excluded from the statistics."""
+    the final chunk) advance state but are excluded from the statistics.
+
+    ``telem_slots > 0`` (static) adds the bounded in-scan telemetry buffers
+    (repro.obs): per-slot sums of the TELEM_SERIES vector over the WHOLE run
+    (each slot covers ~total_ticks/telem_slots consecutive ticks — constant
+    memory in trace length) plus the measurement-window TELEM_ATTR sums.
+    With telemetry off the carry and the emitted ops are LITERALLY the
+    pre-telemetry ones (the bit-for-bit guarantee the tests pin)."""
     f = arr_chunk.shape[1]
     nbins = edges.shape[0] + 1
+    telem = telem_slots > 0
     step = _make_step(arr_chunk, dur, mem, lam0, gaps, gap_tab, pol, fleet,
                       cpu_consts, static_nodes, family=family, dt=dt,
                       cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
-                      has_fleet=has_fleet)
+                      has_fleet=has_fleet, telem=telem)
 
     def acc_step(carry, i):
-        st, hist, arrtot, sums, n = carry
+        st, hist, arrtot, sums, n = carry[:5]
         st, ys = step(st, i)
         delay, arr, arr_delayed = ys[0], ys[1], ys[2]
         g = tick0 + i
@@ -715,14 +757,25 @@ def _chunk_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem, pol, fleet,
         b = jnp.clip(jnp.searchsorted(edges, delay, side="right"), 0, nbins - 1)
         hist = hist.at[jnp.arange(f), b].add(arr_delayed * m)
         hist = hist.at[:, 0].add((arr - arr_delayed) * m)
-        return (st, hist, arrtot + arr * m,
-                sums + m * jnp.stack(ys[3:]), n + m), None
+        out = (st, hist, arrtot + arr * m,
+               sums + m * jnp.stack(ys[3:3 + len(_ACC_NAMES)]), n + m)
+        if telem:
+            tser, tcnt, tattr = carry[5:]
+            slot = jnp.clip(g * telem_slots // total_ticks, 0,
+                            telem_slots - 1)
+            mt = (g < total_ticks).astype(jnp.float32)   # timeline: warmup in
+            out = out + (tser.at[slot].add(ys[13] * mt),
+                         tcnt.at[slot].add(mt),
+                         tattr + ys[14] * m)             # attribution: not
+        return out, None
 
     init = (state, jnp.zeros((f, nbins)), jnp.zeros(f),
             jnp.zeros(len(_ACC_NAMES)), jnp.zeros(()))
-    (st, hist, arrtot, sums, n), _ = jax.lax.scan(
-        acc_step, init, jnp.arange(arr_chunk.shape[0]))
-    return st, (hist, arrtot, sums, n)
+    if telem:
+        init = init + (jnp.zeros((telem_slots, len(TELEM_SERIES))),
+                       jnp.zeros(telem_slots), jnp.zeros(len(TELEM_ATTR)))
+    carry, _ = jax.lax.scan(acc_step, init, jnp.arange(arr_chunk.shape[0]))
+    return carry[0], carry[1:]
 
 
 def _acc_summary(hist, arrtot, sums, n, edges, dur_median, dur_sigma, warm,
@@ -747,6 +800,7 @@ def _acc_summary(hist, arrtot, sums, n, edges, dur_median, dur_sigma, warm,
         "spot_nodes_mean": float(s["spot_nodes"] / n),
         "spot_node_seconds": float(s["spot_nodes"] * dt),
         "completed": float(s["completions"]),
+        "cpu_useful_s": float(s["useful"]),
         "cpu_worker_s": float(w),
         "cpu_master_s": float(m),
         "mem_total_mean": float(s["mem_total"] / n),
@@ -760,7 +814,7 @@ def _chunk_batch_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem,
                       cpu_consts, static_nodes, edges, tick0, *,
                       warm_tick: int, total_ticks: int, family: str, dt: float,
                       cold_ticks: int, wbuf: int, prov_ticks: int,
-                      has_fleet: bool):
+                      has_fleet: bool, telem_slots: int = 0):
     """One time chunk for a whole batch of parameter points (vmap over the
     point axis of state/lam0/pols/fleets; ``pols`` is a STACKED params
     pytree — every leaf, scalar knob or weight array, carries a leading
@@ -771,7 +825,8 @@ def _chunk_batch_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem,
                            static_nodes, edges, tick0, warm_tick=warm_tick,
                            total_ticks=total_ticks, family=family, dt=dt,
                            cold_ticks=cold_ticks, wbuf=wbuf,
-                           prov_ticks=prov_ticks, has_fleet=has_fleet)
+                           prov_ticks=prov_ticks, has_fleet=has_fleet,
+                           telem_slots=telem_slots)
     return jax.vmap(one)(state, lam0, pols, fleets)
 
 
@@ -781,7 +836,8 @@ def _chunk_batch_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem,
 # host chunk loop reuses one executable across chunks
 _chunk_batch = partial(jax.jit, static_argnames=(
     "warm_tick", "total_ticks", "family", "dt", "cold_ticks", "wbuf",
-    "prov_ticks", "has_fleet"), donate_argnums=(0,))(_chunk_batch_impl)
+    "prov_ticks", "has_fleet", "telem_slots"),
+    donate_argnums=(0,))(_chunk_batch_impl)
 
 
 def stack_params(param_trees: "list[dict]") -> dict:
@@ -797,7 +853,7 @@ def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: dict,
                        fleets: np.ndarray, *, sim: SimConfig, dt: float,
                        num_nodes: float, provision_s: float, has_fleet: bool,
                        chunk_ticks: int, warmup_frac: float,
-                       nbins: int) -> list[dict]:
+                       nbins: int, telemetry: int = 0) -> list[dict]:
     """Run a batch of policy/fleet parameter points through the chunked scan
     (vmapped over points, host loop over time chunks, carry donated) and
     return one ``summarize``-style dict per point.  ``pols`` is a stacked
@@ -834,37 +890,58 @@ def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: dict,
     arrtot = np.zeros((n_points, f))
     sums = np.zeros((n_points, len(_ACC_NAMES)))
     n = np.zeros(n_points)
+    telemetry = int(telemetry)
+    tser = np.zeros((n_points, max(telemetry, 1), len(TELEM_SERIES)))
+    tcnt = np.zeros((n_points, max(telemetry, 1)))
+    tattr = np.zeros((n_points, len(TELEM_ATTR)))
     for t0 in range(0, n_ticks, chunk_ticks):
         a = arr_np[t0:t0 + chunk_ticks]
         if a.shape[0] < chunk_ticks:        # pad the tail chunk; the padded
             a = np.concatenate(             # ticks are masked out of the stats
                 [a, np.zeros((chunk_ticks - a.shape[0], f), a.dtype)])
-        state, (h, at, s, nn) = _chunk_batch(
+        state, out = _chunk_batch(
             state, jnp.asarray(a), lam_eff, gaps, gap_tab, dur, mem,
             pols_j, fleets_j,
             cpu_consts, float(num_nodes), edges_j,
             jnp.asarray(t0, jnp.int32), warm_tick=warm_tick,
             total_ticks=n_ticks, family=policy.family, dt=dt,
             cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
-            has_fleet=has_fleet)
-        hist += np.asarray(h)
-        arrtot += np.asarray(at)
-        sums += np.asarray(s)
-        n += np.asarray(nn)
+            has_fleet=has_fleet, telem_slots=telemetry)
+        hist += np.asarray(out[0])
+        arrtot += np.asarray(out[1])
+        sums += np.asarray(out[2])
+        n += np.asarray(out[3])
+        if telemetry:
+            tser += np.asarray(out[4])
+            tcnt += np.asarray(out[5])
+            tattr += np.asarray(out[6])
     iid = get_family(policy.family).synchronous_tail
-    return [_acc_summary(hist[i], arrtot[i], sums[i], n[i], edges, dur_median,
+    rows = [_acc_summary(hist[i], arrtot[i], sums[i], n[i], edges, dur_median,
                          dur_sigma, sim.warm_latency_s, dt, iid_tail=iid)
             for i in range(n_points)]
+    if telemetry:
+        for i, row in enumerate(rows):
+            row["telemetry"] = assemble_telemetry(tser[i], tcnt[i], tattr[i],
+                                                  n_ticks, dt)
+    return rows
 
 
 def simulate_chunked(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
                      dt: float = 1.0, num_nodes: int = 8,
                      fleet: Optional[JaxFleet] = None, chunk_ticks: int = 512,
-                     warmup_frac: float = 0.5, nbins: int = 256) -> dict:
+                     warmup_frac: float = 0.5, nbins: int = 256,
+                     telemetry: int = 0) -> dict:
     """Memory-bounded twin of ``summarize(simulate(...))``: same step math,
     same metric keys, but summary statistics are accumulated inside a
     segmented scan so arbitrarily long / wide traces (the 2000-function
-    Fig. 9 replay, and beyond) never materialize (T, F) histories."""
+    Fig. 9 replay, and beyond) never materialize (T, F) histories.
+
+    ``telemetry=S`` (static, default off) rides S downsampled per-tick
+    series slots plus attribution sums in the scan carry — constant memory —
+    and attaches the assembled ``telemetry`` dict (repro.obs.telemetry) to
+    the returned row.  ``telemetry=0`` compiles the exact pre-telemetry
+    program: results are bit-for-bit identical to a build without this
+    feature."""
     has_fleet = fleet is not None
     pols = stack_params([policy.params()])
     fleets = np.asarray([fleet.params() if has_fleet
@@ -873,4 +950,4 @@ def simulate_chunked(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig
         trace, policy, pols, fleets, sim=sim, dt=dt, num_nodes=num_nodes,
         provision_s=fleet.provision_s if has_fleet else 0.0,
         has_fleet=has_fleet, chunk_ticks=chunk_ticks,
-        warmup_frac=warmup_frac, nbins=nbins)[0]
+        warmup_frac=warmup_frac, nbins=nbins, telemetry=telemetry)[0]

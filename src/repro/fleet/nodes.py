@@ -56,6 +56,10 @@ class NodeFleet:
         # them unconditionally, so they live on the base class)
         self.evictions = 0
         self.spot_node_seconds = 0.0
+        # node_ids whose drain is a market reclaim in progress (announced
+        # but not yet enforced) — teardowns there are eviction-storm work,
+        # not ordinary churn (repro.obs.ledger reads this via the sim)
+        self.announced_ids: set[int] = set()
 
     # -- demand signals ---------------------------------------------------------
 
@@ -111,6 +115,7 @@ class NodeFleet:
         done = [n for n in cluster.nodes_in(DRAINING) if n.used_mb <= 1e-9]
         for node in done:
             cluster.terminate(node)
+            self.announced_ids.discard(node.node_id)
         self.terminations += len(done)
         return done
 

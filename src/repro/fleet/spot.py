@@ -163,6 +163,7 @@ class SpotNodeFleet(NodeFleet):
         for node in announced:
             cluster.start_drain(node)
             self.evictions += 1
+            self.announced_ids.add(node.node_id)
             self._evict_deadlines.append(
                 (node, t + self.market.tier.reclaim_notice_s))
         return provisioned, draining + announced
@@ -177,6 +178,7 @@ class SpotNodeFleet(NodeFleet):
         re-queued the in-flight work)."""
         if node.alive:
             cluster.terminate(node)
+        self.announced_ids.discard(node.node_id)
 
     # -- per-tier billing ---------------------------------------------------
 

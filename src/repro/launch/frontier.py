@@ -93,6 +93,11 @@ def main(argv=None) -> int:
                          "(default: the coarse scale)")
     ap.add_argument("--out-dir", default="frontier_out",
                     help="where CSV/JSON land (default frontier_out/)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="record search-run telemetry (per-stage sims/wall/"
+                         "hypervolume, spot-check demotion counts, "
+                         "training-loss series) to telemetry.json in "
+                         "--out-dir")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     ap.add_argument("--quiet", action="store_true")
@@ -126,12 +131,17 @@ def main(argv=None) -> int:
         print(f"registered: {', '.join(list_scenarios())} (see --list)",
               file=sys.stderr)
         return 2
+    telem = None
+    if args.telemetry:
+        from repro.obs import RunTelemetry
+        telem = RunTelemetry()
     result = frontier_search(names, scale=args.scale,
                              coarse_frac=args.coarse_frac, eps=args.eps,
-                             survivor_cap=args.cap, log=say)
+                             survivor_cap=args.cap, log=say, telemetry=telem)
     checks = []
     if args.spot_check > 0:
-        checks = oracle_spot_check(result, k=args.spot_check, log=say)
+        checks = oracle_spot_check(result, k=args.spot_check, log=say,
+                                   telemetry=telem)
 
     learned_records = []
     if args.learned:
@@ -141,7 +151,8 @@ def main(argv=None) -> int:
         for name in sorted(result.fronts):
             sc = get_scenario(name)
             res = train_policy(name, scale=learn_scale,
-                               steps=args.learn_steps, log=say)
+                               steps=args.learn_steps, log=say,
+                               telemetry=telem)
             row = evaluate_trained(name, res, scale=args.scale)
             front = result.fronts[name]
             slack = frontier_slack(row, front)
@@ -179,6 +190,10 @@ def main(argv=None) -> int:
                         "learned": args.learned}}
     with open(os.path.join(args.out_dir, "frontier.json"), "w") as fh:
         json.dump(payload, fh, indent=2, default=float)
+    if telem is not None:
+        tpath = os.path.join(args.out_dir, "telemetry.json")
+        telem.write_json(tpath)
+        say(f"run telemetry ({len(telem.events)} events) -> {tpath}")
 
     failures = []
     for name in sorted(result.fronts):

@@ -34,7 +34,7 @@ from repro.scenarios.runner import apply_tier
 _COLUMNS = ["scenario", "engine", "scale", "num_functions", "invocations",
             "wall_s", "slowdown_geomean_p99", "normalized_memory",
             "creation_rate", "cpu_overhead", "worker_share", "nodes_mean",
-            "completed", "figure"]
+            "completed", "dropped", "figure"]
 
 
 def _emit(rows: list[dict], out) -> None:
@@ -68,6 +68,17 @@ def main(argv=None) -> int:
                     help="run spot-capable scenarios under this capacity "
                          "tier (hazard, reclaim notice, discount); "
                          "see --list for registered tiers")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record the oracle leg's request/instance/node "
+                         "lifecycle spans and write a Chrome-trace JSON "
+                         "here (requires exactly one scenario and an "
+                         "eventsim leg)")
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="attach in-scan telemetry to the simjax leg and "
+                         "write timeline_<scenario>.csv per scenario here "
+                         "(requires a simjax leg)")
+    ap.add_argument("--telemetry-slots", type=int, default=200,
+                    help="downsampled timeline resolution (default 200)")
     args = ap.parse_args(argv)
 
     if args.list:
@@ -107,6 +118,32 @@ def main(argv=None) -> int:
         return 2
     engines = ENGINES if args.engines == "both" else (args.engines,)
 
+    # observability flags are validated up front, friendly-error style:
+    # a span trace needs exactly one oracle leg, telemetry a simjax leg
+    if args.trace_out is not None:
+        if "eventsim" not in engines:
+            print("--trace-out records the oracle leg; pick --engines "
+                  "both or eventsim", file=sys.stderr)
+            return 2
+        if len(names) != 1:
+            print(f"--trace-out records one scenario's spans, got "
+                  f"{len(names)}; pick a single --scenario", file=sys.stderr)
+            return 2
+    if args.telemetry is not None and "simjax" not in engines:
+        print("--telemetry samples the simjax leg; pick --engines both "
+              "or simjax", file=sys.stderr)
+        return 2
+
+    obs = None
+    if args.trace_out is not None:
+        from repro.obs import SpanRecorder
+        obs = SpanRecorder(enabled=True)
+    telem_slots = (max(1, args.telemetry_slots)
+                   if args.telemetry is not None else 0)
+    if args.telemetry is not None:
+        import os
+        os.makedirs(args.telemetry, exist_ok=True)
+
     rows = []
     for name in names:
         target = name
@@ -117,8 +154,17 @@ def main(argv=None) -> int:
                       f"--tier {tier.name} ignored for it", file=sys.stderr)
             else:
                 target = tiered
+        detail: dict = {}
         sc_rows = run_scenario(target, engines=engines, scale=args.scale,
-                               force_oracle=args.force_oracle)
+                               force_oracle=args.force_oracle, obs=obs,
+                               telemetry=telem_slots, detail=detail)
+        if args.telemetry is not None and "fluid_summary" in detail \
+                and detail["fluid_summary"].get("telemetry"):
+            from repro.obs import write_timeline_csv
+            import os
+            path = os.path.join(args.telemetry, f"timeline_{name}.csv")
+            write_timeline_csv(detail["fluid_summary"]["telemetry"], path)
+            print(f"telemetry timeline -> {path}", file=sys.stderr)
         rows.extend(sc_rows)
         if args.parity:
             gaps = parity_report(sc_rows)
@@ -126,6 +172,14 @@ def main(argv=None) -> int:
                 print(f"parity {name}: " +
                       " ".join(f"{k}={v:.3f}" for k, v in gaps.items()),
                       file=sys.stderr)
+
+    if obs is not None:
+        if not obs.spans:
+            print("note: no spans recorded — the oracle leg was skipped at "
+                  "this scale (see --force-oracle)", file=sys.stderr)
+        obs.write_json(args.trace_out)
+        print(f"span trace ({len(obs.spans)} spans) -> {args.trace_out}",
+              file=sys.stderr)
 
     if args.csv:
         with open(args.csv, "w", newline="") as fh:

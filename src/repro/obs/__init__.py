@@ -1,0 +1,60 @@
+"""repro.obs — unified observability across both simulation engines.
+
+The paper's §3.6 metric suite is four aggregate scalars; this package
+explains them.  Every span the oracle emits and every telemetry series the
+chunked scan records maps onto exactly one §3.6 metric:
+
+Oracle spans (``SpanRecorder``; Chrome-trace/Perfetto export):
+
+* ``request`` (arrival -> completion), child ``queue`` (arrival -> first
+  dispatch) and ``execute`` (dispatch -> done) — the per-request slowdown
+  whose per-function p99 geomean is §3.6's *end-to-end performance*
+  ((end - arrival) / pure duration); a re-queued request shows one
+  ``execute`` per attempt, evicted attempts tagged ``evicted``.
+* ``instance_create`` (placement -> ready) and ``teardown`` (tagged with
+  its reason: keepalive / retire / drain / evict) — their rate over the
+  measurement window is §3.6's *instance creation rate*, and each
+  create/teardown pair carries the CPU cost behind *normalized CPU
+  overhead*.
+* ``node_provision`` / ``node_drain`` / ``node_evict`` — the two-level
+  fleet's capacity timeline, the node-hours input of the dollar-cost
+  model (beyond-paper, ``repro.fleet.costs``).
+
+Fluid telemetry series (``simulate_chunked(..., telemetry=S)``; bounded
+downsampled per-tick means, constant memory):
+
+* ``instances`` / ``busy_instances`` / ``mem_total_mb`` / ``mem_busy_mb``
+  / ``mem_pipeline_mb`` — the allocated-vs-busy mass whose time-averaged
+  ratio is §3.6's *normalized memory usage*.
+* ``creations`` / ``evictions`` — the churn flux behind *instance
+  creation rate* (evictions split out the spot-storm share).
+* ``cpu_worker_s`` / ``cpu_master_s`` — the per-tick overhead series
+  behind *normalized CPU overhead* and its ~80/20 worker/master split.
+* ``queue_depth`` / ``nodes`` / ``spot_nodes`` — the queueing and
+  capacity context the other series are read against.
+
+The attribution ledger (``OverheadLedger``) then decomposes
+*cpu_overhead* into creation / eviction_storm / keepalive_idle /
+master_control and *normalized_memory* into busy / warm_idle / pipeline,
+from BOTH engines, with a component-level parity check — see
+``repro.obs.ledger`` and the ``python -m repro.launch.trace`` CLI.
+"""
+
+from repro.obs.ledger import (CPU_COMPONENTS, MEM_COMPONENTS, OverheadLedger,
+                              attribution_table, check_ledger,
+                              ledger_from_chunked, ledger_from_eventsim,
+                              ledger_parity)
+from repro.obs.spans import Span, SpanRecorder, validate
+from repro.obs.telemetry import (TELEM_ATTR, TELEM_SERIES, RunTelemetry,
+                                 assemble_telemetry,
+                                 write_oracle_timeline_csv,
+                                 write_timeline_csv)
+
+__all__ = [
+    "Span", "SpanRecorder", "validate",
+    "OverheadLedger", "ledger_from_eventsim", "ledger_from_chunked",
+    "ledger_parity", "check_ledger", "attribution_table",
+    "CPU_COMPONENTS", "MEM_COMPONENTS",
+    "TELEM_SERIES", "TELEM_ATTR", "RunTelemetry", "assemble_telemetry",
+    "write_timeline_csv", "write_oracle_timeline_csv",
+]

@@ -186,15 +186,19 @@ def train_policy(scenario: Union[str, Scenario], family: str = "learned",
                  scale: float = 0.25, steps: int = 80, lr: float = 0.05,
                  seed: int = 0, w_lat: float = 4.0,
                  sim: Optional[SimConfig] = None,
-                 log: Optional[Callable[[str], None]] = None) -> TrainResult:
+                 log: Optional[Callable[[str], None]] = None,
+                 telemetry=None) -> TrainResult:
     """Train a policy family's learnable leaves on one scenario's workload
     by Adam over ``jax.grad`` of the surrogate loss, through the scan.
 
     Only the axes the family declares ``learnable`` move; sweepable scalar
     knobs stay at the spec's values (they belong to the frontier grid).
+    ``telemetry`` (a ``repro.obs.RunTelemetry``) receives the full
+    training-loss series, one ``train_step`` event per gradient step.
     """
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     say = log or (lambda s: None)
+    tel = telemetry.emit if telemetry is not None else (lambda *a, **k: None)
     fam = get_family(family)
     learnable = set(fam.learnable_axes())
     if not learnable:
@@ -228,6 +232,7 @@ def train_policy(scenario: Union[str, Scenario], family: str = "learned",
     for t in range(1, steps + 1):
         val, g = value_and_grad(theta)      # loss AT the current theta
         history.append(float(val))
+        tel("train_step", scenario=sc.name, step=t, loss=float(val))
         if float(val) < best:
             best, best_theta = float(val), theta
         delta, m, v = _adam_update(g, m, v, t, lr)

@@ -41,7 +41,8 @@ from repro.core.trace import Trace
 from repro.fleet.costs import PriceBook, cost_report
 from repro.fleet.nodes import NodeType
 from repro.opt.frontier import (X_DEFAULT, Y_DEFAULT, epsilon_survivors,
-                                frontier_slack, pareto_front, robust_front)
+                                frontier_slack, hypervolume, pareto_front,
+                                robust_front)
 from repro.opt.space import DEFAULT_SPACE, SWEEPABLE, SearchSpace, active_knobs
 from repro.scenarios.registry import get_scenario, list_scenarios
 from repro.scenarios.spec import Scenario
@@ -253,6 +254,18 @@ class FrontierResult:
         }
 
 
+def _front_hypervolume(rows: Sequence[dict]) -> float:
+    """Dominated-area hypervolume of a row set's Pareto front, referenced
+    just beyond the set's own worst finite corner — the per-round search
+    progress number the telemetry stream carries (comparable within one
+    search, not across searches)."""
+    xs = [r[X_DEFAULT] for r in rows if np.isfinite(r.get(X_DEFAULT, np.nan))]
+    ys = [r[Y_DEFAULT] for r in rows if np.isfinite(r.get(Y_DEFAULT, np.nan))]
+    if not xs or not ys:
+        return 0.0
+    return hypervolume(rows, x_ref=1.05 * max(xs), y_ref=1.05 * max(ys))
+
+
 # coarse stage floor: below ~0.05x, Scenario.scaled_config's clamps
 # (>=8 functions, >=240 s) take over and the grid would be ranked on a
 # degenerate workload unrelated to the refine-stage one
@@ -264,15 +277,19 @@ def frontier_search(scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
                     coarse_frac: float = 0.1, eps: float = 0.15,
                     survivor_cap: int = 12,
                     prices: Optional[PriceBook] = None,
-                    log: Optional[Callable[[str], None]] = None
-                    ) -> FrontierResult:
+                    log: Optional[Callable[[str], None]] = None,
+                    telemetry=None) -> FrontierResult:
     """The coarse -> survive -> refine -> reduce pipeline over every given
     scenario (default: the whole registry).  ``scale`` is the refine-stage
     trace scale; the coarse grid runs at ``coarse_frac * scale``, clamped
     to [MIN_COARSE_SCALE, scale] so a small search scale never pushes the
-    coarse traces onto their degenerate size floors."""
+    coarse traces onto their degenerate size floors.
+
+    ``telemetry`` (a ``repro.obs.RunTelemetry``) receives one event per
+    stage x scenario carrying sims / wall / front size / hypervolume."""
     t_start = time.time()
     say = log or (lambda s: None)
+    tel = telemetry.emit if telemetry is not None else (lambda *a, **k: None)
     names = [s if isinstance(s, str) else s.name
              for s in (scenarios if scenarios is not None else list_scenarios())]
     scs = {n: get_scenario(n) for n in names}
@@ -285,6 +302,9 @@ def frontier_search(scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
                                          prices=prices)
         say(f"coarse {name}: {coarse[name][0]['sims']} sims for "
             f"{len(points)} points in {coarse[name][0]['stage_wall_s']}s")
+        tel("frontier_coarse", scenario=name, sims=coarse[name][0]["sims"],
+            points=len(points), wall_s=coarse[name][0]["stage_wall_s"],
+            hypervolume=_front_hypervolume(coarse[name]))
 
     survivors = {name: {r["point_id"]
                         for r in epsilon_survivors(rows, eps=eps,
@@ -307,9 +327,16 @@ def frontier_search(scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
         refined[name] = rows
         say(f"refine {name}: {rows[0]['sims'] if rows else 0} sims for "
             f"{len(ids)} pooled survivors")
+        tel("frontier_refine", scenario=name,
+            sims=rows[0]["sims"] if rows else 0, survivors=len(ids),
+            wall_s=rows[0]["stage_wall_s"] if rows else 0.0,
+            front_size=len(pareto_front(rows)),
+            hypervolume=_front_hypervolume(rows))
 
     fronts = {name: pareto_front(rows) for name, rows in refined.items()}
     robust_ids = robust_front(refined)
+    tel("frontier_reduce", robust_points=len(robust_ids),
+        wall_s=round(time.time() - t_start, 3))
     return FrontierResult(space=space, points=points, scale=scale,
                           coarse_scale=coarse_scale, coarse=coarse,
                           refined=refined, fronts=fronts,
@@ -406,8 +433,8 @@ def sample_front(front: Sequence[dict], k: int) -> list[dict]:
 def oracle_spot_check(result: FrontierResult, k: int = 3,
                       scale: Optional[float] = None, tol: float = 0.15,
                       demote: bool = True, include_infeasible: bool = False,
-                      log: Optional[Callable[[str], None]] = None
-                      ) -> list[dict]:
+                      log: Optional[Callable[[str], None]] = None,
+                      telemetry=None) -> list[dict]:
     """Replay sampled frontier winners per oracle-feasible scenario through
     BOTH engines and judge the oracle-vs-fluid gap against the parity band.
 
@@ -438,6 +465,7 @@ def oracle_spot_check(result: FrontierResult, k: int = 3,
     """
     check_scale = 0.25 if scale is None else scale
     say = log or (lambda s: None)
+    tel = telemetry.emit if telemetry is not None else (lambda *a, **k: None)
     records = []
     for name in sorted(result.fronts):
         sc = get_scenario(name)
@@ -527,6 +555,12 @@ def oracle_spot_check(result: FrontierResult, k: int = 3,
                 if budget <= 0:
                     break
         result.fronts[name] = pareto_front(result.refined[name])
+        mine = [r for r in records if r["scenario"] == name]
+        tel("spot_check", scenario=name, checked=len(mine),
+            passed=sum(r["pass"] for r in mine),
+            demoted=sum(r["demoted"] for r in mine),
+            front_size=len(result.fronts[name]),
+            hypervolume=_front_hypervolume(result.refined[name]))
     if demote:
         # demotions change each scenario's surviving row set; the robust
         # frontier is recomputed over the confirmed rows (a demotion can

@@ -98,7 +98,8 @@ def apply_tier(sc: Scenario, tier: CapacityTier) -> Optional[Scenario]:
             spot_discount=tier.discount))
 
 
-def _run_eventsim(sc: Scenario, trace, sim: SimConfig) -> dict:
+def _run_eventsim(sc: Scenario, trace, sim: SimConfig, obs=None,
+                  detail: Optional[dict] = None) -> dict:
     if sc.fleet is not None:
         cluster = Cluster(max(1, int(sc.fleet.min_nodes)),
                           node_memory_mb=sc.fleet.node_memory_mb)
@@ -106,27 +107,40 @@ def _run_eventsim(sc: Scenario, trace, sim: SimConfig) -> dict:
     else:
         cluster = Cluster(sc.num_nodes)
         fleet = None
-    res = EventSim(trace, cluster, sc.policy.factory(), sim, fleet=fleet).run()
+    res = EventSim(trace, cluster, sc.policy.factory(), sim, fleet=fleet,
+                   obs=obs).run()
+    if detail is not None:
+        detail["oracle_result"] = res
     return compute(res).row()
 
 
-def _run_simjax(sc: Scenario, trace, sim: SimConfig) -> dict:
+def _run_simjax(sc: Scenario, trace, sim: SimConfig,
+                telemetry: int = 0) -> dict:
     # dt = the oracle's reconcile tick: both engines share one control period
     return simulate_chunked(trace, sc.policy.to_jax(), sim=sim,
                             dt=sim.tick_s, num_nodes=sc.num_nodes,
-                            fleet=sc.fleet, chunk_ticks=sc.chunk_ticks)
+                            fleet=sc.fleet, chunk_ticks=sc.chunk_ticks,
+                            telemetry=telemetry)
 
 
 def run_scenario(scenario: Union[str, Scenario],
                  engines: Sequence[str] = ENGINES, scale: float = 1.0,
                  sim: Optional[SimConfig] = None,
-                 force_oracle: bool = False) -> list[dict]:
+                 force_oracle: bool = False, obs=None, telemetry: int = 0,
+                 detail: Optional[dict] = None) -> list[dict]:
     """Build the scenario trace once and replay it through each engine.
 
     The oracle leg is skipped for scenarios flagged ``oracle_ok=False``
     unless the run is shrunk (scale <= 0.25) or ``force_oracle`` is set —
     replaying ~3.5M discrete events is exactly what the chunked scan exists
     to avoid.
+
+    Observability (repro.obs): pass a ``SpanRecorder`` as ``obs`` to trace
+    the oracle leg's request/instance/node lifecycles; ``telemetry=S``
+    attaches S-slot downsampled series + attribution sums to the fluid
+    leg's row.  Both default off and change nothing when off.  ``detail``,
+    when given a dict, receives ``"oracle_result"`` (the raw ``SimResult``
+    the attribution ledger reads) and ``"fluid_summary"``.
     """
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     # both engines run the same control-loop period (see PolicySpec.tick_s)
@@ -147,8 +161,12 @@ def run_scenario(scenario: Union[str, Scenario],
     rows = []
     for engine in runnable:
         t0 = time.time()
-        metrics = (_run_eventsim if engine == "eventsim" else _run_simjax)(
-            sc, trace, sim)
+        if engine == "eventsim":
+            metrics = _run_eventsim(sc, trace, sim, obs=obs, detail=detail)
+        else:
+            metrics = _run_simjax(sc, trace, sim, telemetry=telemetry)
+            if detail is not None:
+                detail["fluid_summary"] = metrics
         rows.append({**meta, "engine": engine,
                      "wall_s": round(time.time() - t0, 3), **metrics})
     return rows

@@ -1,0 +1,255 @@
+"""Observability: lifecycle spans, in-scan telemetry, attribution ledger.
+
+The three contracts this file pins:
+
+* OFF = FREE — telemetry/spans disabled change nothing, bit for bit;
+* span trees are well-formed and cover every completed request;
+* each engine's overhead attribution sums exactly to its aggregate
+  ratios, and the two engines agree component-by-component within the
+  same 15% band the aggregate parity tests use.
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.control_plane import ControlPlane, SimWorkerBackend
+from repro.core.metrics import compute, per_function_p99_slowdown
+from repro.core.policies import SyncKeepalivePolicy
+from repro.obs import (RunTelemetry, SpanRecorder, check_ledger,
+                       ledger_from_chunked, ledger_from_eventsim,
+                       ledger_parity, validate)
+from repro.scenarios import run_scenario
+from repro.serving.engine import ServeRequest
+
+# the parity calibration point: oracle-feasible, bands pinned at <=15%
+SCALE = 0.25
+
+
+@pytest.fixture(scope="module")
+def traced_diurnal():
+    """One fully observed diurnal replay: spans on the oracle leg,
+    telemetry on the fluid leg, raw results in ``detail``."""
+    obs = SpanRecorder(enabled=True)
+    detail = {}
+    rows = run_scenario("diurnal", scale=SCALE, obs=obs, telemetry=16,
+                        detail=detail)
+    return obs, detail, rows
+
+
+# ---------------------------------------------------------------------------
+# off = free
+# ---------------------------------------------------------------------------
+
+def test_telemetry_off_is_bit_for_bit():
+    base = run_scenario("diurnal", engines=("simjax",), scale=0.1)[0]
+    telem = run_scenario("diurnal", engines=("simjax",), scale=0.1,
+                         telemetry=8)[0]
+    assert "telemetry" not in base
+    for k, v in base.items():
+        if k == "wall_s":
+            continue
+        assert telem[k] == v, f"telemetry perturbed {k}: {v} != {telem[k]}"
+
+
+def test_spans_off_is_bit_for_bit():
+    base = run_scenario("diurnal", engines=("eventsim",), scale=0.1)[0]
+    obs = SpanRecorder(enabled=True)
+    traced = run_scenario("diurnal", engines=("eventsim",), scale=0.1,
+                          obs=obs)[0]
+    assert len(obs.spans) > 0
+    for k, v in base.items():
+        if k == "wall_s":
+            continue
+        if isinstance(v, float) and math.isnan(v):
+            assert math.isnan(traced[k])
+        else:
+            assert traced[k] == v, f"spans perturbed {k}: {v} != {traced[k]}"
+
+
+def test_disabled_recorder_is_falsy_and_inert():
+    rec = SpanRecorder(enabled=False)
+    assert not rec
+    # instrumented code guards with `if rec:` — nothing should ever call
+    # into a disabled recorder, so it stays empty by construction
+    assert rec.spans == []
+
+
+# ---------------------------------------------------------------------------
+# span trees
+# ---------------------------------------------------------------------------
+
+def test_span_tree_well_formed(traced_diurnal):
+    obs, detail, _ = traced_diurnal
+    assert validate(obs) == []
+
+
+def test_spans_cover_every_completed_request(traced_diurnal):
+    obs, detail, _ = traced_diurnal
+    res = detail["oracle_result"]
+    by_name = {}
+    for sp in obs.spans:
+        by_name.setdefault(sp.name, []).append(sp)
+    closed_requests = [sp for sp in by_name["request"]
+                       if not sp.args.get("truncated")]
+    # every completed request has a closed request span and at least one
+    # execute child inside it
+    assert len(closed_requests) >= len(res.records)
+    execs = by_name["execute"]
+    assert len(execs) >= len(res.records)
+    parents = {sp.parent for sp in execs}
+    assert parents <= {sp.sid for sp in by_name["request"]}
+    # instance lifecycle is present on its own track
+    assert len(by_name["instance_create"]) > 0
+    assert all(sp.pid == "instances" for sp in by_name["instance_create"])
+
+
+def test_node_spans_present_on_fleet_scenario():
+    obs = SpanRecorder(enabled=True)
+    run_scenario("spot_storm", engines=("eventsim",), scale=0.1, obs=obs)
+    names = {sp.name for sp in obs.spans}
+    assert "node_provision" in names
+    assert validate(obs) == []
+
+
+def test_recorder_end_twice_is_safe():
+    rec = SpanRecorder(enabled=True)
+    sid = rec.begin("x", "request", 0.0, pid="requests", tid=0)
+    rec.end(sid, 1.0)
+    rec.end(sid, 2.0)            # no-op, keeps the first close
+    assert rec.spans[0].t1 == 1.0
+
+
+# ---------------------------------------------------------------------------
+# attribution ledger
+# ---------------------------------------------------------------------------
+
+def test_attribution_sums_to_aggregates_both_engines(traced_diurnal):
+    _, detail, _ = traced_diurnal
+    led_o = ledger_from_eventsim(detail["oracle_result"])
+    led_f = ledger_from_chunked(detail["fluid_summary"])
+    assert check_ledger(led_o, tol=1e-6) == []
+    assert check_ledger(led_f, tol=1e-6) == []
+    # the ledger's aggregates must equal the engines' reported metrics
+    row = detail["fluid_summary"]
+    assert led_f.normalized_memory == pytest.approx(
+        row["normalized_memory"], rel=1e-6)
+
+
+def test_component_parity_within_band(traced_diurnal):
+    _, detail, _ = traced_diurnal
+    gaps = ledger_parity(ledger_from_eventsim(detail["oracle_result"]),
+                         ledger_from_chunked(detail["fluid_summary"]))
+    assert gaps, "no components judged"
+    for k, g in gaps.items():
+        assert g <= 0.15, f"component {k} gap {g:.3f} exceeds the band"
+
+
+def test_ledger_requires_telemetry():
+    row = run_scenario("cold_tail", engines=("simjax",), scale=0.1)[0]
+    with pytest.raises(ValueError):
+        ledger_from_chunked(row)
+
+
+# ---------------------------------------------------------------------------
+# metrics satellites
+# ---------------------------------------------------------------------------
+
+def test_vectorized_p99_matches_reference(traced_diurnal):
+    _, detail, _ = traced_diurnal
+    res = detail["oracle_result"]
+    by_fn = {}
+    for r in res.records:
+        if math.isnan(r.end):
+            continue
+        slow = max((r.end - r.arrival) / max(r.dur, 1e-6), 1.0)
+        by_fn.setdefault(r.fn, []).append(slow)
+    ref = sorted(float(np.percentile(v, 99)) for v in by_fn.values()
+                 if len(v) >= 5)
+    vec = sorted(per_function_p99_slowdown(res).tolist())
+    assert vec == pytest.approx(ref, rel=1e-12)
+
+
+def test_metrics_row_emits_dropped(traced_diurnal):
+    _, detail, _ = traced_diurnal
+    res = detail["oracle_result"]
+    row = compute(res).row()
+    assert row["dropped"] == res.dropped
+
+
+# ---------------------------------------------------------------------------
+# control plane spans (the serving-side oracle)
+# ---------------------------------------------------------------------------
+
+def test_control_plane_spans():
+    obs = SpanRecorder(enabled=True)
+    backend = SimWorkerBackend(cold_start_s=0.5, default_service_s=0.3)
+    cp = ControlPlane(backend, lambda f: SyncKeepalivePolicy(
+        keepalive_s=3.0, container_concurrency=1), num_functions=1, obs=obs)
+    t = 0.0
+    for i in range(3):
+        cp.submit(ServeRequest(rid=i, fn=0, prompt=[], arrival_t=t), t)
+    while len(cp.completed) < 3 and t < 20:
+        t += 0.1
+        cp.tick(t)
+    for _ in range(60):          # keepalive expiry -> teardown instants
+        t += 0.1
+        cp.tick(t)
+    obs.finish(t)
+    assert validate(obs) == []
+    by_name = {}
+    for sp in obs.spans:
+        by_name.setdefault(sp.name, []).append(sp)
+    assert len(by_name["request"]) == 3
+    assert len(by_name["execute"]) == 3
+    assert len(by_name["instance_create"]) >= 1
+    assert len(by_name["teardown"]) >= 1
+
+
+# ---------------------------------------------------------------------------
+# run telemetry + CLIs
+# ---------------------------------------------------------------------------
+
+def test_run_telemetry_series():
+    tel = RunTelemetry()
+    tel.emit("train_step", step=1, loss=2.0)
+    tel.emit("train_step", step=2, loss=1.5)
+    tel.emit("other", x=1)
+    assert tel.series("train_step", "loss") == [2.0, 1.5]
+    assert len(tel.to_json()["events"]) == 3
+
+
+def test_trace_cli_end_to_end(tmp_path):
+    from repro.launch.trace import main
+    rc = main(["diurnal", "--out-dir", str(tmp_path), "--slots", "32",
+               "--check"])
+    assert rc == 0
+    trace = json.loads((tmp_path / "trace.json").read_text())
+    assert trace["traceEvents"], "empty Chrome trace"
+    phases = {e["ph"] for e in trace["traceEvents"]}
+    assert "X" in phases and "M" in phases
+    ledger = json.loads((tmp_path / "ledger.json").read_text())
+    assert ledger["failures"] == []
+    assert len(ledger["ledgers"]) == 2
+    assert (tmp_path / "timeline_oracle.csv").exists()
+    assert (tmp_path / "timeline_simjax.csv").exists()
+
+
+def test_trace_cli_unknown_scenario_exit_2(tmp_path, capsys):
+    from repro.launch.trace import main
+    assert main(["no_such_scenario", "--out-dir", str(tmp_path)]) == 2
+
+
+def test_scenarios_cli_flag_validation(tmp_path):
+    from repro.launch.scenarios import main
+    # a span trace needs an oracle leg
+    assert main(["--scenario", "cold_tail", "--engines", "simjax",
+                 "--trace-out", str(tmp_path / "t.json")]) == 2
+    # telemetry needs a fluid leg
+    assert main(["--scenario", "cold_tail", "--engines", "eventsim",
+                 "--telemetry", str(tmp_path)]) == 2
+    # one scenario per span trace
+    assert main(["--scenario", "cold_tail", "--scenario", "diurnal",
+                 "--trace-out", str(tmp_path / "t.json")]) == 2
