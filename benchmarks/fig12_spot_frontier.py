@@ -24,7 +24,7 @@ import time
 from benchmarks.common import emit
 from repro.core.cluster import Cluster
 from repro.core.eventsim import EventSim, SimConfig
-from repro.fleet.costs import cost_from_sim
+from repro.fleet.billing import bill_sim
 from repro.opt import evaluate_scenario, grid_points, pareto_front
 from repro.opt.search import hazard_parity_gaps, point_scenario
 from repro.scenarios import get_scenario
@@ -41,7 +41,8 @@ GRID = {
 
 def _oracle_bill(sc, point, scale):
     """Replay one configuration through the discrete-event oracle and bill
-    it on the same node-shape/PriceBook basis as the fluid rows."""
+    it through the scenario's billing profile on the same node-shape basis
+    as the fluid rows (the profile carries the spot discount)."""
     from repro.scenarios.runner import _oracle_fleet
     sc_p = point_scenario(sc, point)
     sim = SimConfig(tick_s=sc_p.policy.tick_s)
@@ -51,8 +52,8 @@ def _oracle_bill(sc, point, scale):
                       node_memory_mb=sc_p.fleet.node_memory_mb)
     res = EventSim(trace, cluster, sc_p.policy.factory(), sim,
                    fleet=fleet).run()
-    return cost_from_sim(res, node_type=oracle_node_type(sc_p.fleet),
-                         prices=sc.prices)
+    return bill_sim(res, trace, sc.billing,
+                    node_type=oracle_node_type(sc_p.fleet))
 
 
 def run(scale: float = 1.0, confirm: bool = True):

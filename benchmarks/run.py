@@ -4,8 +4,10 @@ Default: every figure benchmark, printing ``name,us_per_call,derived`` CSV.
 
 ``--quick`` is the CI regression tier: fig8 through the frontier engine at
 0.1x, the scenario suite at 0.1x (oracle legs included at that scale), the
-per-scenario frontier hypervolumes, and the fig12 spot-vs-on-demand cost
-ratio (fluid-only, deterministic), collected into a flat {metric: value}
+per-scenario frontier hypervolumes, the fig12 spot-vs-on-demand cost
+ratio (fluid-only, deterministic), and the fig13 billing-delta gate
+(provider-vs-ideal frontier rank shift + billed oracle parity), collected
+into a flat {metric: value}
 dict where EVERY metric is lower-is-better (wall seconds, p99 slowdown,
 $/1M requests, memory ratio, cost ratio).
 ``--json`` writes it (BENCH_ci.json in CI); ``--baseline`` compares against
@@ -45,6 +47,7 @@ MODULES = [
     "benchmarks.fig10_fleet_cost",
     "benchmarks.fig11_learned_policy",
     "benchmarks.fig12_spot_frontier",
+    "benchmarks.fig13_billing_delta",
     "benchmarks.scenario_suite",
     "benchmarks.table1_trends",
     "benchmarks.roofline",
@@ -113,6 +116,20 @@ def run_quick() -> dict:
     metrics["fig12_spot_cost_ratio"] = (
         winner["cost_per_million"] / best_od["cost_per_million"]
         if winner is not None else math.inf)
+
+    # billing delta (repro.fleet.billing): the provider profiles must keep
+    # REORDERING the frontier (rank_delta_inv is 1/max rank shift — it
+    # goes infinite, failing the non-finite check, if provider billing
+    # collapses into ideal) and the billed oracle-vs-fluid parity legs
+    # must stay inside their band (deterministic: fixed seeds)
+    from benchmarks import fig13_billing_delta
+    t0 = time.time()
+    f13 = fig13_billing_delta.run(
+        scale=QUICK_SCALE / fig13_billing_delta.EVAL_SCALE)
+    metrics["fig13_wall_s"] = round(time.time() - t0, 3)
+    metrics["fig13_billing_rank_delta"] = (
+        1.0 / f13["rank_shift"] if f13["rank_shift"] > 0 else math.inf)
+    metrics["fig13_billed_parity"] = f13["parity"]
 
     # attribution ledger (repro.obs): trace diurnal through BOTH engines at
     # the 0.25 parity-calibration point and gate on (a) attribution-sum

@@ -156,6 +156,30 @@ class SimResult:
     cpu_evict_storm_s: float = 0.0
     cpu_keepalive_idle_s: float = 0.0
 
+    def billed_duration_totals(self, granularity_s: float = 0.0,
+                               min_billed_s: float = 0.0):
+        """Per-request billed-duration totals over the measured window's
+        ``records``: each recorded duration is rounded UP to the billing
+        granularity and censored at the minimum billed duration EXACTLY
+        (no expectation) — the oracle-side input ``repro.fleet.billing``
+        meters GB-s against.  Returns ``(fn_ids, billed_seconds)``
+        aggregated per function; identity rounding when both knobs are 0.
+        (``records`` already covers only the measured window, so these
+        totals align with ``len(records)`` completions.)"""
+        if not self.records:
+            return np.zeros(0, np.int64), np.zeros(0)
+        fn = np.asarray([r.fn for r in self.records], np.int64)
+        d = np.asarray([r.dur for r in self.records], np.float64)
+        if granularity_s > 0.0:
+            # the 1e-9 guard keeps exact multiples of the granularity
+            # from rounding up an extra step through d/g float noise
+            d = np.ceil(d / granularity_s - 1e-9) * granularity_s
+        if min_billed_s > 0.0:
+            d = np.maximum(d, min_billed_s)
+        uniq = np.unique(fn)
+        tot = np.bincount(fn, weights=d)
+        return uniq, tot[uniq]
+
 
 class EventSim:
     def __init__(self, trace: Trace, cluster: Cluster, policy_factory: Callable[[int], Policy],

@@ -160,7 +160,7 @@ def _init_state(f, cold_ticks, wbuf, prov_ticks, init_nodes):
             jnp.zeros(f))
 
 
-def _make_step(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
+def _make_step(arrivals, dur, mem, billed_w, lam0, gaps, gap_tab, pol, fleet,
                cpu_consts,
                static_nodes, *, family: str, dt: float, cold_ticks: int,
                wbuf: int, prov_ticks: int, has_fleet: bool,
@@ -448,14 +448,18 @@ def _make_step(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
         # new sandbox warm for its prewarm_s lead — a standing mass of
         # (creations/s x prewarm_s) pre-warmed instances in steady state
         prewarm_mass = (create * mem).sum() * prewarm_hide / dt
+        # billed GB-s this tick: completions weighted by each function's
+        # EXPECTED billed duration x configured GB (repro.fleet.billing) —
+        # the fluid twin of the oracle's exact per-record rounding
         ys = (delay, arr, arr_delayed, inst.sum(),
               ((inst + pending) * mem).sum() + prewarm_mass,
               (busy_inst * mem).sum(),
               create.sum(), cpu_worker, cpu_master, useful, nodes_billed,
-              completions.sum(), spot_billed)
+              completions.sum(), spot_billed,
+              (completions * billed_w).sum())
         if telem:
-            # in-scan telemetry (repro.obs): ys[13] is the per-tick series
-            # vector (TELEM_SERIES order), ys[14] the attribution vector
+            # in-scan telemetry (repro.obs): ys[14] is the per-tick series
+            # vector (TELEM_SERIES order), ys[15] the attribution vector
             # (TELEM_ATTR order).  The eviction-storm share of this tick's
             # creation is the (capacity-scaled) recreate wave the hazard
             # triggered; everything else is ordinary churn, idle keepalive
@@ -490,12 +494,12 @@ def _make_step(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
     return step
 
 
-def _sim_impl(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
+def _sim_impl(arrivals, dur, mem, billed_w, lam0, gaps, gap_tab, pol, fleet,
               cpu_consts,
               static_nodes, *, family: str, n_ticks: int, dt: float,
               cold_ticks: int, wbuf: int, prov_ticks: int, has_fleet: bool):
-    step = _make_step(arrivals, dur, mem, lam0, gaps, gap_tab, pol, fleet,
-                      cpu_consts,
+    step = _make_step(arrivals, dur, mem, billed_w, lam0, gaps, gap_tab,
+                      pol, fleet, cpu_consts,
                       static_nodes, family=family, dt=dt,
                       cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
                       has_fleet=has_fleet)
@@ -525,6 +529,7 @@ class JaxSimResult:
     nodes: np.ndarray      # (T,) billable node count (static fleet: constant)
     completions: np.ndarray  # (T,) fluid request completions
     spot_nodes: np.ndarray  # (T,) billable SPOT share of nodes (0 w/o spot)
+    billed_gb_s: np.ndarray  # (T,) billed GB-s (repro.fleet.billing weights)
     dt: float
     dur: np.ndarray        # (F,)
     fleet: Optional[JaxFleet] = None
@@ -540,7 +545,7 @@ class JaxSimResult:
 
 _YS_NAMES = ["delay", "arrivals", "arr_delayed", "instances", "mem_total",
              "mem_busy", "creations", "cpu_worker", "cpu_master", "useful",
-             "nodes", "completions", "spot_nodes"]
+             "nodes", "completions", "spot_nodes", "billed_gb_s"]
 
 
 def _prep_static(trace: Trace, policy: JaxPolicy, sim: SimConfig, dt: float):
@@ -565,10 +570,21 @@ def _prep(trace: Trace, policy: JaxPolicy, sim: SimConfig, dt: float):
     return arr, dur, mem, cold_ticks, wbuf, cpu_consts
 
 
+def _billed_weights(trace: Trace, billing) -> jnp.ndarray:
+    """(F,) expected billed GB-s per completion under a billing profile
+    (default: the ``ideal`` profile — no rounding, so the weight is just
+    E[duration] x configured GB).  Imported lazily: ``repro.core`` stays
+    free of a hard ``repro.fleet`` dependency."""
+    from repro.fleet.billing import get_profile
+    prof = get_profile(billing if billing is not None else "ideal")
+    return jnp.asarray(prof.billed_weights(trace.profile), jnp.float32)
+
+
 def simulate(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
              dt: float = 1.0, num_nodes: int = 8,
-             fleet: Optional[JaxFleet] = None) -> JaxSimResult:
+             fleet: Optional[JaxFleet] = None, billing=None) -> JaxSimResult:
     arr, dur, mem, cold_ticks, wbuf, cpu_consts = _prep(trace, policy, sim, dt)
+    billed_w = _billed_weights(trace, billing)
     has_fleet = fleet is not None
     prov_ticks = max(1, int(round((fleet.provision_s if has_fleet else 0.0) / dt)))
     pol = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), policy.params())
@@ -579,8 +595,8 @@ def simulate(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
     gaps = jnp.asarray(gq, jnp.float32)
     gap_tab = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32),
                            (alive_tab, tail_tab))
-    ys = _simulate(arr, dur, mem, lam0, gaps, gap_tab, pol, fl, cpu_consts,
-                   float(num_nodes),
+    ys = _simulate(arr, dur, mem, billed_w, lam0, gaps, gap_tab, pol, fl,
+                   cpu_consts, float(num_nodes),
                    family=policy.family, n_ticks=arr.shape[0], dt=dt,
                    cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
                    has_fleet=has_fleet)
@@ -618,7 +634,8 @@ def summarize(res: JaxSimResult, warmup_frac: float = 0.5,
                        res.mem_busy[sl].sum(), res.creations[sl].sum(),
                        res.cpu_worker[sl].sum(), res.cpu_master[sl].sum(),
                        res.useful[sl].sum(), res.nodes[sl].sum(),
-                       res.completions[sl].sum(), res.spot_nodes[sl].sum()])
+                       res.completions[sl].sum(), res.spot_nodes[sl].sum(),
+                       res.billed_gb_s[sl].sum()])
     return _acc_summary(hist, weights.sum(axis=0), sums,
                         len(res.instances) - t0, edges, med, sig,
                         res.warm_latency_s, res.dt, iid_tail=res.sync_tail)
@@ -640,7 +657,8 @@ def summarize(res: JaxSimResult, warmup_frac: float = 0.5,
 # scalar per-tick series accumulated post-warmup (order matches ys[3:];
 # ys[0:3] are the per-function delay / arrivals / delayed-arrivals vectors)
 _ACC_NAMES = ("instances", "mem_total", "mem_busy", "creations", "cpu_worker",
-              "cpu_master", "useful", "nodes", "completions", "spot_nodes")
+              "cpu_master", "useful", "nodes", "completions", "spot_nodes",
+              "billed_gb_s")
 
 
 def _delay_edges(nbins: int) -> np.ndarray:
@@ -724,7 +742,8 @@ def _slowdown_geomean(hist, arrtot, edges, dur_median, dur_sigma, warm,
     return float(np.exp(np.mean(np.log(np.maximum(0.5 * (lo + hi), 1.0)))))
 
 
-def _chunk_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem, pol, fleet,
+def _chunk_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem, billed_w,
+                pol, fleet,
                 cpu_consts, static_nodes, edges, tick0, *, warm_tick: int,
                 total_ticks: int, family: str, dt: float,
                 cold_ticks: int, wbuf: int, prov_ticks: int, has_fleet: bool,
@@ -743,7 +762,8 @@ def _chunk_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem, pol, fleet,
     f = arr_chunk.shape[1]
     nbins = edges.shape[0] + 1
     telem = telem_slots > 0
-    step = _make_step(arr_chunk, dur, mem, lam0, gaps, gap_tab, pol, fleet,
+    step = _make_step(arr_chunk, dur, mem, billed_w, lam0, gaps, gap_tab,
+                      pol, fleet,
                       cpu_consts, static_nodes, family=family, dt=dt,
                       cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
                       has_fleet=has_fleet, telem=telem)
@@ -764,9 +784,9 @@ def _chunk_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem, pol, fleet,
             slot = jnp.clip(g * telem_slots // total_ticks, 0,
                             telem_slots - 1)
             mt = (g < total_ticks).astype(jnp.float32)   # timeline: warmup in
-            out = out + (tser.at[slot].add(ys[13] * mt),
+            out = out + (tser.at[slot].add(ys[14] * mt),
                          tcnt.at[slot].add(mt),
-                         tattr + ys[14] * m)             # attribution: not
+                         tattr + ys[15] * m)             # attribution: not
         return out, None
 
     init = (state, jnp.zeros((f, nbins)), jnp.zeros(f),
@@ -805,12 +825,13 @@ def _acc_summary(hist, arrtot, sums, n, edges, dur_median, dur_sigma, warm,
         "cpu_master_s": float(m),
         "mem_total_mean": float(s["mem_total"] / n),
         "mem_busy_mean": float(s["mem_busy"] / n),
+        "billed_gb_s": float(s["billed_gb_s"]),
         "ticks_measured": float(n),
     }
 
 
 def _chunk_batch_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem,
-                      pols, fleets,
+                      billed_w, pols, fleets,
                       cpu_consts, static_nodes, edges, tick0, *,
                       warm_tick: int, total_ticks: int, family: str, dt: float,
                       cold_ticks: int, wbuf: int, prov_ticks: int,
@@ -820,7 +841,8 @@ def _chunk_batch_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem,
     pytree — every leaf, scalar knob or weight array, carries a leading
     point axis)."""
     def one(st, l0, p, fl):
-        return _chunk_impl(st, arr_chunk, l0, gaps, gap_tab, dur, mem, p, fl,
+        return _chunk_impl(st, arr_chunk, l0, gaps, gap_tab, dur, mem,
+                           billed_w, p, fl,
                            cpu_consts,
                            static_nodes, edges, tick0, warm_tick=warm_tick,
                            total_ticks=total_ticks, family=family, dt=dt,
@@ -853,7 +875,8 @@ def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: dict,
                        fleets: np.ndarray, *, sim: SimConfig, dt: float,
                        num_nodes: float, provision_s: float, has_fleet: bool,
                        chunk_ticks: int, warmup_frac: float,
-                       nbins: int, telemetry: int = 0) -> list[dict]:
+                       nbins: int, telemetry: int = 0,
+                       billing=None) -> list[dict]:
     """Run a batch of policy/fleet parameter points through the chunked scan
     (vmapped over points, host loop over time chunks, carry donated) and
     return one ``summarize``-style dict per point.  ``pols`` is a stacked
@@ -862,6 +885,7 @@ def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: dict,
     arr_np = rate_matrix(trace, dt)
     n_ticks, f = arr_np.shape
     dur, mem, cold_ticks, wbuf, cpu_consts = _prep_static(trace, policy, sim, dt)
+    billed_w = _billed_weights(trace, billing)
     dur_median = np.asarray(trace.profile.dur_median)
     dur_sigma = np.asarray(trace.profile.dur_sigma)
     prov_ticks = max(1, int(round(provision_s / dt)))
@@ -901,7 +925,7 @@ def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: dict,
                 [a, np.zeros((chunk_ticks - a.shape[0], f), a.dtype)])
         state, out = _chunk_batch(
             state, jnp.asarray(a), lam_eff, gaps, gap_tab, dur, mem,
-            pols_j, fleets_j,
+            billed_w, pols_j, fleets_j,
             cpu_consts, float(num_nodes), edges_j,
             jnp.asarray(t0, jnp.int32), warm_tick=warm_tick,
             total_ticks=n_ticks, family=policy.family, dt=dt,
@@ -930,7 +954,7 @@ def simulate_chunked(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig
                      dt: float = 1.0, num_nodes: int = 8,
                      fleet: Optional[JaxFleet] = None, chunk_ticks: int = 512,
                      warmup_frac: float = 0.5, nbins: int = 256,
-                     telemetry: int = 0) -> dict:
+                     telemetry: int = 0, billing=None) -> dict:
     """Memory-bounded twin of ``summarize(simulate(...))``: same step math,
     same metric keys, but summary statistics are accumulated inside a
     segmented scan so arbitrarily long / wide traces (the 2000-function
@@ -941,7 +965,12 @@ def simulate_chunked(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig
     and attaches the assembled ``telemetry`` dict (repro.obs.telemetry) to
     the returned row.  ``telemetry=0`` compiles the exact pre-telemetry
     program: results are bit-for-bit identical to a build without this
-    feature."""
+    feature.
+
+    ``billing`` (a ``repro.fleet.billing`` profile or name, default
+    ``ideal``) selects the billed-duration expectation the scan's
+    ``billed_gb_s`` accumulates — the ONLY knob it touches; every other
+    metric is independent of the profile."""
     has_fleet = fleet is not None
     pols = stack_params([policy.params()])
     fleets = np.asarray([fleet.params() if has_fleet
@@ -950,4 +979,5 @@ def simulate_chunked(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig
         trace, policy, pols, fleets, sim=sim, dt=dt, num_nodes=num_nodes,
         provision_s=fleet.provision_s if has_fleet else 0.0,
         has_fleet=has_fleet, chunk_ticks=chunk_ticks,
-        warmup_frac=warmup_frac, nbins=nbins, telemetry=telemetry)[0]
+        warmup_frac=warmup_frac, nbins=nbins, telemetry=telemetry,
+        billing=billing)[0]

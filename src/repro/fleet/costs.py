@@ -75,7 +75,10 @@ def cost_report(*, node_seconds: float, cpu_worker_overhead_s: float,
     master_cost = master_cpu_hours * prices.master_vcpu_per_hour
 
     total = node_cost + master_cost
-    per_million = total / max(completed, 1) * 1e6
+    # a window that completed nothing has no meaningful unit cost: report
+    # NaN — labeled, like the ``dropped`` column in ``Metrics.row()`` —
+    # instead of a real-looking $/1M figure divided by a phantom request
+    per_million = total / completed * 1e6 if completed > 0 else float("nan")
     return CostReport(node_hours, node_cost, master_cpu_hours, master_cost,
                       churn_cost, idle_cost, total, completed, per_million)
 

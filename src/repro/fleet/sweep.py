@@ -13,7 +13,10 @@ hundred-point frontier costs about as much as one simulation.
                        "max_nodes": [8, 16]})
 
 Each row carries the swept parameters, the standard summary metrics, and
-the dollar bill (cost_per_million) from ``repro.fleet.costs``.
+the dollar bill (cost_per_million) from ``repro.fleet.billing`` — pass
+``billing="aws_lambda"`` / ``"gcr"`` to bill the whole grid through a
+provider-calibrated profile (default: the ``ideal`` profile, bitwise the
+old ``repro.fleet.costs`` math).
 
 This module is the stable fleet-facing surface; the machinery itself lives
 in ``repro.opt`` (``opt.search.evaluate_points`` generalizes it so EVERY
@@ -26,12 +29,12 @@ re-exported from their canonical homes there.
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 from repro.core.eventsim import SimConfig
 from repro.core.simjax import JaxFleet, JaxPolicy
 from repro.core.trace import Trace
-from repro.fleet.costs import PriceBook
+from repro.fleet.billing import BillingProfile
 from repro.fleet.nodes import NodeType
 from repro.opt.frontier import pareto_front  # noqa: F401  (canonical home)
 from repro.opt.search import evaluate_points
@@ -42,11 +45,11 @@ def sweep(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
           grid: Optional[dict] = None, points: Optional[Sequence[dict]] = None,
           sim: SimConfig = SimConfig(), dt: float = 1.0,
           node_type: Optional[NodeType] = None,
-          prices: PriceBook = PriceBook(),
+          billing: Union[str, BillingProfile, None] = None,
           warmup_frac: float = 0.5, chunk_ticks: int = 512) -> list[dict]:
     """Run every parameter point through one vmapped chunked scan; return one
     row per point: {params..., metrics..., cost fields...}."""
     pts = list(points) if points is not None else grid_points(grid or {})
     return evaluate_points(trace, policy, fleet, pts, sim=sim, dt=dt,
-                           node_type=node_type, prices=prices,
+                           node_type=node_type, billing=billing,
                            warmup_frac=warmup_frac, chunk_ticks=chunk_ticks)

@@ -36,6 +36,7 @@ import json
 import os
 import sys
 
+from repro.fleet.billing import get_profile, list_profiles
 from repro.opt.frontier import frontier_slack
 from repro.opt.search import frontier_search, oracle_spot_check
 from repro.opt.space import SWEEPABLE
@@ -43,7 +44,8 @@ from repro.scenarios import get_scenario, list_scenarios
 
 _METRICS = ["cost_per_million", "slowdown_geomean_p99", "normalized_memory",
             "creation_rate", "cpu_overhead", "nodes_mean", "node_cost",
-            "idle_cost", "churn_cost", "completed"]
+            "idle_cost", "churn_cost", "completed", "total_cost",
+            "request_cost", "duration_cost", "warm_pool_cost", "billed_gb_s"]
 
 
 def _columns(rows: list[dict]) -> list[str]:
@@ -91,6 +93,10 @@ def main(argv=None) -> int:
     ap.add_argument("--learn-scale", type=float, default=None,
                     help="training trace scale for --learned "
                          "(default: the coarse scale)")
+    ap.add_argument("--billing", default=None, metavar="PROFILE",
+                    help="bill every swept row (and the learned policy) "
+                         "through this billing profile; see --list for "
+                         "registered profiles")
     ap.add_argument("--out-dir", default="frontier_out",
                     help="where CSV/JSON land (default frontier_out/)")
     ap.add_argument("--telemetry", action="store_true",
@@ -119,6 +125,9 @@ def main(argv=None) -> int:
         print("capacity tiers: " + ", ".join(
             f"{n} ({get_tier(n).price_multiplier:.2f}x, "
             f"{get_tier(n).hazard_per_hour:g}/h)" for n in list_tiers()))
+        print("billing profiles (--billing):")
+        for n in list_profiles():
+            print(f"  {n:12s} {get_profile(n).description}")
         return 0
 
     say = (lambda s: None) if args.quiet else \
@@ -131,13 +140,24 @@ def main(argv=None) -> int:
         print(f"registered: {', '.join(list_scenarios())} (see --list)",
               file=sys.stderr)
         return 2
+    if args.billing is not None:
+        try:
+            get_profile(args.billing)
+        except KeyError:
+            # a friendly listing, not a KeyError traceback
+            print(f"unknown billing profile {args.billing!r}",
+                  file=sys.stderr)
+            print(f"registered profiles: {', '.join(list_profiles())} "
+                  f"(see --list)", file=sys.stderr)
+            return 2
     telem = None
     if args.telemetry:
         from repro.obs import RunTelemetry
         telem = RunTelemetry()
     result = frontier_search(names, scale=args.scale,
                              coarse_frac=args.coarse_frac, eps=args.eps,
-                             survivor_cap=args.cap, log=say, telemetry=telem)
+                             survivor_cap=args.cap, billing=args.billing,
+                             log=say, telemetry=telem)
     checks = []
     if args.spot_check > 0:
         checks = oracle_spot_check(result, k=args.spot_check, log=say,
@@ -153,7 +173,8 @@ def main(argv=None) -> int:
             res = train_policy(name, scale=learn_scale,
                                steps=args.learn_steps, log=say,
                                telemetry=telem)
-            row = evaluate_trained(name, res, scale=args.scale)
+            row = evaluate_trained(name, res, scale=args.scale,
+                                   billing=args.billing)
             front = result.fronts[name]
             slack = frontier_slack(row, front)
             rec = {"scenario": name, "train": res.summary(),
@@ -187,7 +208,8 @@ def main(argv=None) -> int:
                "argv": {"scale": args.scale, "coarse_frac": args.coarse_frac,
                         "eps": args.eps, "cap": args.cap,
                         "spot_check": args.spot_check,
-                        "learned": args.learned}}
+                        "learned": args.learned,
+                        "billing": args.billing}}
     with open(os.path.join(args.out_dir, "frontier.json"), "w") as fh:
         json.dump(payload, fh, indent=2, default=float)
     if telem is not None:

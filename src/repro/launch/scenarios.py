@@ -25,16 +25,19 @@ import argparse
 import csv
 import sys
 
+from repro.fleet.billing import get_profile, list_profiles
 from repro.fleet.spot import get_tier, list_tiers
 from repro.scenarios import (ENGINES, get_scenario, list_scenarios,
                              parity_report, run_scenario)
 from repro.scenarios.runner import apply_tier
 
-# stable CSV column order: identity, run info, then the paper metric core
+# stable CSV column order: identity, run info, the paper metric core, then
+# the billed-dollar columns (empty unless --billing is given)
 _COLUMNS = ["scenario", "engine", "scale", "num_functions", "invocations",
             "wall_s", "slowdown_geomean_p99", "normalized_memory",
             "creation_rate", "cpu_overhead", "worker_share", "nodes_mean",
-            "completed", "dropped", "figure"]
+            "completed", "dropped", "figure", "billing", "total_cost",
+            "cost_per_million", "billed_gb_s"]
 
 
 def _emit(rows: list[dict], out) -> None:
@@ -68,6 +71,11 @@ def main(argv=None) -> int:
                     help="run spot-capable scenarios under this capacity "
                          "tier (hazard, reclaim notice, discount); "
                          "see --list for registered tiers")
+    ap.add_argument("--billing", default=None, metavar="PROFILE",
+                    help="bill both engines through this billing profile "
+                         "(rounding, minimum duration, per-request and "
+                         "per-GB-s fees, cpu throttle); see --list for "
+                         "registered profiles")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record the oracle leg's request/instance/node "
                          "lifecycle spans and write a Chrome-trace JSON "
@@ -91,6 +99,9 @@ def main(argv=None) -> int:
             print(f"  {name:12s} {t.price_multiplier:.2f}x on-demand, "
                   f"{t.hazard_per_hour:g} reclaims/node-hour, "
                   f"{t.reclaim_notice_s:g}s notice")
+        print("\nbilling profiles (--billing):")
+        for name in list_profiles():
+            print(f"  {name:12s} {get_profile(name).description}")
         return 0
 
     tier = None
@@ -101,6 +112,16 @@ def main(argv=None) -> int:
             # a friendly listing, not a KeyError traceback
             print(f"unknown capacity tier {args.tier!r}", file=sys.stderr)
             print(f"registered tiers: {', '.join(list_tiers())} "
+                  f"(see --list)", file=sys.stderr)
+            return 2
+
+    if args.billing is not None:
+        try:
+            get_profile(args.billing)
+        except KeyError:
+            # a friendly listing, not a KeyError traceback
+            print(f"unknown billing profile {args.billing!r}", file=sys.stderr)
+            print(f"registered profiles: {', '.join(list_profiles())} "
                   f"(see --list)", file=sys.stderr)
             return 2
 
@@ -157,7 +178,8 @@ def main(argv=None) -> int:
         detail: dict = {}
         sc_rows = run_scenario(target, engines=engines, scale=args.scale,
                                force_oracle=args.force_oracle, obs=obs,
-                               telemetry=telem_slots, detail=detail)
+                               telemetry=telem_slots, detail=detail,
+                               billing=args.billing)
         if args.telemetry is not None and "fluid_summary" in detail \
                 and detail["fluid_summary"].get("telemetry"):
             from repro.obs import write_timeline_csv

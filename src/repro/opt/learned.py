@@ -13,8 +13,12 @@ training minimizes
 
     loss = cost_per_million_proxy + w_lat * slowdown_proxy
 
-where the cost proxy reprices the scan's node-seconds and master-CPU sums
-exactly as ``repro.fleet.costs`` does, and the slowdown proxy replaces the
+where the cost proxy bills the scan's node-seconds, master-CPU, billed
+GB-s, idle-memory and completion sums through a ``repro.fleet.billing``
+profile (bitwise the old node+master repricing under ``ideal``; provider
+profiles add the per-request / per-GB-s / warm-pool terms so training
+optimizes the SAME dollars the frontier ranks on), and the slowdown proxy
+replaces the
 per-function p99 with a differentiable tail estimate: per function,
 1 + (mean wait + delay-weighted mean wait + warm hop) / mean duration,
 geometric-averaged with arrival weights.  The delay-weighted mean
@@ -43,7 +47,8 @@ from repro.core.policy_api import get_family
 from repro.core.simjax import (_PFLEET, JaxPolicy, _init_state, _make_step,
                                _prep_static)
 from repro.core.trace import Trace, gap_statistics, rate_matrix
-from repro.fleet.costs import PriceBook
+from repro.fleet.billing import (BillingProfile, apply_throttle,
+                                 resolve_profile)
 from repro.fleet.nodes import NodeType
 from repro.opt.search import default_fleet, evaluate_scenario
 from repro.scenarios.registry import get_scenario
@@ -55,7 +60,7 @@ def make_loss(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
               dt: float = 1.0, num_nodes: int = 8, fleet=None,
               warmup_frac: float = 0.5, w_lat: float = 4.0,
               trunc_ticks: int = 64, node_type: NodeType = NodeType(),
-              prices: PriceBook = PriceBook()):
+              billing: Union[str, BillingProfile, None] = None):
     """Build ``(loss_fn, params0)``: a jit-able scalar objective over the
     policy's params PYTREE, differentiable w.r.t. every leaf (a learned
     family's weights, but equally a sync policy's ``keepalive_s`` — the
@@ -98,14 +103,16 @@ def make_loss(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
     # per-TIER node rates: the spot discount applies only to the scan's
     # spot node-seconds (ys[12]), exactly as repro.fleet.costs bills —
     # discounting the whole fleet would overstate any partial-spot savings
+    prof = resolve_profile(billing)
     od_rate = node_type.price_per_hour
-    spot_rate = od_rate * (1.0 - prices.spot_discount)
+    spot_rate = od_rate * (1.0 - prof.spot_discount)
+    billed_w = jnp.asarray(prof.billed_weights(trace.profile), jnp.float32)
     dur_mean = jnp.asarray(np.asarray(dur), jnp.float32)
     family = policy.family
 
     def loss_fn(params) -> jnp.ndarray:
-        step = _make_step(arr, dur, mem, lam0, gaps, gap_tab, params, fl,
-                          cpu_consts,
+        step = _make_step(arr, dur, mem, billed_w, lam0, gaps, gap_tab,
+                          params, fl, cpu_consts,
                           float(num_nodes), family=family, dt=dt,
                           cold_ticks=cold_ticks, wbuf=wbuf,
                           prov_ticks=prov_ticks, has_fleet=has_fleet)
@@ -117,8 +124,9 @@ def make_loss(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
             m = mask[t]
             w = arr_delayed * m
             scalars = scalars + m * jnp.stack(
-                [ys[10], ys[8], ys[11], ys[12]])
-            # ^ nodes, cpu_master, completed, spot nodes
+                [ys[10], ys[8], ys[11], ys[12], ys[13], ys[4] - ys[5]])
+            # ^ nodes, cpu_master, completed, spot nodes, billed GB-s,
+            #   idle (warm-pool) MB
             return (st, a_tot + arr_t * m, d1 + w * delay,
                     d2 + w * delay * delay, scalars), None
 
@@ -131,19 +139,27 @@ def make_loss(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
 
         init_nodes = fl[0] if has_fleet else jnp.asarray(float(num_nodes))
         init = (_init_state(f, cold_ticks, wbuf, prov_ticks, init_nodes),
-                jnp.zeros(f), jnp.zeros(f), jnp.zeros(f), jnp.zeros(4))
+                jnp.zeros(f), jnp.zeros(f), jnp.zeros(f), jnp.zeros(6))
         (_, a_tot, d1, d2, scalars), _ = jax.lax.scan(
             chunk, init, jnp.arange(n_chunks))
 
-        # $-cost proxy: per-tier node-seconds + master CPU, priced as
-        # fleet.costs (spot seconds at the discounted rate, the rest at
-        # on-demand)
+        # $-cost proxy billed through the profile: node-seconds per tier
+        # (weighted — serverless profiles zero the node axis), master CPU,
+        # plus the provider terms (per-request fee, billed GB-s via
+        # ys[13]'s analytic expectation, warm-pool GB-s from the idle
+        # memory sum).  Under ``ideal`` every added term is x*0 and the
+        # weight is 1.0, so the proxy is bitwise the old node+master math.
         node_seconds, master_s = scalars[0] * dt, scalars[1]
         spot_seconds = jnp.minimum(scalars[3] * dt, node_seconds)
         completed = jnp.maximum(scalars[2], 1.0)
-        cost = ((node_seconds - spot_seconds) / 3600.0 * od_rate
-                + spot_seconds / 3600.0 * spot_rate
-                + master_s / 3600.0 * prices.master_vcpu_per_hour)
+        warm_gb_s = jnp.maximum(scalars[5], 0.0) * dt / 1024.0
+        cost = (((node_seconds - spot_seconds) / 3600.0 * od_rate
+                 + spot_seconds / 3600.0 * spot_rate)
+                * prof.node_hour_weight
+                + master_s / 3600.0 * prof.master_vcpu_per_hour
+                + prof.per_request * completed
+                + prof.per_gb_s * scalars[4]
+                + prof.warm_gb_s_rate * warm_gb_s)
         cost_per_million = cost / completed * 1e6
         # slowdown proxy: mean wait + delay-weighted mean wait per function
         mean_wait = d1 / jnp.maximum(a_tot, 1e-9)
@@ -211,10 +227,13 @@ def train_policy(scenario: Union[str, Scenario], family: str = "learned",
                                theta=init_theta(seed)
                                if "theta" in learnable else sc.policy.theta)
     policy = spec.to_jax()
-    trace = sc.build_trace(scale)
+    # train on the workload as the scenario's provider actually runs it
+    # (cpu-throttled durations; identity under ``ideal``)
+    trace = apply_throttle(sc.build_trace(scale), sc.billing)
     fleet = default_fleet(sc)
     loss_fn, params0 = make_loss(trace, policy, sim=sim, dt=sim.tick_s,
-                                 fleet=fleet, w_lat=w_lat, prices=sc.prices)
+                                 fleet=fleet, w_lat=w_lat,
+                                 billing=sc.billing)
 
     frozen = {k: v for k, v in params0.items() if k not in learnable}
     theta = {k: jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), v)
@@ -275,12 +294,13 @@ def learned_scenario(sc: Scenario, result: TrainResult) -> Scenario:
 
 def evaluate_trained(scenario: Union[str, Scenario], result: TrainResult,
                      scale: float = 1.0,
-                     prices: Optional[PriceBook] = None) -> dict:
+                     billing: Union[str, BillingProfile, None] = None) -> dict:
     """One frontier-style metric row (cost, p99, memory, ...) for the
-    trained policy at the given scale — comparable against swept rows."""
+    trained policy at the given scale — comparable against swept rows
+    billed on the same basis."""
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     return evaluate_scenario(learned_scenario(sc, result), [{}], scale=scale,
-                             prices=prices)[0]
+                             billing=billing)[0]
 
 
 def confirm(scenario: Union[str, Scenario], result: TrainResult,

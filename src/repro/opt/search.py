@@ -38,7 +38,8 @@ from repro.core.policy_api import get_family
 from repro.core.simjax import (_PFLEET, JaxFleet, JaxPolicy,
                                _chunked_summaries, stack_params)
 from repro.core.trace import Trace
-from repro.fleet.costs import PriceBook, cost_report
+from repro.fleet.billing import (BillingProfile, apply_throttle,
+                                 bill_summary, resolve_profile)
 from repro.fleet.nodes import NodeType
 from repro.opt.frontier import (X_DEFAULT, Y_DEFAULT, epsilon_survivors,
                                 frontier_slack, hypervolume, pareto_front,
@@ -51,11 +52,13 @@ from repro.scenarios.spec import Scenario
 def evaluate_points(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
                     points: Sequence[dict], sim: SimConfig = SimConfig(),
                     dt: float = 1.0, node_type: Optional[NodeType] = None,
-                    prices: PriceBook = PriceBook(),
+                    billing: Union[str, BillingProfile, None] = None,
                     warmup_frac: float = 0.5,
                     chunk_ticks: int = 512) -> list[dict]:
     """Run every parameter point through one vmapped chunked scan; return
-    one row per point: {params..., metrics..., cost fields...}.
+    one row per point: {params..., metrics..., cost fields...}.  Rows are
+    billed through the ``billing`` profile (``repro.fleet.billing``;
+    default ``ideal`` — bitwise the pre-billing ``cost_report`` math).
 
     This is the generalized core behind ``repro.fleet.sweep.sweep``: every
     policy axis the family declares sweepable is a traced batch axis
@@ -103,10 +106,12 @@ def evaluate_points(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
         trees.append(tree)
     pols = stack_params(trees)
 
+    prof = resolve_profile(billing)
     summaries = _chunked_summaries(
         trace, policy, pols, fleets, sim=sim, dt=dt, num_nodes=0,
         provision_s=fleet.provision_s, has_fleet=True,
-        chunk_ticks=chunk_ticks, warmup_frac=warmup_frac, nbins=256)
+        chunk_ticks=chunk_ticks, warmup_frac=warmup_frac, nbins=256,
+        billing=prof)
 
     if node_type is None:
         # derive a shape from the fleet's node size at the default $/GB-hour
@@ -132,15 +137,7 @@ def evaluate_points(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
         else:
             nt_i = nt
         cap_mb = max(s["nodes_mean"] * node_mem, 1e-9)
-        idle_mb = s["mem_total_mean"] - s["mem_busy_mean"]
-        cost = cost_report(
-            node_seconds=s["node_seconds"],
-            cpu_worker_overhead_s=s["cpu_worker_s"],
-            cpu_master_overhead_s=s["cpu_master_s"],
-            idle_node_share=idle_mb / cap_mb,
-            completed=int(s["completed"]),
-            node_type=nt_i, prices=prices,
-            spot_node_seconds=s["spot_node_seconds"])
+        cost = bill_summary(s, prof, node_type=nt_i, dt=dt, cap_mb=cap_mb)
         rows.append({**p, **s, **cost.row()})
     return rows
 
@@ -164,19 +161,22 @@ def _effective_key(point: dict, family: str) -> tuple:
 
 def evaluate_scenario(scenario: Union[str, Scenario], points: Sequence[dict],
                       scale: float = 1.0, sim: Optional[SimConfig] = None,
-                      prices: Optional[PriceBook] = None,
+                      billing: Union[str, BillingProfile, None] = None,
                       dedupe: bool = True) -> list[dict]:
     """Evaluate every point against one scenario's workload; one row per
     point, tagged with ``point_id`` (the index into ``points``) and the
     scenario identity so downstream reducers can join across scenarios.
-    ``prices`` defaults to the scenario's own PriceBook (a spot scenario
-    carries its tier discount there)."""
+    ``billing`` defaults to the scenario's own profile (a spot scenario
+    carries its tier discount there); a profile given by name inherits
+    that discount.  The profile's cpu-throttle term stretches the trace
+    BEFORE simulation, so a provider profile is a different workload, not
+    just a different invoice."""
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     sim = sim or SimConfig(tick_s=sc.policy.tick_s)
-    prices = prices if prices is not None else sc.prices
+    prof = resolve_profile(billing, sc.billing)
     policy = sc.policy.to_jax()
     fleet = default_fleet(sc)
-    trace = sc.build_trace(scale)
+    trace = apply_throttle(sc.build_trace(scale), prof)
 
     pts = list(points)
     if dedupe:
@@ -194,7 +194,7 @@ def evaluate_scenario(scenario: Union[str, Scenario], points: Sequence[dict],
 
     t0 = time.time()
     uniq_rows = evaluate_points(trace, policy, fleet, order, sim=sim,
-                                dt=sim.tick_s, prices=prices,
+                                dt=sim.tick_s, billing=prof,
                                 chunk_ticks=sc.chunk_ticks)
     wall = time.time() - t0
     rows = []
@@ -219,10 +219,10 @@ class FrontierResult:
     fronts: dict[str, list[dict]]        # scenario -> Pareto front (refined)
     robust_ids: list[int]                # robust frontier point ids (refined)
     wall_s: float
-    # the pricing every row was costed with — spot-check backfills must
-    # re-evaluate on the same basis or dominance comparisons are garbage
-    # (None = each scenario's own PriceBook, the default)
-    prices: Optional[PriceBook] = None
+    # the billing spec every row was costed with — spot-check backfills
+    # must re-evaluate on the same basis or dominance comparisons are
+    # garbage (None = each scenario's own profile, the default)
+    billing: Union[str, BillingProfile, None] = None
 
     def robust_rows(self) -> list[dict]:
         """The robust frontier as rows: one per (robust point, scenario),
@@ -276,7 +276,7 @@ def frontier_search(scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
                     space: SearchSpace = DEFAULT_SPACE, scale: float = 1.0,
                     coarse_frac: float = 0.1, eps: float = 0.15,
                     survivor_cap: int = 12,
-                    prices: Optional[PriceBook] = None,
+                    billing: Union[str, BillingProfile, None] = None,
                     log: Optional[Callable[[str], None]] = None,
                     telemetry=None) -> FrontierResult:
     """The coarse -> survive -> refine -> reduce pipeline over every given
@@ -299,7 +299,7 @@ def frontier_search(scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
     coarse: dict[str, list[dict]] = {}
     for name, sc in scs.items():
         coarse[name] = evaluate_scenario(sc, points, scale=coarse_scale,
-                                         prices=prices)
+                                         billing=billing)
         say(f"coarse {name}: {coarse[name][0]['sims']} sims for "
             f"{len(points)} points in {coarse[name][0]['stage_wall_s']}s")
         tel("frontier_coarse", scenario=name, sims=coarse[name][0]["sims"],
@@ -321,7 +321,7 @@ def frontier_search(scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
     sub = [points[i] for i in ids]
     refined: dict[str, list[dict]] = {}
     for name, sc in scs.items():
-        rows = evaluate_scenario(sc, sub, scale=scale, prices=prices)
+        rows = evaluate_scenario(sc, sub, scale=scale, billing=billing)
         for r, pid in zip(rows, ids):     # re-key to global point ids
             r["point_id"] = pid
         refined[name] = rows
@@ -341,7 +341,7 @@ def frontier_search(scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
                           coarse_scale=coarse_scale, coarse=coarse,
                           refined=refined, fronts=fronts,
                           robust_ids=robust_ids,
-                          wall_s=time.time() - t_start, prices=prices)
+                          wall_s=time.time() - t_start, billing=billing)
 
 
 # ---------------------------------------------------------------------------
@@ -519,7 +519,7 @@ def oracle_spot_check(result: FrontierResult, k: int = 3,
                 pid = nxt["point_id"]
                 newrow = evaluate_scenario(sc, [result.points[pid]],
                                            scale=result.scale,
-                                           prices=result.prices)[0]
+                                           billing=result.billing)[0]
                 newrow["point_id"] = pid
                 rows.append(newrow)
                 result.refined[name] = rows

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 from repro.core.simjax import JaxFleet
 from repro.core.trace import TraceConfig
-from repro.fleet.costs import PriceBook
+from repro.fleet.billing import IDEAL
 from repro.fleet.spot import SPOT_DEFAULT
 from repro.scenarios.spec import PolicySpec, Scenario
 from repro.scenarios.transforms import (BurstInject, RateScale, Splice,
@@ -150,5 +150,5 @@ register(Scenario(
                    max_nodes=64, util_target=0.7, warm_frac=0.25,
                    cooldown_s=120.0,
                    reclaim_notice_s=SPOT_DEFAULT.reclaim_notice_s),
-    prices=PriceBook(spot_discount=SPOT_DEFAULT.discount),
+    billing=IDEAL.with_spot_discount(SPOT_DEFAULT.discount),
 ))

@@ -23,6 +23,8 @@ from repro.core.cluster import Cluster
 from repro.core.eventsim import EventSim, SimConfig
 from repro.core.metrics import compute
 from repro.core.simjax import JaxFleet, simulate_chunked
+from repro.fleet.billing import (BillingProfile, apply_throttle, bill_sim,
+                                 bill_summary, resolve_profile)
 from repro.fleet.nodes import NodeFleet, NodeType
 from repro.fleet.policies import UtilizationFleetPolicy
 from repro.fleet.spot import CapacityTier, SpotMarket, SpotNodeFleet
@@ -79,27 +81,31 @@ def _oracle_fleet(jf: JaxFleet, spec: Optional[PolicySpec] = None,
 def apply_tier(sc: Scenario, tier: CapacityTier) -> Optional[Scenario]:
     """Re-spec a scenario to run under the given capacity tier: its
     policy's ``hazard_per_hour`` axis, the fleet's reclaim notice, and the
-    tier discount in the PriceBook.  Returns None when the scenario cannot
-    express a tier (no fleet, or its policy family declares no spot axes) —
-    the CLI reports those instead of silently running them unchanged."""
+    tier discount in the billing spec.  Returns None when the scenario
+    cannot express a tier (no fleet, or its policy family declares no spot
+    axes) — the CLI reports those instead of silently running them
+    unchanged."""
     if sc.fleet is None \
             or "hazard_per_hour" not in sc.policy.family().axis_names():
         return None
     extra = {**dict(sc.policy.extra or {}),
              "hazard_per_hour": tier.hazard_per_hour}
-    from repro.fleet.costs import PriceBook
     return dataclasses.replace(
         sc,
         policy=dataclasses.replace(sc.policy, extra=extra),
         fleet=dataclasses.replace(sc.fleet,
                                   reclaim_notice_s=tier.reclaim_notice_s),
-        prices=PriceBook(
-            master_vcpu_per_hour=sc.prices.master_vcpu_per_hour,
-            spot_discount=tier.discount))
+        billing=sc.billing.with_spot_discount(tier.discount))
+
+
+def _billing_node_type(sc: Scenario) -> NodeType:
+    """The node shape a scenario's bill is denominated in (both engines)."""
+    return oracle_node_type(sc.fleet) if sc.fleet is not None else NodeType()
 
 
 def _run_eventsim(sc: Scenario, trace, sim: SimConfig, obs=None,
-                  detail: Optional[dict] = None) -> dict:
+                  detail: Optional[dict] = None,
+                  billing: Optional[BillingProfile] = None) -> dict:
     if sc.fleet is not None:
         cluster = Cluster(max(1, int(sc.fleet.min_nodes)),
                           node_memory_mb=sc.fleet.node_memory_mb)
@@ -111,23 +117,35 @@ def _run_eventsim(sc: Scenario, trace, sim: SimConfig, obs=None,
                    obs=obs).run()
     if detail is not None:
         detail["oracle_result"] = res
-    return compute(res).row()
+    row = compute(res).row()
+    if billing is not None:
+        # exact per-record billed durations (SimResult.billed_duration_totals)
+        row.update(bill_sim(res, trace, billing,
+                            node_type=_billing_node_type(sc)).row())
+    return row
 
 
-def _run_simjax(sc: Scenario, trace, sim: SimConfig,
-                telemetry: int = 0) -> dict:
+def _run_simjax(sc: Scenario, trace, sim: SimConfig, telemetry: int = 0,
+                billing: Optional[BillingProfile] = None) -> dict:
     # dt = the oracle's reconcile tick: both engines share one control period
-    return simulate_chunked(trace, sc.policy.to_jax(), sim=sim,
-                            dt=sim.tick_s, num_nodes=sc.num_nodes,
-                            fleet=sc.fleet, chunk_ticks=sc.chunk_ticks,
-                            telemetry=telemetry)
+    row = simulate_chunked(trace, sc.policy.to_jax(), sim=sim,
+                           dt=sim.tick_s, num_nodes=sc.num_nodes,
+                           fleet=sc.fleet, chunk_ticks=sc.chunk_ticks,
+                           telemetry=telemetry, billing=billing)
+    if billing is not None:
+        row = {**row, **bill_summary(row, billing,
+                                     node_type=_billing_node_type(sc),
+                                     dt=sim.tick_s).row()}
+    return row
 
 
 def run_scenario(scenario: Union[str, Scenario],
                  engines: Sequence[str] = ENGINES, scale: float = 1.0,
                  sim: Optional[SimConfig] = None,
                  force_oracle: bool = False, obs=None, telemetry: int = 0,
-                 detail: Optional[dict] = None) -> list[dict]:
+                 detail: Optional[dict] = None,
+                 billing: Union[str, BillingProfile, None] = None
+                 ) -> list[dict]:
     """Build the scenario trace once and replay it through each engine.
 
     The oracle leg is skipped for scenarios flagged ``oracle_ok=False``
@@ -141,8 +159,17 @@ def run_scenario(scenario: Union[str, Scenario],
     leg's row.  Both default off and change nothing when off.  ``detail``,
     when given a dict, receives ``"oracle_result"`` (the raw ``SimResult``
     the attribution ledger reads) and ``"fluid_summary"``.
+
+    ``billing`` (a ``repro.fleet.billing`` profile or name, default off)
+    bills BOTH engines' rows through the profile — the oracle by exact
+    per-record duration rounding, the fluid leg by the in-scan analytic
+    expectation — applies the profile's cpu-throttle term to the shared
+    trace, and tags each row with the profile name.  A profile given BY
+    NAME inherits the scenario's spot discount (the tier is workload
+    state, not provider semantics); a profile OBJECT is used verbatim.
     """
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    bp = resolve_profile(billing, sc.billing) if billing is not None else None
     # both engines run the same control-loop period (see PolicySpec.tick_s)
     sim = sim or SimConfig(tick_s=sc.policy.tick_s)
     runnable = []
@@ -156,20 +183,51 @@ def run_scenario(scenario: Union[str, Scenario],
     if not runnable:       # don't synthesize a multi-million-event trace
         return []          # just to run nothing
     trace = sc.build_trace(scale)
+    if bp is not None:
+        # the throttled trace is SHARED: both engines replay the same
+        # memory-stretched durations, so parity judges the billing model,
+        # not a one-sided duration transform (identity under ``ideal``)
+        trace = apply_throttle(trace, bp)
     meta = {"scenario": sc.name, "scale": scale, "figure": sc.figure,
             "num_functions": trace.num_functions, "invocations": len(trace)}
+    if bp is not None:
+        meta["billing"] = bp.name
     rows = []
     for engine in runnable:
         t0 = time.time()
         if engine == "eventsim":
-            metrics = _run_eventsim(sc, trace, sim, obs=obs, detail=detail)
+            metrics = _run_eventsim(sc, trace, sim, obs=obs, detail=detail,
+                                    billing=bp)
         else:
-            metrics = _run_simjax(sc, trace, sim, telemetry=telemetry)
+            metrics = _run_simjax(sc, trace, sim, telemetry=telemetry,
+                                  billing=bp)
             if detail is not None:
                 detail["fluid_summary"] = metrics
         rows.append({**meta, "engine": engine,
                      "wall_s": round(time.time() - t0, 3), **metrics})
     return rows
+
+
+def billed_parity(scenario: Union[str, Scenario],
+                  billing: Union[str, BillingProfile],
+                  scale: float = 0.25,
+                  sim: Optional[SimConfig] = None) -> dict:
+    """Replay a scenario through BOTH engines under a billing profile and
+    return the relative oracle-vs-fluid gaps of the billed dollar totals —
+    the acceptance gate for the provider-calibrated billing engine (≤15%
+    on ``total_cost`` at 0.25x, the scale the parity band is calibrated
+    at)."""
+    rows = run_scenario(scenario, scale=scale, sim=sim, force_oracle=True,
+                        billing=billing)
+    by = {r["engine"]: r for r in rows}
+    if not {"eventsim", "simjax"} <= set(by):
+        raise RuntimeError("billed_parity needs both engine legs; got "
+                           f"{sorted(by)}")
+    out = {}
+    for k in ("total_cost", "billed_gb_s"):
+        a, b = by["eventsim"][k], by["simjax"][k]
+        out[k] = abs(a - b) / max(abs(a), 1e-9)
+    return out
 
 
 def frontier(scenarios: Optional[Sequence[str]] = None, scale: float = 1.0,

@@ -21,7 +21,7 @@ from repro.core.policies import Policy
 from repro.core.policy_api import get_family
 from repro.core.simjax import JaxFleet, JaxPolicy
 from repro.core.trace import Trace, TraceConfig, synthesize
-from repro.fleet.costs import PriceBook
+from repro.fleet.billing import IDEAL, BillingProfile
 from repro.scenarios.transforms import Transform, apply_transforms
 
 
@@ -80,10 +80,13 @@ class Scenario:
     fleet: Optional[JaxFleet] = None   # two-level autoscaling when set
     oracle_ok: bool = True             # discrete-event replay feasible at 1.0x
     chunk_ticks: int = 512             # simjax time-chunk length
-    # the pricing this scenario's rows are costed with (a spot scenario
-    # carries its tier discount here so every consumer — frontier, bench
-    # gate, CLIs — bills it identically by default)
-    prices: PriceBook = PriceBook()
+    # the billing spec this scenario's rows are costed with (a spot
+    # scenario carries its tier discount here so every consumer —
+    # frontier, bench gate, CLIs — bills it identically by default).
+    # Generalizes the old ``prices: PriceBook`` field: a BillingProfile
+    # carries the PriceBook knobs PLUS the provider-side semantics
+    # (rounding, fees, GB-s metering, warm tier — see repro.fleet.billing)
+    billing: BillingProfile = IDEAL
 
     def scaled_config(self, scale: float = 1.0) -> TraceConfig:
         """Shrink the workload isotropically (functions, duration, load) for

@@ -1,0 +1,290 @@
+"""Provider-calibrated billing engine: rounding/censoring math, the
+ideal-profile bitwise guarantee on both engines, registry/CLI errors, and
+the oracle-vs-fluid billed-cost parity band."""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import Cluster
+from repro.core.eventsim import EventSim, SimConfig
+from repro.core.trace import TraceConfig, synthesize
+from repro.fleet import (AWS_LAMBDA, GCR, IDEAL, BillingProfile, NodeType,
+                         apply_throttle, bill_sim, cost_from_sim,
+                         cost_report, get_profile, list_profiles,
+                         resolve_profile)
+from repro.fleet.billing import _norm_ppf
+from repro.scenarios import run_scenario
+from repro.scenarios.runner import billed_parity
+
+TC = TraceConfig(num_functions=40, duration_s=600, target_total_rps=8,
+                 seed=11)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return synthesize(TC)
+
+
+# ---------------------------------------------------------------------------
+# cost_report edge cases (the pre-billing layer the profiles delegate to)
+# ---------------------------------------------------------------------------
+
+
+def test_spot_seconds_clamped_to_node_seconds():
+    # a reporting glitch claiming more spot-seconds than node-seconds must
+    # bill the whole fleet at the spot rate, never go negative on-demand
+    r = cost_report(node_seconds=3600.0, cpu_worker_overhead_s=0.0,
+                    cpu_master_overhead_s=0.0, idle_node_share=0.0,
+                    completed=10, node_type=NodeType(price_per_hour=1.0),
+                    spot_node_seconds=7200.0)
+    r_exact = cost_report(node_seconds=3600.0, cpu_worker_overhead_s=0.0,
+                          cpu_master_overhead_s=0.0, idle_node_share=0.0,
+                          completed=10,
+                          node_type=NodeType(price_per_hour=1.0),
+                          spot_node_seconds=3600.0)
+    assert r.node_cost == r_exact.node_cost
+    assert r.node_cost >= 0.0
+
+
+def test_zero_node_hours_blended_rate():
+    # no node-seconds: the blended churn rate falls back to on-demand
+    # instead of dividing by zero, and the churn bill stays finite
+    r = cost_report(node_seconds=0.0, cpu_worker_overhead_s=360.0,
+                    cpu_master_overhead_s=0.0, idle_node_share=0.0,
+                    completed=5, node_type=NodeType(price_per_hour=2.0,
+                                                    vcpus=8.0))
+    assert math.isfinite(r.churn_cost)
+    assert r.churn_cost == pytest.approx((360.0 / 3600.0) * (2.0 / 8.0))
+
+
+def test_zero_completions_cost_is_nan_labeled():
+    # a window that completed nothing reports NaN $/1M (labeled, like the
+    # ``dropped`` column), not a figure divided by a phantom request
+    r = cost_report(node_seconds=3600.0, cpu_worker_overhead_s=0.0,
+                    cpu_master_overhead_s=0.0, idle_node_share=0.0,
+                    completed=0)
+    assert math.isnan(r.cost_per_million)
+    assert math.isfinite(r.total_cost)
+    b = IDEAL.bill(node_seconds=3600.0, cpu_worker_overhead_s=0.0,
+                   cpu_master_overhead_s=0.0, idle_node_share=0.0,
+                   completed=0)
+    assert math.isnan(b.cost_per_million)
+
+
+# ---------------------------------------------------------------------------
+# duration billing: rounding, censoring, and the analytic expectation
+# ---------------------------------------------------------------------------
+
+
+def test_min_billed_duration_censors_short_requests():
+    p = BillingProfile(name="t", rounding_s=0.1, min_billed_s=0.1)
+    assert p.billed_seconds(0.003) == pytest.approx(0.1)   # d < minimum
+    assert p.billed_seconds(0.101) == pytest.approx(0.2)   # rounds up
+    # an exact multiple must NOT round up one extra step via float noise
+    assert p.billed_seconds(0.1) == pytest.approx(0.1)
+    assert p.billed_seconds(0.3) == pytest.approx(0.3)
+
+
+def test_ideal_billed_seconds_is_identity():
+    d = np.array([0.0007, 0.02, 1.5, 29.9])
+    assert np.array_equal(IDEAL.billed_seconds(d), d)
+
+
+def test_norm_ppf_matches_standard_quantiles():
+    assert _norm_ppf(np.array([0.5]))[0] == pytest.approx(0.0, abs=1e-9)
+    assert _norm_ppf(np.array([0.975]))[0] == pytest.approx(1.959964,
+                                                            abs=1e-5)
+    assert _norm_ppf(np.array([0.001]))[0] == pytest.approx(-3.090232,
+                                                            abs=1e-5)
+
+
+@pytest.mark.parametrize("profile", [AWS_LAMBDA, GCR])
+def test_expected_billing_matches_exact_rounding_on_trace(trace, profile):
+    # the fluid side's analytic expectation vs the oracle side's exact
+    # per-record rounding, on the SAME sampled durations: the trace's
+    # durations are draws from the clipped lognormal the expectation
+    # integrates, so the totals agree to sampling error
+    counts = np.bincount(trace.fn, minlength=trace.num_functions)
+    exact = np.zeros(trace.num_functions)
+    np.add.at(exact, trace.fn, profile.billed_seconds(trace.dur))
+    expect = profile.expected_billed_seconds(trace.profile.dur_median,
+                                             trace.profile.dur_sigma)
+    gap = abs(exact.sum() - (counts * expect).sum()) / exact.sum()
+    assert gap < 0.05
+
+
+def test_billed_weights_use_configured_memory(trace):
+    w = AWS_LAMBDA.billed_weights(trace.profile)
+    e = AWS_LAMBDA.expected_billed_seconds(trace.profile.dur_median,
+                                           trace.profile.dur_sigma)
+    assert np.allclose(w, e * trace.profile.memory_mb / 1024.0)
+
+
+# ---------------------------------------------------------------------------
+# cpu throttle
+# ---------------------------------------------------------------------------
+
+
+def test_throttle_identity_under_ideal(trace):
+    assert apply_throttle(trace, IDEAL) is trace
+    assert apply_throttle(trace, GCR) is trace     # whole-vCPU: no term
+
+
+def test_throttle_stretches_and_caps(trace):
+    out = apply_throttle(trace, AWS_LAMBDA)
+    assert out is not trace
+    f = AWS_LAMBDA.throttle_factor(trace.profile.memory_mb)
+    assert np.all(f >= 1.0) and np.all(f <= AWS_LAMBDA.throttle_cap)
+    assert np.all(out.dur >= trace.dur - 1e-12)
+    assert np.allclose(out.dur,
+                       np.minimum(trace.dur * f[trace.fn], 30.0))
+    # full-vCPU memory is not throttled at all
+    assert AWS_LAMBDA.throttle_factor(np.array([1769.0, 4096.0]))\
+        .max() == 1.0
+
+
+# ---------------------------------------------------------------------------
+# registry / resolution / CLI
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_and_friendly_error():
+    assert {"ideal", "aws_lambda", "gcr"} <= set(list_profiles())
+    with pytest.raises(KeyError, match="registered"):
+        get_profile("azure")
+
+
+def test_resolve_profile_semantics():
+    tiered = IDEAL.with_spot_discount(0.65)
+    # None -> the context default, verbatim
+    assert resolve_profile(None, tiered) is tiered
+    # a NAME inherits the default's spot discount (tier = workload state)
+    by_name = resolve_profile("aws_lambda", tiered)
+    assert by_name.spot_discount == 0.65
+    assert by_name.per_gb_s == AWS_LAMBDA.per_gb_s
+    # a profile OBJECT is used verbatim, discount and all
+    assert resolve_profile(GCR, tiered) is GCR
+
+
+def test_cli_unknown_billing_exits_2(capsys):
+    from repro.launch.scenarios import main
+    assert main(["--scenario", "cold_tail", "--billing", "nope"]) == 2
+    err = capsys.readouterr().err
+    assert "aws_lambda" in err and "gcr" in err
+    from repro.launch.frontier import main as fmain
+    assert fmain(["--scenario", "cold_tail", "--billing", "nope"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# the ideal-profile bitwise regression, both engines
+# ---------------------------------------------------------------------------
+
+
+def test_ideal_bill_is_bitwise_cost_report():
+    kw = dict(node_seconds=5432.1, cpu_worker_overhead_s=321.0,
+              cpu_master_overhead_s=77.7, idle_node_share=0.4,
+              completed=1234, node_type=NodeType(price_per_hour=0.7),
+              spot_node_seconds=1000.0)
+    base = cost_report(**kw)
+    bill = IDEAL.with_spot_discount(0.0).bill(**kw)
+    for k in ("node_hours", "node_cost", "master_cost", "churn_cost",
+              "idle_cost", "total_cost", "cost_per_million"):
+        assert getattr(bill, k) == getattr(base, k), k
+    assert bill.request_cost == 0.0 and bill.duration_cost == 0.0
+    assert bill.warm_pool_cost == 0.0
+
+
+def test_ideal_oracle_bill_is_bitwise_cost_from_sim(trace):
+    res = EventSim(trace, Cluster(4),
+                   lambda f: __import__("repro.core.policies",
+                                        fromlist=["SyncKeepalivePolicy"])
+                   .SyncKeepalivePolicy(keepalive_s=120),
+                   SimConfig()).run()
+    base = cost_from_sim(res)
+    bill = bill_sim(res, trace, IDEAL)
+    for k in ("node_cost", "total_cost", "cost_per_million", "idle_cost"):
+        assert getattr(bill, k) == getattr(base, k), k
+
+
+def test_ideal_billing_leaves_both_engines_bitwise_unchanged():
+    # billing="ideal" must not perturb a single metric on either engine:
+    # no throttle, weight-1 node bill, zero provider terms
+    plain = run_scenario("cold_tail", scale=0.1, force_oracle=True)
+    billed = run_scenario("cold_tail", scale=0.1, force_oracle=True,
+                          billing="ideal")
+    for p, b in zip(plain, billed):
+        assert p["engine"] == b["engine"]
+        for k in ("slowdown_geomean_p99", "normalized_memory",
+                  "creation_rate", "cpu_overhead"):
+            assert p[k] == b[k], (b["engine"], k)
+        # a bill counts whole requests: the fluid leg's fractional
+        # completion expectation is truncated, nothing else moves
+        assert b["completed"] == int(p["completed"])
+        # and the billed total is bitwise the ideal cost layer's total
+        assert b["billing"] == "ideal"
+        assert math.isfinite(b["total_cost"])
+
+
+def test_provider_billing_emits_provider_terms():
+    rows = run_scenario("cold_tail", scale=0.1, force_oracle=True,
+                        billing="aws_lambda")
+    assert len(rows) == 2
+    for r in rows:
+        assert r["billing"] == "aws_lambda"
+        assert r["request_cost"] > 0.0
+        assert r["duration_cost"] > 0.0
+        assert r["billed_gb_s"] > 0.0
+        # serverless profile: the node-hour axis is not billed
+        assert r["node_cost"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the oracle-vs-fluid billed-cost parity band (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+
+def test_billed_parity_cold_tail_quick():
+    gaps = billed_parity("cold_tail", "aws_lambda", scale=0.25)
+    assert gaps["total_cost"] <= 0.15
+    assert gaps["billed_gb_s"] <= 0.15
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("provider", ["aws_lambda", "gcr"])
+def test_billed_parity_all_scenarios(provider):
+    from repro.scenarios import list_scenarios
+    for name in list_scenarios():
+        gaps = billed_parity(name, provider, scale=0.25)
+        assert gaps["total_cost"] <= 0.15, (name, provider, gaps)
+
+
+# ---------------------------------------------------------------------------
+# fig13 machinery
+# ---------------------------------------------------------------------------
+
+
+def test_fig13_rank_and_front_shift_math():
+    from benchmarks.fig13_billing_delta import front_shift, rank_shift
+    a = [{"point_id": i, "cost_per_million": c,
+          "slowdown_geomean_p99": 1.0 + i}
+         for i, c in enumerate([1.0, 2.0, 3.0])]
+    b = [{"point_id": i, "cost_per_million": c,
+          "slowdown_geomean_p99": 1.0 + i}
+         for i, c in enumerate([3.0, 2.0, 1.0])]
+    assert rank_shift(a, a) == 0.0
+    assert rank_shift(a, b) == 1.0          # full reversal
+    assert front_shift(a, a) == 0.0
+
+
+def test_spot_discount_only_rebills_spot_tier():
+    p = dataclasses.replace(AWS_LAMBDA, node_hour_weight=1.0)\
+        .with_spot_discount(0.65)
+    kw = dict(cpu_worker_overhead_s=0.0, cpu_master_overhead_s=0.0,
+              idle_node_share=0.0, completed=10,
+              node_type=NodeType(price_per_hour=1.0))
+    mixed = p.bill(node_seconds=7200.0, spot_node_seconds=3600.0, **kw)
+    # one on-demand hour + one spot hour at 35%
+    assert mixed.node_cost == pytest.approx(1.0 + 0.35)
