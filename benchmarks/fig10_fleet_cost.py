@@ -15,7 +15,8 @@ import time
 from benchmarks.common import emit, trace
 from repro.core.simjax import JaxFleet, JaxPolicy
 from repro.fleet.nodes import NodeType
-from repro.fleet.sweep import pareto_front, sweep
+from repro.fleet.sweep import sweep
+from repro.opt.frontier import pareto_front
 
 NODE_MB = 32_768.0
 NODE_TYPE = NodeType(name="worker-8", memory_mb=NODE_MB, vcpus=8.0,

@@ -16,6 +16,7 @@ import dataclasses
 import time
 
 from benchmarks.common import emit
+from repro.core.runspec import RunSpec
 from repro.opt import evaluate_scenario, frontier_slack, pareto_front
 from repro.opt.learned import confirm, evaluate_trained, train_policy
 from repro.scenarios import get_scenario
@@ -34,11 +35,12 @@ def baseline_rows(scale: float = EVAL_SCALE) -> list[dict]:
     rows = []
     for r in evaluate_scenario(sc, [{"keepalive_s": float(ka)}
                                     for ka in (60.0, 300.0, 600.0)],
-                               scale=scale):
+                               spec=RunSpec(scale=scale)):
         rows.append({**r, "name": f"sync_ka{int(r['keepalive_s'])}"})
     hybrid = dataclasses.replace(
         sc, policy=dataclasses.replace(sc.policy, kind="hybrid"))
-    rows.append({**evaluate_scenario(hybrid, [{}], scale=scale)[0],
+    rows.append({**evaluate_scenario(hybrid, [{}],
+                                     spec=RunSpec(scale=scale))[0],
                  "name": "hybrid_tuned"})
     return rows
 

@@ -24,6 +24,7 @@ import time
 from benchmarks.common import emit
 from repro.core.cluster import Cluster
 from repro.core.eventsim import EventSim, SimConfig
+from repro.core.runspec import RunSpec
 from repro.fleet.billing import bill_sim
 from repro.opt import evaluate_scenario, grid_points, pareto_front
 from repro.opt.search import hazard_parity_gaps, point_scenario
@@ -65,9 +66,10 @@ def run(scale: float = 1.0, confirm: bool = True):
     sc = get_scenario(SCENARIO)
     points = grid_points(GRID)
 
-    rows = evaluate_scenario(sc, points, scale=eval_scale)
+    rows = evaluate_scenario(sc, points, spec=RunSpec(scale=eval_scale))
     naive = evaluate_scenario(sc, [{**p, "hazard_per_hour": 0.0}
-                                   for p in points], scale=eval_scale)
+                                   for p in points],
+                              spec=RunSpec(scale=eval_scale))
 
     od = [r for r in rows if r["spot_fraction"] == 0.0]
     best_od = min(od, key=lambda r: r["cost_per_million"])

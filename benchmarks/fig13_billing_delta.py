@@ -32,6 +32,7 @@ import os
 import time
 
 from benchmarks.common import emit
+from repro.core.runspec import RunSpec
 from repro.opt import evaluate_scenario, pareto_front
 from repro.opt.space import DEFAULT_SPACE
 from repro.scenarios.runner import billed_parity
@@ -111,12 +112,11 @@ def run(scale: float = 1.0, parity: bool = True, out_dir: str = None):
     detail: dict = {}
     max_rank = max_front = 0.0
     for name in SCENARIOS:
-        by_billing = {"ideal": evaluate_scenario(name, points,
-                                                 scale=eval_scale,
-                                                 billing="ideal")}
+        by_billing = {"ideal": evaluate_scenario(
+            name, points, spec=RunSpec(scale=eval_scale, billing="ideal"))}
         for prov in PROVIDERS:
-            rows = evaluate_scenario(name, points, scale=eval_scale,
-                                     billing=prov)
+            rows = evaluate_scenario(
+                name, points, spec=RunSpec(scale=eval_scale, billing=prov))
             by_billing[prov] = rows
             rs = rank_shift(by_billing["ideal"], rows)
             fs = front_shift(by_billing["ideal"], rows)

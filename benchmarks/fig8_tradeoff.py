@@ -16,6 +16,7 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import KEEPALIVES, TARGETS, TRACE_CFG, WINDOWS, emit
+from repro.core.runspec import RunSpec
 from repro.opt import evaluate_scenario, pareto_front
 from repro.scenarios import PolicySpec, Scenario
 
@@ -32,12 +33,14 @@ def sweep_rows(scale: float = 1.0) -> list[dict]:
     rows = []
     sc = _scenario(PolicySpec(kind="sync"))
     for r in evaluate_scenario(sc, [{"keepalive_s": float(ka)}
-                                    for ka in KEEPALIVES], scale=scale):
+                                    for ka in KEEPALIVES],
+                               spec=RunSpec(scale=scale)):
         rows.append({**r, "name": f"sync_ka{int(r['keepalive_s'])}"})
     for w in WINDOWS:
         sc = _scenario(PolicySpec(kind="async", window_s=float(w)))
         for r in evaluate_scenario(sc, [{"target": float(t)}
-                                        for t in TARGETS], scale=scale):
+                                        for t in TARGETS],
+                                   spec=RunSpec(scale=scale)):
             rows.append({**r, "name": f"async_w{w}_t{r['target']}"})
     return rows
 

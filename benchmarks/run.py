@@ -44,6 +44,7 @@ MODULES = [
     "benchmarks.fig7_container_concurrency",
     "benchmarks.fig8_tradeoff",
     "benchmarks.fig9_large_scale",
+    "benchmarks.fig9_planet",
     "benchmarks.fig10_fleet_cost",
     "benchmarks.fig11_learned_policy",
     "benchmarks.fig12_spot_frontier",
@@ -67,12 +68,16 @@ def quick_hypervolume() -> dict:
     """Per-scenario frontier hypervolume over the DEFAULT_SPACE coarse grid
     (ROADMAP: multi-objective CI tracking — a point-wise metric gate misses
     a front that got strictly worse between its endpoints)."""
+    from repro.core.runspec import RunSpec
     from repro.opt import DEFAULT_SPACE, evaluate_scenario, hypervolume
-    from repro.scenarios import list_scenarios
+    from repro.scenarios import get_scenario, list_scenarios
     points = DEFAULT_SPACE.points()
     out = {}
     for name in list_scenarios():
-        rows = evaluate_scenario(name, points, scale=QUICK_SCALE)
+        if get_scenario(name).rate_trace:
+            continue   # the planet path has its own dedicated wall gate
+        rows = evaluate_scenario(name, points,
+                                 spec=RunSpec(scale=QUICK_SCALE))
         hv = hypervolume(rows, *HV_REF)
         out[f"frontier_hv_inv_{name}"] = 1.0 / hv if hv > 0 else math.inf
     return out
@@ -103,6 +108,16 @@ def run_quick() -> dict:
     t0 = time.time()
     metrics.update(quick_hypervolume())
     metrics["frontier_hv_wall_s"] = round(time.time() - t0, 3)
+
+    # planet scale (fig9_planet, rate-based workload): gate the full
+    # planet path — clustering plus the (un)sharded chunked dispatch — at
+    # 0.25x (25k functions, ~12.5M invocations); a lost-jit-cache,
+    # lost-sharding, or lost-clustering regression is a several-x movement
+    # here.  Slowdown rides along as a determinism check.
+    from benchmarks import fig9_planet
+    row, wall = fig9_planet.run(scale=0.25)
+    metrics["fig9_planet_wall_s"] = round(wall, 3)
+    metrics["fig9_planet_quick_p99"] = row["slowdown_geomean_p99"]
 
     # spot frontier: the fluid (deterministic) winner-vs-on-demand cost
     # ratio must not regress — a rising ratio means the spot subsystem
@@ -137,12 +152,14 @@ def run_quick() -> dict:
     # exactly, so the baseline is 0 and ANY inconsistency fails — and
     # (b) the worst component-level oracle-vs-fluid gap (deterministic:
     # fixed seeds, single scenario)
+    from repro.core.runspec import RunSpec
     from repro.obs import (check_ledger, ledger_from_chunked,
                            ledger_from_eventsim, ledger_parity)
     from repro.scenarios import run_scenario
     t0 = time.time()
     detail: dict = {}
-    run_scenario("diurnal", scale=0.25, telemetry=64, detail=detail)
+    run_scenario("diurnal", detail=detail,
+                 spec=RunSpec(scale=0.25, telemetry=64))
     led_o = ledger_from_eventsim(detail["oracle_result"])
     led_f = ledger_from_chunked(detail["fluid_summary"])
     metrics["obs_wall_s"] = round(time.time() - t0, 3)

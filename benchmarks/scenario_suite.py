@@ -11,16 +11,23 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import emit
-from repro.scenarios import list_scenarios, parity_report, run_scenario
+from repro.core.runspec import RunSpec
+from repro.scenarios import get_scenario, list_scenarios, parity_report, \
+    run_scenario
 
 
 def run(scale: float = 1.0):
     out = {}
     for name in list_scenarios():
+        # rate-based scenarios (fig9_planet) are fluid-only and carry a
+        # dedicated wall gate in benchmarks/fig9_planet.py; even shrunk
+        # they would dominate this suite's wall clock
+        if get_scenario(name).rate_trace:
+            continue
         t0 = time.time()
         # oracle joins only where feasible at this scale (runner decides);
         # shrunk runs (the --quick CI tier) get it on every scenario
-        rows = run_scenario(name, scale=scale)
+        rows = run_scenario(name, spec=RunSpec(scale=scale))
         elapsed = time.time() - t0
         gaps = parity_report(rows)
         for r in rows:

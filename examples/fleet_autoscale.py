@@ -20,7 +20,8 @@ from repro.core.simjax import JaxFleet, JaxPolicy, simulate, summarize
 from repro.core.trace import TraceConfig, synthesize
 from repro.fleet import (NodeFleet, NodeType, UtilizationFleetPolicy,
                          cost_from_sim)
-from repro.fleet.sweep import pareto_front, sweep
+from repro.fleet.sweep import sweep
+from repro.opt.frontier import pareto_front
 
 NODE = NodeType(name="worker-8", memory_mb=32_768.0, vcpus=8.0,
                 price_per_hour=0.39, provision_s=60.0)

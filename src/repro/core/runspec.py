@@ -1,0 +1,123 @@
+"""Unified run specification for the scenario / sweep / frontier entry points.
+
+Seven PRs of feature threading left ``run_scenario`` / ``evaluate_scenario``
+/ ``simulate_chunked`` / ``frontier`` each with a long tail of loose kwargs
+(scale, engines, billing, telemetry, tier, obs, ...) declared slightly
+differently at every layer.  ``RunSpec`` is the one frozen carrier for all
+of them — including the planet-scale knobs (``devices`` for the
+device-sharded scan, ``cluster`` for long-tail super-function bucketing) —
+so new knobs land in exactly one place.
+
+Old call sites keep working: every redesigned entry point accepts its
+legacy kwargs, forwards them into a ``RunSpec`` through
+:func:`resolve_spec`, and emits a ``DeprecationWarning`` once per entry
+point per process.  Passing ``spec=`` together with a legacy kwarg is an
+error (two sources of truth), and unknown kwargs now fail loudly instead
+of being swallowed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import warnings
+from typing import Any, Optional, Tuple
+
+__all__ = ["RunSpec", "resolve_spec", "warn_once"]
+
+#: entry points that have already emitted their deprecation warning this
+#: process (cleared by tests to re-arm the warning)
+_WARNED: set = set()
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """Everything a scenario run / sweep / frontier search needs beyond the
+    scenario identity itself.
+
+    scale        workload multiplier applied to the scenario's base trace
+    engines      which engines to run ("eventsim" oracle, "simjax" fluid)
+    billing      BillingProfile or registered profile name (None = ideal)
+    telemetry    in-scan telemetry slots (0 = off, bit-for-bit baseline)
+    tier         spot capacity tier (name or CapacityTier) to impose
+    obs          SpanRecorder capturing oracle lifecycle spans
+    force_oracle run the discrete-event oracle even where the scenario
+                 marks it infeasible at this scale
+    devices      shard the chunked scan over this many local devices
+                 (0 = legacy unsharded dispatch; single runs shard the
+                 function axis, fleet sweeps shard the point axis)
+    cluster      bucket functions whose mean request rate is below this
+                 many rps into weighted super-functions before the fluid
+                 replay (0 = off; exact in the fluid limit, drops the
+                 event-level oracle leg)
+    """
+
+    scale: float = 1.0
+    engines: Tuple[str, ...] = ("eventsim", "simjax")
+    billing: Any = None
+    telemetry: int = 0
+    tier: Any = None
+    obs: Any = None
+    force_oracle: bool = False
+    devices: int = 0
+    cluster: float = 0.0
+
+    def __post_init__(self):
+        engines = self.engines
+        if isinstance(engines, str):
+            engines = (engines,)
+        object.__setattr__(self, "engines", tuple(engines))
+        scale = float(self.scale)
+        if not (math.isfinite(scale) and scale > 0):
+            raise ValueError(f"RunSpec.scale must be finite and > 0, got {self.scale!r}")
+        object.__setattr__(self, "scale", scale)
+        telemetry = int(self.telemetry)
+        if telemetry < 0:
+            raise ValueError(f"RunSpec.telemetry must be >= 0, got {self.telemetry!r}")
+        object.__setattr__(self, "telemetry", telemetry)
+        devices = int(self.devices)
+        if devices < 0:
+            raise ValueError(f"RunSpec.devices must be >= 0, got {self.devices!r}")
+        object.__setattr__(self, "devices", devices)
+        cluster = float(self.cluster)
+        if not (math.isfinite(cluster) and cluster >= 0):
+            raise ValueError(f"RunSpec.cluster must be finite and >= 0, got {self.cluster!r}")
+        object.__setattr__(self, "cluster", cluster)
+        object.__setattr__(self, "force_oracle", bool(self.force_oracle))
+
+    def replace(self, **changes) -> "RunSpec":
+        return dataclasses.replace(self, **changes)
+
+
+def warn_once(key: str, message: str, stacklevel: int = 3) -> None:
+    """Emit ``message`` as a DeprecationWarning the first time ``key`` is
+    seen this process; later hits are silent (one nag per entry point, not
+    one per call in a sweep loop)."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+
+
+def resolve_spec(func: str, spec: Optional[RunSpec], legacy: dict) -> RunSpec:
+    """Merge an entry point's legacy loose kwargs into a RunSpec.
+
+    ``legacy`` maps RunSpec field name -> value-or-None, where None means
+    "caller did not pass it" (every legacy kwarg defaults to None in the
+    redesigned signatures).  Passing both ``spec=`` and a legacy kwarg is
+    ambiguous and raises; legacy-only calls warn once per ``func`` and are
+    forwarded verbatim.
+    """
+    given = {k: v for k, v in legacy.items() if v is not None}
+    if spec is not None:
+        if given:
+            raise TypeError(
+                f"{func}() got both spec= and legacy keyword(s) "
+                f"{sorted(given)}; pass everything through RunSpec")
+        if not isinstance(spec, RunSpec):
+            raise TypeError(f"{func}() spec= must be a RunSpec, got {type(spec).__name__}")
+        return spec
+    if given:
+        warn_once(func, f"{func}(): loose keyword(s) {sorted(given)} are "
+                        f"deprecated; pass spec=RunSpec(...) instead")
+    return RunSpec(**given)

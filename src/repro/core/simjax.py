@@ -63,6 +63,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.eventsim import SimConfig
 from repro.core.policy_api import (HYBRID_MIN_KA_S, PolicyObs,  # noqa: F401
@@ -164,7 +166,7 @@ def _make_step(arrivals, dur, mem, billed_w, lam0, gaps, gap_tab, pol, fleet,
                cpu_consts,
                static_nodes, *, family: str, dt: float, cold_ticks: int,
                wbuf: int, prov_ticks: int, has_fleet: bool,
-               telem: bool = False):
+               telem: bool = False, weights=None):
     """One simulated tick, shared by the full-history scan (`_sim_impl`) and
     the chunked-summary scan (`_chunk_impl`) so the policy math exists once.
 
@@ -181,10 +183,21 @@ def _make_step(arrivals, dur, mem, billed_w, lam0, gaps, gap_tab, pol, fleet,
     All of ``pol`` (a params PYTREE — scalar knobs or weight arrays) is
     traced, so the frontier engine can vmap over any leaf; only ``family``
     (the registry key) selects the compiled decide branch.
+
+    ``weights`` is the (F,) super-function multiplicity from the clustering
+    preprocessor (repro.scenarios.cluster): each function's PER-FUNCTION
+    dynamics are those of one representative member, while every
+    cross-function coupling and metric sum — node capacity pressure, CPU
+    churn, the scalar accumulators — is linear in per-function
+    contributions and therefore weighted by the member count.  This is
+    exact when members are identical (they evolve identically in the fluid
+    limit).  ``weights=None`` emits LITERALLY the unweighted ops, keeping
+    the bit-for-bit baseline.
     """
     f = dur.shape[0]
     fam = get_family(family)
     ccf = pol["cc"]
+    ws = (lambda v: v) if weights is None else (lambda v: v * weights)
     # the engine reads the spot axes off the policy params exactly like
     # ``cc``: a family that never declares them runs the original
     # single-tier fleet math (the spot carries stay identically zero)
@@ -348,9 +361,9 @@ def _make_step(arrivals, dur, mem, billed_w, lam0, gaps, gap_tab, pol, fleet,
                 evict_bill = jnp.zeros(())
 
             capacity_mb = (nodes + nodes_spot) * node_mem
-            committed = ((inst + starting.sum(axis=1)) * mem).sum()
+            committed = ws((inst + starting.sum(axis=1)) * mem).sum()
             free_mb = jnp.maximum(capacity_mb - committed, 0.0)
-            req_mb = (create * mem).sum()
+            req_mb = ws(create * mem).sum()
             scale = jnp.minimum(1.0, free_mb / jnp.maximum(req_mb, 1e-9))
             create = create * scale
             starting = starting.at[:, cold_ticks - 1].add(create)
@@ -365,7 +378,7 @@ def _make_step(arrivals, dur, mem, billed_w, lam0, gaps, gap_tab, pol, fleet,
 
             # reconcile: used memory plus unplaceable pressure -> desired
             # nodes, split across tiers at the policy's spot fraction
-            used = ((inst + starting.sum(axis=1)) * mem).sum()
+            used = ws((inst + starting.sum(axis=1)) * mem).sum()
             pressure = jnp.maximum(req_mb * (1.0 - scale), 0.0)
             needed = jnp.ceil((used + pressure) / (util_t * node_mem) - 1e-9)
             warm = jnp.ceil(warm_f * jnp.maximum(needed, 1.0) - 1e-9)
@@ -436,27 +449,29 @@ def _make_step(arrivals, dur, mem, billed_w, lam0, gaps, gap_tab, pol, fleet,
         (c_cw, c_cm, c_tw, c_tm, c_rq, c_idle, c_wfloor_node, c_mfloor) = cpu_consts
         # eviction-drained instances tear down gracefully during the notice
         # window, so they cost teardown CPU like a policy retire
-        teard = retire.sum() + killed.sum() if has_spot else retire.sum()
-        cpu_worker = create.sum() * c_cw + teard * c_tw \
-            + idle.sum() * c_idle * dt + c_wfloor_node * nodes_billed * dt
-        cpu_master = create.sum() * c_cm + teard * c_tm \
-            + dispatch.sum() * c_rq + c_mfloor * dt
-        useful = (completions * dur).sum()
+        teard = ws(retire).sum() + ws(killed).sum() if has_spot \
+            else ws(retire).sum()
+        create_sum = ws(create).sum()
+        cpu_worker = create_sum * c_cw + teard * c_tw \
+            + ws(idle).sum() * c_idle * dt + c_wfloor_node * nodes_billed * dt
+        cpu_master = create_sum * c_cm + teard * c_tm \
+            + ws(dispatch).sum() * c_rq + c_mfloor * dt
+        useful = ws(completions * dur).sum()
 
         # total allocated memory counts still-starting sandboxes, as the
         # oracle's per-tick sample does; the hybrid additionally holds each
         # new sandbox warm for its prewarm_s lead — a standing mass of
         # (creations/s x prewarm_s) pre-warmed instances in steady state
-        prewarm_mass = (create * mem).sum() * prewarm_hide / dt
+        prewarm_mass = ws(create * mem).sum() * prewarm_hide / dt
         # billed GB-s this tick: completions weighted by each function's
         # EXPECTED billed duration x configured GB (repro.fleet.billing) —
         # the fluid twin of the oracle's exact per-record rounding
-        ys = (delay, arr, arr_delayed, inst.sum(),
-              ((inst + pending) * mem).sum() + prewarm_mass,
-              (busy_inst * mem).sum(),
-              create.sum(), cpu_worker, cpu_master, useful, nodes_billed,
-              completions.sum(), spot_billed,
-              (completions * billed_w).sum())
+        ys = (delay, arr, arr_delayed, ws(inst).sum(),
+              ws((inst + pending) * mem).sum() + prewarm_mass,
+              ws(busy_inst * mem).sum(),
+              create_sum, cpu_worker, cpu_master, useful, nodes_billed,
+              ws(completions).sum(), spot_billed,
+              ws(completions * billed_w).sum())
         if telem:
             # in-scan telemetry (repro.obs): ys[14] is the per-tick series
             # vector (TELEM_SERIES order), ys[15] the attribution vector
@@ -468,23 +483,23 @@ def _make_step(arrivals, dur, mem, billed_w, lam0, gaps, gap_tab, pol, fleet,
             # residual (master_control) — the exact-sum the attribution
             # ledger checks.
             if has_spot:
-                ev_create = (evict_rec * scale).sum()
-                ev_kill = killed.sum()
+                ev_create = ws(evict_rec * scale).sum()
+                ev_kill = ws(killed).sum()
             else:
                 ev_create = jnp.zeros(())
                 ev_kill = jnp.zeros(())
             # create-side CPU only: graceful-teardown CPU stays in the
             # master_control residual on BOTH engines (the oracle does the
             # same — see eventsim._teardown)
-            cpu_creation = (create.sum() - ev_create) * (c_cw + c_cm)
+            cpu_creation = (create_sum - ev_create) * (c_cw + c_cm)
             cpu_evict = ev_create * (c_cw + c_cm)
-            mem_pipe = (pending * mem).sum() + prewarm_mass
+            mem_pipe = ws(pending * mem).sum() + prewarm_mass
             tser = jnp.stack([
-                inst.sum(), busy_inst.sum(), queue.sum(), create.sum(),
-                ev_kill, ys[4], ys[5], mem_pipe, nodes_billed, spot_billed,
-                cpu_worker, cpu_master])
+                ws(inst).sum(), ws(busy_inst).sum(), ws(queue).sum(),
+                create_sum, ev_kill, ys[4], ys[5], mem_pipe, nodes_billed,
+                spot_billed, cpu_worker, cpu_master])
             tattr = jnp.stack([cpu_creation, cpu_evict,
-                               idle.sum() * c_idle * dt, mem_pipe,
+                               ws(idle).sum() * c_idle * dt, mem_pipe,
                                ev_kill, ev_create])
             ys = ys + (tser, tattr)
         return (inst, in_service, queue, starting, win_, wcur + 1,
@@ -692,7 +707,7 @@ _DUR_FLOOR, _DUR_CAP = 0.02, 30.0
 
 def _slowdown_geomean(hist, arrtot, edges, dur_median, dur_sigma, warm,
                       min_requests: int = 5, q: float = 0.99,
-                      iid_tail: bool = True) -> float:
+                      iid_tail: bool = True, fn_weights=None) -> float:
     """Geomean over functions of the q-quantile of per-request slowdown.
 
     The oracle computes p99 of (wait + service) / dur_i per REQUEST, where
@@ -704,8 +719,23 @@ def _slowdown_geomean(hist, arrtot, edges, dur_median, dur_sigma, warm,
     arrival-weighted delay histogram and D an independent clipped
     lognormal:  P(S <= s) = sum_b p_b * P(D >= (w_b + warm)/(s - 1)),
     solved for the q-quantile by bisection, vectorized over functions.
-    """
-    keep = np.asarray(arrtot) >= min_requests
+
+    ``fn_weights`` is the super-function multiplicity (clustered traces):
+    the geomean weighs each representative by its member count, and the
+    finite-sample correction uses the PER-MEMBER request count (arrtot
+    holds the weighted bucket total) — matching what each member would
+    report unclustered.  Planet-sized histograms (>= ~4M cells) route
+    through the jitted float32 bisection (`_slowdown_geomean_jax`); the
+    2000-function fig9 replay and below keep the float64 numpy path
+    bit-for-bit."""
+    if np.asarray(hist).size >= _JAX_SOLVER_MIN_CELLS:
+        return _slowdown_geomean_jax(hist, arrtot, edges, dur_median,
+                                     dur_sigma, warm, min_requests, q,
+                                     iid_tail, fn_weights)
+    n_eff = np.asarray(arrtot, np.float64)
+    if fn_weights is not None:
+        n_eff = n_eff / np.maximum(np.asarray(fn_weights, np.float64), 1e-12)
+    keep = n_eff >= min_requests
     if not keep.any():
         return float("nan")
     h = np.asarray(hist)[keep]
@@ -724,7 +754,7 @@ def _slowdown_geomean(hist, arrtot, edges, dur_median, dur_sigma, warm,
     # independently warm or cold), NOT for async backlog episodes, where
     # one burst delays a correlated block of requests and the empirical
     # percentile does reach the population tail (iid_tail=False -> raw q).
-    n = np.asarray(arrtot)[keep]
+    n = n_eff[keep]
     q_eff = (q * (n - 1.0) + 1.0) / (n + 1.0) if iid_tail \
         else np.full(len(n), q)
     lo = np.full(h.shape[0], 1.0)
@@ -739,7 +769,82 @@ def _slowdown_geomean(hist, arrtot, edges, dur_median, dur_sigma, warm,
         ok = (p * sf).sum(axis=1) >= q_eff
         hi = np.where(ok, mid, hi)
         lo = np.where(ok, lo, mid)
-    return float(np.exp(np.mean(np.log(np.maximum(0.5 * (lo + hi), 1.0)))))
+    logs = np.log(np.maximum(0.5 * (lo + hi), 1.0))
+    if fn_weights is None:
+        return float(np.exp(np.mean(logs)))
+    return float(np.exp(np.average(
+        logs, weights=np.asarray(fn_weights, np.float64)[keep])))
+
+
+#: histogram cell count at which the slowdown bisection switches from the
+#: float64 numpy solver to the jitted float32 one — chosen above the
+#: 2000-function fig9 replay (2000 x 256 = 512k cells stays numpy, keeping
+#: checked-in baselines bitwise) and below fig9_planet (100k x 256 = 25.6M)
+_JAX_SOLVER_MIN_CELLS = 1 << 22
+
+
+def _phi_jax(z):
+    """float32 jnp port of `_phi` (A&S 7.1.26 normal CDF)."""
+    t = 1.0 / (1.0 + 0.3275911 * jnp.abs(z) / np.sqrt(2.0).astype(np.float32))
+    poly = t * (0.254829592 + t * (-0.284496736 + t * (1.421413741
+                + t * (-1.453152027 + t * 1.061405429))))
+    erf = 1.0 - poly * jnp.exp(-0.5 * z * z)
+    return 0.5 * (1.0 + jnp.sign(z) * erf)
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def _bisect_slowdown(p, wrow, q_eff, log_med, sig, hi0, iters=60):
+    lo = jnp.ones(p.shape[0], jnp.float32)
+    hi = jnp.full(p.shape[0], 1.0, jnp.float32) * hi0
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        x = wrow[None, :] / jnp.maximum(mid - 1.0, 1e-12)[:, None]
+        z = (jnp.log(jnp.maximum(x, 1e-30)) - log_med) / sig
+        sf = jnp.where(x <= _DUR_FLOOR, 1.0,
+                       jnp.where(x >= _DUR_CAP, 0.0, 1.0 - _phi_jax(z)))
+        ok = (p * sf).sum(axis=1) >= q_eff
+        return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+def _slowdown_geomean_jax(hist, arrtot, edges, dur_median, dur_sigma, warm,
+                          min_requests, q, iid_tail, fn_weights) -> float:
+    """Planet-scale twin of the numpy bisection: same mixture, float32 on
+    device, one fused fori_loop — 100k x 256 histograms solve in ~1 s where
+    the 60-pass float64 numpy loop takes tens of seconds.  The float32
+    interval bottoms out around 1e-7 relative, far below the ~7% histogram
+    bin width that dominates the estimator's resolution."""
+    n_eff = np.asarray(arrtot, np.float64)
+    w_np = None if fn_weights is None else np.asarray(fn_weights, np.float64)
+    if w_np is not None:
+        n_eff = n_eff / np.maximum(w_np, 1e-12)
+    keep = n_eff >= min_requests
+    if not keep.any():
+        return float("nan")
+    h = np.asarray(hist, np.float32)[keep]
+    p = jnp.asarray(h) / jnp.maximum(
+        jnp.asarray(h).sum(axis=1, keepdims=True), 1e-30)
+    wrow = jnp.asarray(_bin_reps(edges) + warm, jnp.float32)
+    log_med = jnp.asarray(
+        np.log(np.maximum(np.asarray(dur_median)[keep], 1e-9)),
+        jnp.float32)[:, None]
+    sig = jnp.asarray(np.maximum(np.asarray(dur_sigma)[keep], 1e-6),
+                      jnp.float32)[:, None]
+    n = n_eff[keep]
+    q_np = (q * (n - 1.0) + 1.0) / (n + 1.0) if iid_tail \
+        else np.full(len(n), q)
+    hi0 = np.float32(1.0 + (float(_bin_reps(edges)[-1]) + warm)
+                     / _DUR_FLOOR + 1.0)
+    s = np.asarray(_bisect_slowdown(p, wrow, jnp.asarray(q_np, jnp.float32),
+                                    log_med, sig, hi0), np.float64)
+    logs = np.log(np.maximum(s, 1.0))
+    if w_np is None:
+        return float(np.exp(np.mean(logs)))
+    return float(np.exp(np.average(logs, weights=w_np[keep])))
 
 
 def _chunk_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem, billed_w,
@@ -747,7 +852,7 @@ def _chunk_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem, billed_w,
                 cpu_consts, static_nodes, edges, tick0, *, warm_tick: int,
                 total_ticks: int, family: str, dt: float,
                 cold_ticks: int, wbuf: int, prov_ticks: int, has_fleet: bool,
-                telem_slots: int = 0):
+                telem_slots: int = 0, weights=None):
     """Advance the simulation by one time chunk; return the carried state and
     this chunk's summary-statistic partials (host accumulates across chunks).
     Ticks at global index < warm_tick (warmup) or >= total_ticks (padding of
@@ -766,12 +871,16 @@ def _chunk_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem, billed_w,
                       pol, fleet,
                       cpu_consts, static_nodes, family=family, dt=dt,
                       cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
-                      has_fleet=has_fleet, telem=telem)
+                      has_fleet=has_fleet, telem=telem, weights=weights)
 
     def acc_step(carry, i):
         st, hist, arrtot, sums, n = carry[:5]
         st, ys = step(st, i)
         delay, arr, arr_delayed = ys[0], ys[1], ys[2]
+        if weights is not None:
+            # super-function multiplicity: the histogram counts REQUESTS,
+            # so the representative's arrivals weigh in once per member
+            arr, arr_delayed = arr * weights, arr_delayed * weights
         g = tick0 + i
         m = ((g >= warm_tick) & (g < total_ticks)).astype(jnp.float32)
         b = jnp.clip(jnp.searchsorted(edges, delay, side="right"), 0, nbins - 1)
@@ -799,10 +908,10 @@ def _chunk_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem, billed_w,
 
 
 def _acc_summary(hist, arrtot, sums, n, edges, dur_median, dur_sigma, warm,
-                 dt, iid_tail: bool = True) -> dict:
+                 dt, iid_tail: bool = True, fn_weights=None) -> dict:
     """Build the ``summarize``-compatible metric row from chunk partials."""
     geo = _slowdown_geomean(hist, arrtot, edges, dur_median, dur_sigma, warm,
-                            iid_tail=iid_tail)
+                            iid_tail=iid_tail, fn_weights=fn_weights)
     s = dict(zip(_ACC_NAMES, sums))
     n = max(float(n), 1e-9)
     window = n * dt
@@ -835,7 +944,7 @@ def _chunk_batch_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem,
                       cpu_consts, static_nodes, edges, tick0, *,
                       warm_tick: int, total_ticks: int, family: str, dt: float,
                       cold_ticks: int, wbuf: int, prov_ticks: int,
-                      has_fleet: bool, telem_slots: int = 0):
+                      has_fleet: bool, telem_slots: int = 0, weights=None):
     """One time chunk for a whole batch of parameter points (vmap over the
     point axis of state/lam0/pols/fleets; ``pols`` is a STACKED params
     pytree — every leaf, scalar knob or weight array, carries a leading
@@ -848,7 +957,7 @@ def _chunk_batch_impl(state, arr_chunk, lam0, gaps, gap_tab, dur, mem,
                            total_ticks=total_ticks, family=family, dt=dt,
                            cold_ticks=cold_ticks, wbuf=wbuf,
                            prov_ticks=prov_ticks, has_fleet=has_fleet,
-                           telem_slots=telem_slots)
+                           telem_slots=telem_slots, weights=weights)
     return jax.vmap(one)(state, lam0, pols, fleets)
 
 
@@ -862,6 +971,92 @@ _chunk_batch = partial(jax.jit, static_argnames=(
     donate_argnums=(0,))(_chunk_batch_impl)
 
 
+# ---------------------------------------------------------------------------
+# device-sharded dispatch (planet scale)
+# ---------------------------------------------------------------------------
+#
+# The function axis is embarrassingly parallel: per-function state never
+# couples across functions EXCEPT through a handful of scalar reductions
+# (node capacity pressure, CPU floors, the metric sums).  ``shard_map``
+# splits every per-function input and carry leaf over a 1-D "functions"
+# mesh, each device runs the full chunk scan on its function slice with
+# per-function histograms device-local, and ONE psum per chunk restores the
+# global scalar sums.  The replicated floor terms (master CPU floor, the
+# static node count) are pre-divided by the device count so the psum of the
+# local sums reconstructs them exactly — division by 1.0 is a bitwise
+# identity and the 1-device mesh is bit-for-bit the unsharded scan (tested),
+# while powers of two divide exactly.
+#
+# The fleet layer reduces over functions INSIDE every tick (capacity
+# scaling feeds back into per-function creates), which would need a psum
+# per tick, not per chunk — so fleet runs shard the POINT axis instead
+# (``_chunked_summaries`` places the vmapped batch over a "points" mesh and
+# lets GSPMD partition the existing ``_chunk_batch``), which also batches
+# frontier candidates as grid-points x devices in one compiled dispatch.
+
+def _largest_divisor(n: int, cap: int) -> int:
+    """Largest d <= cap with n % d == 0 (device_put refuses uneven shards)."""
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _chunk_batch_fnshard_impl(state, arr_chunk, lam0, gaps, gap_tab, dur,
+                              mem, billed_w, pols, fleets, edges, tick0,
+                              weights, *, mesh, cpu_consts, static_nodes,
+                              warm_tick: int, total_ticks: int, family: str,
+                              dt: float, cold_ticks: int, wbuf: int,
+                              prov_ticks: int, telem_slots: int = 0):
+    """Function-sharded twin of ``_chunk_batch_impl`` (no-fleet only; the
+    caller pads F to a multiple of the mesh size with inert zero-rate
+    functions).  Per-function outputs (histogram, arrival totals) stay
+    device-local; the scalar sums and telemetry vectors psum once per chunk."""
+    ndev = mesh.shape["functions"]
+    # replicated per-tick floors: each shard carries 1/ndev of the master
+    # CPU floor and the static node count so the cross-device sum of local
+    # accumulators reconstructs the global ones (exact for ndev a power of
+    # two; ndev=1 divides by 1.0, a bitwise identity).  The worker floor
+    # multiplies the already-divided node count and needs no split.
+    consts_local = cpu_consts[:-1] + (cpu_consts[-1] / ndev,)
+    nodes_local = static_nodes / ndev
+    telem = telem_slots > 0
+
+    def body(st, a, l0, g, gt, du, me, bw, pl, fl, ed, t0, wt):
+        st, out = _chunk_batch_impl(
+            st, a, l0, g, gt, du, me, bw, pl, fl, consts_local, nodes_local,
+            ed, t0, warm_tick=warm_tick, total_ticks=total_ticks,
+            family=family, dt=dt, cold_ticks=cold_ticks, wbuf=wbuf,
+            prov_ticks=prov_ticks, has_fleet=False, telem_slots=telem_slots,
+            weights=wt)
+        red = (out[0], out[1], jax.lax.psum(out[2], "functions"), out[3])
+        if telem:
+            red = red + (jax.lax.psum(out[4], "functions"), out[5],
+                         jax.lax.psum(out[6], "functions"))
+        return st, red
+
+    fP = P(None, "functions")      # leading point axis, functions sharded
+    rep = P()
+    st_specs = (fP, fP, fP, fP, fP, rep, rep, rep, rep, rep, rep, fP, fP)
+    f1 = P("functions")
+    w_spec = rep if weights is None else f1
+    in_specs = (st_specs, fP, fP, f1, f1, f1, f1, f1, rep, rep, rep, rep,
+                w_spec)
+    out_stats = (fP, fP, rep, rep)
+    if telem:
+        out_stats = out_stats + (rep, rep, rep)
+    sharded = shard_map(body, mesh=mesh, in_specs=in_specs,
+                        out_specs=(st_specs, out_stats), check_rep=False)
+    return sharded(state, arr_chunk, lam0, gaps, gap_tab, dur, mem, billed_w,
+                   pols, fleets, edges, tick0, weights)
+
+
+_chunk_batch_fnshard = partial(jax.jit, static_argnames=(
+    "mesh", "cpu_consts", "static_nodes", "warm_tick", "total_ticks",
+    "family", "dt", "cold_ticks", "wbuf", "prov_ticks", "telem_slots"),
+    donate_argnums=(0,))(_chunk_batch_fnshard_impl)
+
+
 def stack_params(param_trees: "list[dict]") -> dict:
     """Stack per-point params pytrees into one batched pytree: every leaf
     (scalar knob or weight array) gains a leading point axis — the batch
@@ -871,36 +1066,82 @@ def stack_params(param_trees: "list[dict]") -> dict:
                                   for lf in leaves]), *param_trees)
 
 
-def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: dict,
+def _chunked_summaries(trace, policy: JaxPolicy, pols: dict,
                        fleets: np.ndarray, *, sim: SimConfig, dt: float,
                        num_nodes: float, provision_s: float, has_fleet: bool,
                        chunk_ticks: int, warmup_frac: float,
                        nbins: int, telemetry: int = 0,
-                       billing=None) -> list[dict]:
+                       billing=None, devices: int = 0) -> list[dict]:
     """Run a batch of policy/fleet parameter points through the chunked scan
     (vmapped over points, host loop over time chunks, carry donated) and
     return one ``summarize``-style dict per point.  ``pols`` is a stacked
     params pytree (see ``stack_params``); ``policy`` supplies the family
-    and the structural knobs."""
-    arr_np = rate_matrix(trace, dt)
+    and the structural knobs.
+
+    ``devices > 0`` shards the dispatch over a 1-D mesh of that many local
+    devices (repro.distributed.sharding.device_mesh).  No-fleet runs shard
+    the FUNCTION axis via ``shard_map`` (F is padded to a mesh multiple
+    with inert zero-rate functions, trimmed from the results); fleet runs
+    couple functions through per-tick capacity reductions, so they shard
+    the POINT axis instead — the largest divisor of the point count that
+    fits the device budget, falling back to the unsharded dispatch when the
+    batch cannot split.  ``devices=0`` is the legacy single-device path."""
+    arr_np = np.asarray(rate_matrix(trace, dt))
     n_ticks, f = arr_np.shape
     dur, mem, cold_ticks, wbuf, cpu_consts = _prep_static(trace, policy, sim, dt)
     billed_w = _billed_weights(trace, billing)
     dur_median = np.asarray(trace.profile.dur_median)
     dur_sigma = np.asarray(trace.profile.dur_sigma)
+    weights_np = getattr(trace, "weights", None)
     prov_ticks = max(1, int(round(provision_s / dt)))
     edges = _delay_edges(nbins)
     warm_tick = int(n_ticks * warmup_frac)
     chunk_ticks = max(1, min(chunk_ticks, n_ticks))
     n_points = fleets.shape[0]
 
-    lam_eff = jnp.broadcast_to(jnp.asarray(arr_np.mean(axis=0) / dt,
-                               jnp.float32), (n_points, f))
+    lam_np = arr_np.mean(axis=0) / dt
     gq, alive_tab, tail_tab = gap_statistics(trace)
+
+    devices = int(devices)
+    fn_mesh = pt_sharding = None
+    f_orig = f
+    if devices > 0 and not has_fleet:
+        from repro.distributed.sharding import device_mesh
+        fn_mesh = device_mesh(devices, "functions")
+        pad = (-f) % devices
+        if pad:
+            # inert padding functions: zero arrivals -> zero instances,
+            # creations, memory and histogram mass (trimmed below anyway)
+            arr_np = np.concatenate(
+                [arr_np, np.zeros((n_ticks, pad), arr_np.dtype)], axis=1)
+            dur = jnp.concatenate([dur, jnp.ones(pad, dur.dtype)])
+            mem = jnp.concatenate([mem, jnp.zeros(pad, mem.dtype)])
+            billed_w = jnp.concatenate([billed_w,
+                                        jnp.zeros(pad, billed_w.dtype)])
+            lam_np = np.concatenate([lam_np, np.zeros(pad)])
+            gq = np.concatenate([gq, np.full(pad, trace.duration_s)])
+            # never-observed-gap convention: alive = ka, tail = 1
+            from repro.core.trace import KA_GRID
+            alive_tab = np.concatenate(
+                [alive_tab, np.broadcast_to(KA_GRID, (pad, len(KA_GRID)))])
+            tail_tab = np.concatenate([tail_tab, np.ones((pad, len(KA_GRID)))])
+            if weights_np is not None:
+                weights_np = np.concatenate([weights_np, np.zeros(pad)])
+            f += pad
+    elif devices > 0 and has_fleet:
+        d = _largest_divisor(n_points, devices)
+        if d > 1:
+            from repro.distributed.sharding import device_mesh
+            pt_sharding = NamedSharding(device_mesh(d, "points"), P("points"))
+
+    lam_eff = jnp.broadcast_to(jnp.asarray(lam_np, jnp.float32),
+                               (n_points, f))
     gaps = jnp.asarray(gq, jnp.float32)
     gap_tab = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32),
                            (alive_tab, tail_tab))
     edges_j = jnp.asarray(edges)
+    weights_j = None if weights_np is None \
+        else jnp.asarray(weights_np, jnp.float32)
 
     def init_point(fl):
         init_nodes = fl[0] if has_fleet else jnp.asarray(float(num_nodes))
@@ -909,6 +1150,14 @@ def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: dict,
     state = jax.vmap(init_point)(jnp.asarray(fleets, jnp.float32))
     pols_j = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), pols)
     fleets_j = jnp.asarray(fleets, jnp.float32)
+    if pt_sharding is not None:
+        # point-axis sharding: place the vmapped batch over the mesh and
+        # let GSPMD partition the existing compiled dispatch — frontier
+        # candidates run as grid-points x devices in one call
+        state = jax.device_put(state, pt_sharding)
+        lam_eff = jax.device_put(lam_eff, pt_sharding)
+        pols_j = jax.device_put(pols_j, pt_sharding)
+        fleets_j = jax.device_put(fleets_j, pt_sharding)
 
     hist = np.zeros((n_points, f, nbins))
     arrtot = np.zeros((n_points, f))
@@ -923,14 +1172,25 @@ def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: dict,
         if a.shape[0] < chunk_ticks:        # pad the tail chunk; the padded
             a = np.concatenate(             # ticks are masked out of the stats
                 [a, np.zeros((chunk_ticks - a.shape[0], f), a.dtype)])
-        state, out = _chunk_batch(
-            state, jnp.asarray(a), lam_eff, gaps, gap_tab, dur, mem,
-            billed_w, pols_j, fleets_j,
-            cpu_consts, float(num_nodes), edges_j,
-            jnp.asarray(t0, jnp.int32), warm_tick=warm_tick,
-            total_ticks=n_ticks, family=policy.family, dt=dt,
-            cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
-            has_fleet=has_fleet, telem_slots=telemetry)
+        if fn_mesh is not None:
+            state, out = _chunk_batch_fnshard(
+                state, jnp.asarray(a), lam_eff, gaps, gap_tab, dur, mem,
+                billed_w, pols_j, fleets_j, edges_j,
+                jnp.asarray(t0, jnp.int32), weights_j, mesh=fn_mesh,
+                cpu_consts=cpu_consts, static_nodes=float(num_nodes),
+                warm_tick=warm_tick, total_ticks=n_ticks,
+                family=policy.family, dt=dt, cold_ticks=cold_ticks,
+                wbuf=wbuf, prov_ticks=prov_ticks, telem_slots=telemetry)
+        else:
+            state, out = _chunk_batch(
+                state, jnp.asarray(a), lam_eff, gaps, gap_tab, dur, mem,
+                billed_w, pols_j, fleets_j,
+                cpu_consts, float(num_nodes), edges_j,
+                jnp.asarray(t0, jnp.int32), warm_tick=warm_tick,
+                total_ticks=n_ticks, family=policy.family, dt=dt,
+                cold_ticks=cold_ticks, wbuf=wbuf, prov_ticks=prov_ticks,
+                has_fleet=has_fleet, telem_slots=telemetry,
+                weights=weights_j)
         hist += np.asarray(out[0])
         arrtot += np.asarray(out[1])
         sums += np.asarray(out[2])
@@ -940,8 +1200,10 @@ def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: dict,
             tcnt += np.asarray(out[5])
             tattr += np.asarray(out[6])
     iid = get_family(policy.family).synchronous_tail
-    rows = [_acc_summary(hist[i], arrtot[i], sums[i], n[i], edges, dur_median,
-                         dur_sigma, sim.warm_latency_s, dt, iid_tail=iid)
+    fw = None if weights_np is None else np.asarray(weights_np)[:f_orig]
+    rows = [_acc_summary(hist[i, :f_orig], arrtot[i, :f_orig], sums[i], n[i],
+                         edges, dur_median, dur_sigma, sim.warm_latency_s,
+                         dt, iid_tail=iid, fn_weights=fw)
             for i in range(n_points)]
     if telemetry:
         for i, row in enumerate(rows):
@@ -950,15 +1212,24 @@ def _chunked_summaries(trace: Trace, policy: JaxPolicy, pols: dict,
     return rows
 
 
-def simulate_chunked(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
+def simulate_chunked(trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
                      dt: float = 1.0, num_nodes: int = 8,
                      fleet: Optional[JaxFleet] = None, chunk_ticks: int = 512,
                      warmup_frac: float = 0.5, nbins: int = 256,
-                     telemetry: int = 0, billing=None) -> dict:
+                     telemetry=None, billing=None, *, spec=None) -> dict:
     """Memory-bounded twin of ``summarize(simulate(...))``: same step math,
     same metric keys, but summary statistics are accumulated inside a
     segmented scan so arbitrarily long / wide traces (the 2000-function
-    Fig. 9 replay, and beyond) never materialize (T, F) histories.
+    Fig. 9 replay, fig9_planet's 100k functions, and beyond) never
+    materialize (T, F) histories.  ``trace`` may be an event-level
+    ``Trace`` or a pre-binned ``RateTrace`` (optionally clustered into
+    weighted super-functions).
+
+    ``spec`` (a ``repro.core.runspec.RunSpec``) carries the run knobs this
+    engine consumes: ``telemetry`` slots, the ``billing`` profile, and
+    ``devices`` for the sharded dispatch (function axis here; see
+    ``_chunked_summaries``).  The loose ``telemetry=`` / ``billing=``
+    kwargs keep working through the once-per-process deprecation shim.
 
     ``telemetry=S`` (static, default off) rides S downsampled per-tick
     series slots plus attribution sums in the scan carry — constant memory —
@@ -971,6 +1242,9 @@ def simulate_chunked(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig
     ``ideal``) selects the billed-duration expectation the scan's
     ``billed_gb_s`` accumulates — the ONLY knob it touches; every other
     metric is independent of the profile."""
+    from repro.core.runspec import resolve_spec
+    spec = resolve_spec("repro.core.simjax.simulate_chunked", spec,
+                        {"telemetry": telemetry, "billing": billing})
     has_fleet = fleet is not None
     pols = stack_params([policy.params()])
     fleets = np.asarray([fleet.params() if has_fleet
@@ -979,5 +1253,5 @@ def simulate_chunked(trace: Trace, policy: JaxPolicy, sim: SimConfig = SimConfig
         trace, policy, pols, fleets, sim=sim, dt=dt, num_nodes=num_nodes,
         provision_s=fleet.provision_s if has_fleet else 0.0,
         has_fleet=has_fleet, chunk_ticks=chunk_ticks,
-        warmup_frac=warmup_frac, nbins=nbins, telemetry=telemetry,
-        billing=billing)[0]
+        warmup_frac=warmup_frac, nbins=nbins, telemetry=spec.telemetry,
+        billing=spec.billing, devices=spec.devices)[0]

@@ -23,6 +23,7 @@ import threading
 from typing import Any, Optional, Sequence, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # logical axis -> physical mesh axis (or tuple of axes)
@@ -52,6 +53,12 @@ LOGICAL_RULES: dict[str, Union[str, tuple[str, ...], None]] = {
     "patches": None,
     "opt_state": ("data",),             # extra ZeRO-1 axis for optimizer moments
     "fsdp": ("data",),                  # FSDP/ZeRO-3 parameter axis
+    # simulator axes (repro.core.simjax): the chunked scan shard_maps its
+    # per-tick step over a 1-D "functions" mesh (per-function state and
+    # histograms device-local, one psum at chunk boundaries), and the
+    # frontier batches grid points over a 1-D "points" mesh
+    "functions": "functions",
+    "points": "points",
 }
 
 _state = threading.local()
@@ -117,6 +124,24 @@ def sharding_for(logical: Sequence[Optional[str]], mesh: Optional[Mesh] = None) 
     if mesh is None:
         return None
     return NamedSharding(mesh, logical_to_spec(logical, mesh))
+
+
+def device_mesh(devices: int, axis: str) -> Mesh:
+    """1-D mesh over the first ``devices`` local devices, named ``axis``.
+
+    The simulator's sharded dispatch uses this for its "functions" /
+    "points" meshes; on CPU hosts pair it with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    avail = jax.devices()
+    if devices < 1:
+        raise ValueError(f"device_mesh needs >= 1 device, got {devices}")
+    if devices > len(avail):
+        raise ValueError(
+            f"device_mesh({devices}, {axis!r}): only {len(avail)} local "
+            f"device(s) visible — on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={devices}")
+    return Mesh(np.asarray(avail[:devices]), (axis,))
 
 
 def sanitize_spec(spec: P, shape: Sequence[int], mesh: Mesh) -> P:

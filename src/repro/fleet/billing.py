@@ -257,6 +257,10 @@ def apply_throttle(trace, profile: BillingProfile):
     prof = dataclasses.replace(
         trace.profile,
         dur_median=np.minimum(trace.profile.dur_median * f, _DUR_CAP))
+    if not hasattr(trace, "dur"):
+        # rate-based trace (repro.core.trace.RateTrace): no per-request
+        # events, the duration model IS the workload's duration state
+        return dataclasses.replace(trace, profile=prof)
     return dataclasses.replace(
         trace, dur=np.minimum(trace.dur * f[trace.fn], _DUR_CAP),
         profile=prof)

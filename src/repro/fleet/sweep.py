@@ -23,22 +23,41 @@ in ``repro.opt`` (``opt.search.evaluate_points`` generalizes it so EVERY
 policy axis a registered ``repro.core.policy_api`` family declares
 sweepable — keepalive, utilization target, container concurrency, pre-warm
 lead, and whatever future families declare — is a traced batch axis, which
-is what the frontier engine sweeps).  ``grid_points``/``pareto_front`` are
-re-exported from their canonical homes there.
+is what the frontier engine sweeps).  The old ``grid_points`` /
+``pareto_front`` / ``SWEEPABLE`` re-exports still resolve here, with a
+once-per-name DeprecationWarning pointing at their canonical homes.
 """
 
 from __future__ import annotations
 
+import importlib
 from typing import Optional, Sequence, Union
 
 from repro.core.eventsim import SimConfig
+from repro.core.runspec import warn_once
 from repro.core.simjax import JaxFleet, JaxPolicy
 from repro.core.trace import Trace
 from repro.fleet.billing import BillingProfile
 from repro.fleet.nodes import NodeType
-from repro.opt.frontier import pareto_front  # noqa: F401  (canonical home)
 from repro.opt.search import evaluate_points
-from repro.opt.space import SWEEPABLE, grid_points  # noqa: F401
+
+# names that used to be re-exported here verbatim; resolve them lazily
+# (PEP 562) through ONE deprecation path instead of three silent aliases
+_LEGACY = {
+    "pareto_front": ("repro.opt.frontier", "pareto_front"),
+    "grid_points": ("repro.opt.space", "grid_points"),
+    "SWEEPABLE": ("repro.opt.space", "SWEEPABLE"),
+}
+
+
+def __getattr__(name: str):
+    if name in _LEGACY:
+        mod, attr = _LEGACY[name]
+        warn_once(f"repro.fleet.sweep.{name}",
+                  f"repro.fleet.sweep.{name} is deprecated; import "
+                  f"{attr} from {mod} instead")
+        return getattr(importlib.import_module(mod), attr)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def sweep(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
@@ -46,10 +65,13 @@ def sweep(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
           sim: SimConfig = SimConfig(), dt: float = 1.0,
           node_type: Optional[NodeType] = None,
           billing: Union[str, BillingProfile, None] = None,
-          warmup_frac: float = 0.5, chunk_ticks: int = 512) -> list[dict]:
+          warmup_frac: float = 0.5, chunk_ticks: int = 512,
+          devices: int = 0) -> list[dict]:
     """Run every parameter point through one vmapped chunked scan; return one
     row per point: {params..., metrics..., cost fields...}."""
-    pts = list(points) if points is not None else grid_points(grid or {})
+    from repro.opt.space import grid_points as _grid_points
+    pts = list(points) if points is not None else _grid_points(grid or {})
     return evaluate_points(trace, policy, fleet, pts, sim=sim, dt=dt,
                            node_type=node_type, billing=billing,
-                           warmup_frac=warmup_frac, chunk_ticks=chunk_ticks)
+                           warmup_frac=warmup_frac, chunk_ticks=chunk_ticks,
+                           devices=devices)

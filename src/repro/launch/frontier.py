@@ -37,6 +37,8 @@ import os
 import sys
 
 from repro.fleet.billing import get_profile, list_profiles
+from repro.launch.flags import (add_run_flags, unknown_scenarios,
+                                validate_run_flags)
 from repro.opt.frontier import frontier_slack
 from repro.opt.search import frontier_search, oracle_spot_check
 from repro.opt.space import SWEEPABLE
@@ -67,15 +69,14 @@ def _write_csv(path: str, rows: list[dict]) -> None:
                         for k, v in r.items() if k in cols})
 
 
-def main(argv=None) -> int:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="repro.launch.frontier",
         description="Cross-scenario multi-objective autoscaling-parameter "
                     "search (coarse+refine, Pareto + robust fronts).")
     ap.add_argument("--scenario", action="append", default=None,
-                    help="scenario name (repeatable; default: all registered)")
-    ap.add_argument("--scale", type=float, default=1.0,
-                    help="refine-stage trace scale (default 1.0)")
+                    help="scenario name (repeatable; default: every "
+                         "registered event-level scenario)")
     ap.add_argument("--coarse-frac", type=float, default=0.1,
                     help="coarse stage runs at this fraction of --scale")
     ap.add_argument("--eps", type=float, default=0.15,
@@ -93,20 +94,19 @@ def main(argv=None) -> int:
     ap.add_argument("--learn-scale", type=float, default=None,
                     help="training trace scale for --learned "
                          "(default: the coarse scale)")
-    ap.add_argument("--billing", default=None, metavar="PROFILE",
-                    help="bill every swept row (and the learned policy) "
-                         "through this billing profile; see --list for "
-                         "registered profiles")
     ap.add_argument("--out-dir", default="frontier_out",
                     help="where CSV/JSON land (default frontier_out/)")
-    ap.add_argument("--telemetry", action="store_true",
-                    help="record search-run telemetry (per-stage sims/wall/"
-                         "hypervolume, spot-check demotion counts, "
-                         "training-loss series) to telemetry.json in "
-                         "--out-dir")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     ap.add_argument("--quiet", action="store_true")
+    add_run_flags(ap, scale_default=1.0,
+                  scale_help="refine-stage trace scale (default 1.0)",
+                  telemetry="flag")
+    return ap
+
+
+def main(argv=None) -> int:
+    ap = build_parser()
     args = ap.parse_args(argv)
 
     if args.list:
@@ -132,35 +132,56 @@ def main(argv=None) -> int:
 
     say = (lambda s: None) if args.quiet else \
         (lambda s: print(s, file=sys.stderr))
-    names = args.scenario or list_scenarios()
-    unknown = [n for n in names if n not in list_scenarios()]
-    if unknown:
-        # a friendly listing, not a KeyError traceback
-        print(f"unknown scenario(s): {', '.join(unknown)}", file=sys.stderr)
-        print(f"registered: {', '.join(list_scenarios())} (see --list)",
-              file=sys.stderr)
-        return 2
-    if args.billing is not None:
-        try:
-            get_profile(args.billing)
-        except KeyError:
-            # a friendly listing, not a KeyError traceback
-            print(f"unknown billing profile {args.billing!r}",
-                  file=sys.stderr)
-            print(f"registered profiles: {', '.join(list_profiles())} "
-                  f"(see --list)", file=sys.stderr)
-            return 2
+    rc = validate_run_flags(args)
+    if rc:
+        return rc
+    if args.scenario:
+        rc = unknown_scenarios(args.scenario)
+        if rc:
+            return rc
+        names = list(args.scenario)
+    else:
+        # rate-based scenarios (fig9_planet) join a search only when named
+        # explicitly — same default frontier_search applies
+        names = [n for n in list_scenarios()
+                 if not get_scenario(n).rate_trace]
+
+    targets = names
+    spot_check = args.spot_check
+    if args.tier is not None:
+        # search the TIERED scenario objects: hazard/notice/discount from
+        # the named capacity tier.  Oracle spot-checks would replay the
+        # UNTIERED registry entries (the check resolves scenarios by
+        # name), so they are skipped under --tier.
+        from repro.fleet.spot import get_tier
+        from repro.scenarios.runner import apply_tier
+        tier = get_tier(args.tier)
+        targets = []
+        for n in names:
+            tiered = apply_tier(get_scenario(n), tier)
+            if tiered is None:
+                print(f"note: {n} has no spot-capable policy/fleet; "
+                      f"--tier {tier.name} ignored for it", file=sys.stderr)
+                targets.append(n)
+            else:
+                targets.append(tiered)
+        if spot_check > 0:
+            say(f"note: oracle spot-checks are skipped under --tier "
+                f"{tier.name} (they replay untiered registry entries)")
+            spot_check = 0
+
     telem = None
     if args.telemetry:
         from repro.obs import RunTelemetry
         telem = RunTelemetry()
-    result = frontier_search(names, scale=args.scale,
+    result = frontier_search(targets, scale=args.scale,
                              coarse_frac=args.coarse_frac, eps=args.eps,
                              survivor_cap=args.cap, billing=args.billing,
-                             log=say, telemetry=telem)
+                             log=say, telemetry=telem, devices=args.devices,
+                             cluster=args.cluster)
     checks = []
-    if args.spot_check > 0:
-        checks = oracle_spot_check(result, k=args.spot_check, log=say,
+    if spot_check > 0:
+        checks = oracle_spot_check(result, k=spot_check, log=say,
                                    telemetry=telem)
 
     learned_records = []
@@ -209,7 +230,8 @@ def main(argv=None) -> int:
                         "eps": args.eps, "cap": args.cap,
                         "spot_check": args.spot_check,
                         "learned": args.learned,
-                        "billing": args.billing}}
+                        "billing": args.billing, "tier": args.tier,
+                        "devices": args.devices, "cluster": args.cluster}}
     with open(os.path.join(args.out_dir, "frontier.json"), "w") as fh:
         json.dump(payload, fh, indent=2, default=float)
     if telem is not None:

@@ -17,6 +17,14 @@ CI smoke job runs the smallest scenario at a small scale through BOTH
 engines.  At full scale the oracle leg of scenarios flagged
 ``oracle_ok=False`` (the 2000-function Fig. 9 replay) is skipped unless
 ``--force-oracle`` is given; the chunked simulator handles them easily.
+
+The shared run-configuration flags (``--scale`` / ``--billing`` /
+``--tier`` / ``--devices`` / ``--cluster``) are declared in
+``repro.launch.flags`` and map onto ``repro.core.runspec.RunSpec``:
+``--devices 8`` shards the fluid scan's function axis across eight local
+devices (pair with XLA_FLAGS=--xla_force_host_platform_device_count=8 on
+CPU), ``--cluster 0.05`` buckets the sub-0.05-rps long tail into weighted
+super-functions (fluid-only: the oracle leg drops).
 """
 
 from __future__ import annotations
@@ -25,8 +33,11 @@ import argparse
 import csv
 import sys
 
+from repro.core.runspec import RunSpec
 from repro.fleet.billing import get_profile, list_profiles
 from repro.fleet.spot import get_tier, list_tiers
+from repro.launch.flags import (add_run_flags, unknown_scenarios,
+                                validate_run_flags)
 from repro.scenarios import (ENGINES, get_scenario, list_scenarios,
                              parity_report, run_scenario)
 from repro.scenarios.runner import apply_tier
@@ -48,7 +59,7 @@ def _emit(rows: list[dict], out) -> None:
                          for k, v in r.items() if k in _COLUMNS})
 
 
-def main(argv=None) -> int:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="repro.launch.scenarios",
         description="Replay workload scenarios through both simulators.")
@@ -59,34 +70,23 @@ def main(argv=None) -> int:
                     help="list registered scenarios and exit")
     ap.add_argument("--engines", default="both",
                     choices=["both", "eventsim", "simjax"])
-    ap.add_argument("--scale", type=float, default=1.0,
-                    help="isotropic workload shrink factor (default 1.0)")
     ap.add_argument("--csv", default=None, help="write CSV here (default stdout)")
     ap.add_argument("--parity", action="store_true",
                     help="print oracle-vs-simjax relative gaps to stderr")
     ap.add_argument("--force-oracle", action="store_true",
                     help="run the discrete-event oracle even for scenarios "
                          "flagged infeasible at this scale")
-    ap.add_argument("--tier", default=None,
-                    help="run spot-capable scenarios under this capacity "
-                         "tier (hazard, reclaim notice, discount); "
-                         "see --list for registered tiers")
-    ap.add_argument("--billing", default=None, metavar="PROFILE",
-                    help="bill both engines through this billing profile "
-                         "(rounding, minimum duration, per-request and "
-                         "per-GB-s fees, cpu throttle); see --list for "
-                         "registered profiles")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record the oracle leg's request/instance/node "
                          "lifecycle spans and write a Chrome-trace JSON "
                          "here (requires exactly one scenario and an "
                          "eventsim leg)")
-    ap.add_argument("--telemetry", default=None, metavar="DIR",
-                    help="attach in-scan telemetry to the simjax leg and "
-                         "write timeline_<scenario>.csv per scenario here "
-                         "(requires a simjax leg)")
-    ap.add_argument("--telemetry-slots", type=int, default=200,
-                    help="downsampled timeline resolution (default 200)")
+    add_run_flags(ap, scale_default=1.0, telemetry="dir")
+    return ap
+
+
+def main(argv=None) -> int:
+    ap = build_parser()
     args = ap.parse_args(argv)
 
     if args.list:
@@ -104,40 +104,21 @@ def main(argv=None) -> int:
             print(f"  {name:12s} {get_profile(name).description}")
         return 0
 
-    tier = None
-    if args.tier is not None:
-        try:
-            tier = get_tier(args.tier)
-        except KeyError:
-            # a friendly listing, not a KeyError traceback
-            print(f"unknown capacity tier {args.tier!r}", file=sys.stderr)
-            print(f"registered tiers: {', '.join(list_tiers())} "
-                  f"(see --list)", file=sys.stderr)
-            return 2
-
-    if args.billing is not None:
-        try:
-            get_profile(args.billing)
-        except KeyError:
-            # a friendly listing, not a KeyError traceback
-            print(f"unknown billing profile {args.billing!r}", file=sys.stderr)
-            print(f"registered profiles: {', '.join(list_profiles())} "
-                  f"(see --list)", file=sys.stderr)
-            return 2
+    rc = validate_run_flags(args)
+    if rc:
+        return rc
+    tier = get_tier(args.tier) if args.tier is not None else None
 
     names = list_scenarios() if args.all else (args.scenario or [])
     if not names:
         ap.error("pick --scenario NAME (repeatable), --all, or --list")
-    unknown = [n for n in names if n not in list_scenarios()]
-    if unknown:
-        # a friendly listing, not a KeyError traceback
-        print(f"unknown scenario(s): {', '.join(unknown)}", file=sys.stderr)
-        print("registered scenarios (see --list for details):",
-              file=sys.stderr)
-        for n in list_scenarios():
-            print(f"  {n}", file=sys.stderr)
-        return 2
+    rc = unknown_scenarios(names)
+    if rc:
+        return rc
     engines = ENGINES if args.engines == "both" else (args.engines,)
+    if args.cluster > 0 and "eventsim" in engines:
+        print("note: --cluster produces a rate-based workload; the "
+              "eventsim leg is skipped", file=sys.stderr)
 
     # observability flags are validated up front, friendly-error style:
     # a span trace needs exactly one oracle leg, telemetry a simjax leg
@@ -176,10 +157,14 @@ def main(argv=None) -> int:
             else:
                 target = tiered
         detail: dict = {}
-        sc_rows = run_scenario(target, engines=engines, scale=args.scale,
-                               force_oracle=args.force_oracle, obs=obs,
-                               telemetry=telem_slots, detail=detail,
-                               billing=args.billing)
+        sc_rows = run_scenario(target, detail=detail,
+                               spec=RunSpec(engines=engines,
+                                            scale=args.scale,
+                                            force_oracle=args.force_oracle,
+                                            obs=obs, telemetry=telem_slots,
+                                            billing=args.billing,
+                                            devices=args.devices,
+                                            cluster=args.cluster))
         if args.telemetry is not None and "fluid_summary" in detail \
                 and detail["fluid_summary"].get("telemetry"):
             from repro.obs import write_timeline_csv

@@ -33,52 +33,76 @@ import json
 import os
 import sys
 
+from repro.core.runspec import RunSpec
+from repro.launch.flags import (add_run_flags, unknown_scenarios,
+                                validate_run_flags)
 from repro.obs import (SpanRecorder, attribution_table, check_ledger,
                        ledger_from_chunked, ledger_from_eventsim,
                        ledger_parity, validate, write_oracle_timeline_csv,
                        write_timeline_csv)
-from repro.scenarios import list_scenarios, run_scenario
+from repro.scenarios import get_scenario, run_scenario
 
 # the component-parity band --check judges: same 15% the aggregate
 # parity tests pin (see repro.obs.ledger.ledger_parity for normalization)
 PARITY_TOL = 0.15
 
 
-def main(argv=None) -> int:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="repro.launch.trace",
         description="Replay one scenario through both engines with spans, "
                     "telemetry, and the overhead-attribution ledger.")
     ap.add_argument("scenario", help="registered scenario name")
-    ap.add_argument("--scale", type=float, default=0.25,
-                    help="trace scale (default 0.25, the oracle-feasible "
-                         "parity calibration point)")
     ap.add_argument("--out-dir", default="trace_out",
                     help="artifact directory (default trace_out/)")
-    ap.add_argument("--slots", type=int, default=200,
-                    help="fluid timeline resolution (default 200)")
     ap.add_argument("--engines", default="both",
                     choices=["both", "eventsim", "simjax"])
     ap.add_argument("--check", action="store_true",
                     help="exit 1 on span-validation, attribution-sum, or "
                          "component-parity failure (the CI gate)")
+    add_run_flags(ap, scale_default=0.25,
+                  scale_help="trace scale (default 0.25, the oracle-"
+                             "feasible parity calibration point)",
+                  telemetry="slots")
+    return ap
+
+
+def main(argv=None) -> int:
+    ap = build_parser()
     args = ap.parse_args(argv)
 
-    if args.scenario not in list_scenarios():
-        # a friendly listing, not a KeyError traceback
-        print(f"unknown scenario {args.scenario!r}", file=sys.stderr)
-        print("registered scenarios:", file=sys.stderr)
-        for n in list_scenarios():
-            print(f"  {n}", file=sys.stderr)
-        return 2
+    rc = unknown_scenarios([args.scenario]) or validate_run_flags(args)
+    if rc:
+        return rc
 
     engines = (("eventsim", "simjax") if args.engines == "both"
                else (args.engines,))
+    target = args.scenario
+    if args.tier is not None:
+        from repro.fleet.spot import get_tier
+        from repro.scenarios.runner import apply_tier
+        tier = get_tier(args.tier)
+        tiered = apply_tier(get_scenario(args.scenario), tier)
+        if tiered is None:
+            print(f"note: {args.scenario} has no spot-capable policy/"
+                  f"fleet; --tier {tier.name} ignored", file=sys.stderr)
+        else:
+            target = tiered
+    rate_based = (get_scenario(args.scenario).rate_trace
+                  or args.cluster > 0)
+    if rate_based and "eventsim" in engines:
+        print("note: rate-based workload (rate_trace scenario or "
+              "--cluster); the oracle leg is skipped — fluid-only ledger",
+              file=sys.stderr)
     obs = SpanRecorder(enabled=True) if "eventsim" in engines else None
     detail: dict = {}
-    rows = run_scenario(args.scenario, engines=engines, scale=args.scale,
-                        force_oracle="eventsim" in engines, obs=obs,
-                        telemetry=max(1, args.slots), detail=detail)
+    rows = run_scenario(target, detail=detail,
+                        spec=RunSpec(engines=engines, scale=args.scale,
+                                     force_oracle="eventsim" in engines,
+                                     obs=obs, telemetry=max(1, args.slots),
+                                     billing=args.billing,
+                                     devices=args.devices,
+                                     cluster=args.cluster))
     os.makedirs(args.out_dir, exist_ok=True)
 
     failures: list[str] = []

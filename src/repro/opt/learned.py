@@ -46,6 +46,7 @@ from repro.core.policies import init_theta
 from repro.core.policy_api import get_family
 from repro.core.simjax import (_PFLEET, JaxPolicy, _init_state, _make_step,
                                _prep_static)
+from repro.core.runspec import RunSpec
 from repro.core.trace import Trace, gap_statistics, rate_matrix
 from repro.fleet.billing import (BillingProfile, apply_throttle,
                                  resolve_profile)
@@ -299,8 +300,8 @@ def evaluate_trained(scenario: Union[str, Scenario], result: TrainResult,
     trained policy at the given scale — comparable against swept rows
     billed on the same basis."""
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
-    return evaluate_scenario(learned_scenario(sc, result), [{}], scale=scale,
-                             billing=billing)[0]
+    return evaluate_scenario(learned_scenario(sc, result), [{}],
+                             spec=RunSpec(scale=scale, billing=billing))[0]
 
 
 def confirm(scenario: Union[str, Scenario], result: TrainResult,
@@ -309,8 +310,8 @@ def confirm(scenario: Union[str, Scenario], result: TrainResult,
     configuration through BOTH engines and judge the parity band — the
     same trust gate swept frontier winners pass before being shipped."""
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
-    rows = run_scenario(learned_scenario(sc, result), scale=scale,
-                        force_oracle=True)
+    rows = run_scenario(learned_scenario(sc, result),
+                        spec=RunSpec(scale=scale, force_oracle=True))
     gaps = parity_report(rows)
     ok = bool(gaps) and all(g <= tol for g in gaps.values())
     return {"scenario": sc.name, "scale": scale, "gaps": gaps, "pass": ok}

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.eventsim import SimConfig
 from repro.core.policy_api import get_family
+from repro.core.runspec import RunSpec, resolve_spec
 from repro.core.simjax import (_PFLEET, JaxFleet, JaxPolicy,
                                _chunked_summaries, stack_params)
 from repro.core.trace import Trace
@@ -54,11 +55,14 @@ def evaluate_points(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
                     dt: float = 1.0, node_type: Optional[NodeType] = None,
                     billing: Union[str, BillingProfile, None] = None,
                     warmup_frac: float = 0.5,
-                    chunk_ticks: int = 512) -> list[dict]:
+                    chunk_ticks: int = 512, devices: int = 0) -> list[dict]:
     """Run every parameter point through one vmapped chunked scan; return
     one row per point: {params..., metrics..., cost fields...}.  Rows are
     billed through the ``billing`` profile (``repro.fleet.billing``;
     default ``ideal`` — bitwise the pre-billing ``cost_report`` math).
+    ``devices`` > 0 shards the vmapped batch over that many local devices
+    along the point axis (the largest divisor of the unique-point count
+    that fits; one compiled dispatch either way).
 
     This is the generalized core behind ``repro.fleet.sweep.sweep``: every
     policy axis the family declares sweepable is a traced batch axis
@@ -111,7 +115,7 @@ def evaluate_points(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
         trace, policy, pols, fleets, sim=sim, dt=dt, num_nodes=0,
         provision_s=fleet.provision_s, has_fleet=True,
         chunk_ticks=chunk_ticks, warmup_frac=warmup_frac, nbins=256,
-        billing=prof)
+        billing=prof, devices=devices)
 
     if node_type is None:
         # derive a shape from the fleet's node size at the default $/GB-hour
@@ -160,23 +164,40 @@ def _effective_key(point: dict, family: str) -> tuple:
 
 
 def evaluate_scenario(scenario: Union[str, Scenario], points: Sequence[dict],
-                      scale: float = 1.0, sim: Optional[SimConfig] = None,
+                      scale: Optional[float] = None,
+                      sim: Optional[SimConfig] = None,
                       billing: Union[str, BillingProfile, None] = None,
-                      dedupe: bool = True) -> list[dict]:
+                      dedupe: bool = True, *,
+                      spec: Optional[RunSpec] = None) -> list[dict]:
     """Evaluate every point against one scenario's workload; one row per
     point, tagged with ``point_id`` (the index into ``points``) and the
     scenario identity so downstream reducers can join across scenarios.
+
+    Run configuration (scale / billing / devices / cluster) lands through
+    ``spec`` (``repro.core.runspec.RunSpec``); the loose ``scale=`` /
+    ``billing=`` keywords keep working with a once-per-callsite
+    DeprecationWarning.  ``sim`` and ``dedupe`` are genuine per-call
+    arguments.  ``spec.cluster`` > 0 buckets the long tail into weighted
+    super-functions before the sweep (throttle-then-cluster); ``devices``
+    shards the point batch (see ``evaluate_points``).
+
     ``billing`` defaults to the scenario's own profile (a spot scenario
     carries its tier discount there); a profile given by name inherits
     that discount.  The profile's cpu-throttle term stretches the trace
     BEFORE simulation, so a provider profile is a different workload, not
     just a different invoice."""
+    spec = resolve_spec("repro.opt.evaluate_scenario", spec,
+                        {"scale": scale, "billing": billing})
+    scale = spec.scale
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     sim = sim or SimConfig(tick_s=sc.policy.tick_s)
-    prof = resolve_profile(billing, sc.billing)
+    prof = resolve_profile(spec.billing, sc.billing)
     policy = sc.policy.to_jax()
     fleet = default_fleet(sc)
     trace = apply_throttle(sc.build_trace(scale), prof)
+    if spec.cluster > 0:
+        from repro.scenarios.cluster import cluster_functions
+        trace = cluster_functions(trace, spec.cluster, tick_s=sim.tick_s)
 
     pts = list(points)
     if dedupe:
@@ -195,7 +216,8 @@ def evaluate_scenario(scenario: Union[str, Scenario], points: Sequence[dict],
     t0 = time.time()
     uniq_rows = evaluate_points(trace, policy, fleet, order, sim=sim,
                                 dt=sim.tick_s, billing=prof,
-                                chunk_ticks=sc.chunk_ticks)
+                                chunk_ticks=sc.chunk_ticks,
+                                devices=spec.devices)
     wall = time.time() - t0
     rows = []
     for pid, p in enumerate(pts):
@@ -223,6 +245,9 @@ class FrontierResult:
     # must re-evaluate on the same basis or dominance comparisons are
     # garbage (None = each scenario's own profile, the default)
     billing: Union[str, BillingProfile, None] = None
+    # the sharding / clustering basis of every row, for the same reason
+    devices: int = 0
+    cluster: float = 0.0
 
     def robust_rows(self) -> list[dict]:
         """The robust frontier as rows: one per (robust point, scenario),
@@ -278,28 +303,45 @@ def frontier_search(scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
                     survivor_cap: int = 12,
                     billing: Union[str, BillingProfile, None] = None,
                     log: Optional[Callable[[str], None]] = None,
-                    telemetry=None) -> FrontierResult:
+                    telemetry=None, devices: int = 0,
+                    cluster: float = 0.0) -> FrontierResult:
     """The coarse -> survive -> refine -> reduce pipeline over every given
-    scenario (default: the whole registry).  ``scale`` is the refine-stage
-    trace scale; the coarse grid runs at ``coarse_frac * scale``, clamped
-    to [MIN_COARSE_SCALE, scale] so a small search scale never pushes the
-    coarse traces onto their degenerate size floors.
+    scenario (default: every registered event-level scenario).  ``scale``
+    is the refine-stage trace scale; the coarse grid runs at
+    ``coarse_frac * scale``, clamped to [MIN_COARSE_SCALE, scale] so a
+    small search scale never pushes the coarse traces onto their
+    degenerate size floors.
+
+    ``devices`` shards each stage's candidate batch over local devices
+    (the point axis, see ``evaluate_points``); ``cluster`` buckets each
+    scenario's long tail below that mean-rps threshold into weighted
+    super-functions first.  Rate-based scenarios (``rate_trace=True``,
+    e.g. fig9_planet) are excluded from the default scenario set — the
+    oracle spot-check cannot replay them and their size would dwarf every
+    other stage; name one explicitly to search it.
 
     ``telemetry`` (a ``repro.obs.RunTelemetry``) receives one event per
     stage x scenario carrying sims / wall / front size / hypervolume."""
     t_start = time.time()
     say = log or (lambda s: None)
     tel = telemetry.emit if telemetry is not None else (lambda *a, **k: None)
-    names = [s if isinstance(s, str) else s.name
-             for s in (scenarios if scenarios is not None else list_scenarios())]
-    scs = {n: get_scenario(n) for n in names}
+    if scenarios is None:
+        scenarios = [n for n in list_scenarios()
+                     if not get_scenario(n).rate_trace]
+    # Scenario OBJECTS are honored verbatim (a tiered re-spec from
+    # apply_tier is not the registry entry of the same name)
+    scs = {}
+    for s in scenarios:
+        sc = get_scenario(s) if isinstance(s, str) else s
+        scs[sc.name] = sc
     points = space.points()
     coarse_scale = min(max(scale * coarse_frac, MIN_COARSE_SCALE), scale)
+    run_spec = RunSpec(billing=billing, devices=devices, cluster=cluster)
 
     coarse: dict[str, list[dict]] = {}
     for name, sc in scs.items():
-        coarse[name] = evaluate_scenario(sc, points, scale=coarse_scale,
-                                         billing=billing)
+        coarse[name] = evaluate_scenario(
+            sc, points, spec=run_spec.replace(scale=coarse_scale))
         say(f"coarse {name}: {coarse[name][0]['sims']} sims for "
             f"{len(points)} points in {coarse[name][0]['stage_wall_s']}s")
         tel("frontier_coarse", scenario=name, sims=coarse[name][0]["sims"],
@@ -321,7 +363,7 @@ def frontier_search(scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
     sub = [points[i] for i in ids]
     refined: dict[str, list[dict]] = {}
     for name, sc in scs.items():
-        rows = evaluate_scenario(sc, sub, scale=scale, billing=billing)
+        rows = evaluate_scenario(sc, sub, spec=run_spec.replace(scale=scale))
         for r, pid in zip(rows, ids):     # re-key to global point ids
             r["point_id"] = pid
         refined[name] = rows
@@ -341,7 +383,8 @@ def frontier_search(scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
                           coarse_scale=coarse_scale, coarse=coarse,
                           refined=refined, fronts=fronts,
                           robust_ids=robust_ids,
-                          wall_s=time.time() - t_start, billing=billing)
+                          wall_s=time.time() - t_start, billing=billing,
+                          devices=devices, cluster=cluster)
 
 
 # ---------------------------------------------------------------------------
@@ -407,11 +450,13 @@ def hazard_parity_gaps(sc_point: Scenario, scale: float,
         hz = float((dict(sc_point.policy.extra or {})
                     ).get("hazard_per_hour", 0.0))
         seeds = (0, 1, 2) if hz > 0.0 else (0,)
-    fluid = run_scenario(sc_point, engines=("simjax",), scale=scale)[0]
+    fluid = run_scenario(sc_point, spec=RunSpec(engines=("simjax",),
+                                                scale=scale))[0]
     acc = {m: 0.0 for m in PARITY_KEYS}
     for seed in seeds:
-        row = run_scenario(sc_point, engines=("eventsim",), scale=scale,
-                           force_oracle=True,
+        row = run_scenario(sc_point,
+                           spec=RunSpec(engines=("eventsim",), scale=scale,
+                                        force_oracle=True),
                            sim=SimConfig(tick_s=sc_point.policy.tick_s,
                                          seed=seed))[0]
         for m in PARITY_KEYS:
@@ -517,9 +562,11 @@ def oracle_spot_check(result: FrontierResult, k: int = 3,
                 if nxt is None:
                     break
                 pid = nxt["point_id"]
-                newrow = evaluate_scenario(sc, [result.points[pid]],
-                                           scale=result.scale,
-                                           billing=result.billing)[0]
+                newrow = evaluate_scenario(
+                    sc, [result.points[pid]],
+                    spec=RunSpec(scale=result.scale, billing=result.billing,
+                                 devices=result.devices,
+                                 cluster=result.cluster))[0]
                 newrow["point_id"] = pid
                 rows.append(newrow)
                 result.refined[name] = rows

@@ -1,6 +1,7 @@
 # Declarative workload scenarios: a registry of named (trace x transforms x
 # policy x fleet) specs, replayable through both the discrete-event oracle
 # and the chunked lax.scan simulator from one spec.
+from repro.scenarios.cluster import cluster_functions  # noqa: F401
 from repro.scenarios.registry import (  # noqa: F401
     get_scenario,
     list_scenarios,

@@ -1,9 +1,10 @@
 """The scenario catalogue (EXPERIMENTS.md documents each one's knobs).
 
-Seven scenarios spanning the workload families the serverless literature
+Eight scenarios spanning the workload families the serverless literature
 cares about: Shahrad'20's diurnal cycles and rare-but-bursty long tail,
 flash crowds, multi-tenant interference, the paper's own 2000-function /
-~3.5M-invocation KWOK-scale replay (Fig. 9), a fleet-cost stress run
+~3.5M-invocation KWOK-scale replay (Fig. 9), a 100k-function rate-based
+planet-scale push of the same figure, a fleet-cost stress run
 for the two-level autoscaling layer (Fig. 10 territory), and a spot-fleet
 preemption storm for the capacity-tier layer (Fig. 12 territory).
 """
@@ -108,6 +109,24 @@ register(Scenario(
     policy=PolicySpec(kind="sync", keepalive_s=600),
     num_nodes=50,
     oracle_ok=False,
+))
+
+register(Scenario(
+    name="fig9_planet",
+    description="Planet-scale fluid replay: 100k functions / ~50M "
+                "invocations of rate-based (pre-binned Poisson-count) "
+                "traffic.  Event synthesis and the oracle are both "
+                "infeasible here; the scenario exists to exercise the "
+                "device-sharded chunked scan (RunSpec.devices) and the "
+                "long-tail clustering transform (RunSpec.cluster).",
+    figure="extends Fig. 9 (large-scale trade-off, pushed 50x)",
+    base=TraceConfig(num_functions=100_000, duration_s=2400.0,
+                     target_total_rps=20_900.0, seed=13),
+    policy=PolicySpec(kind="sync", keepalive_s=600, tick_s=2.0),
+    num_nodes=2500,
+    oracle_ok=False,
+    chunk_ticks=256,
+    rate_trace=True,
 ))
 
 register(Scenario(

@@ -22,12 +22,15 @@ from typing import Optional, Sequence, Union
 from repro.core.cluster import Cluster
 from repro.core.eventsim import EventSim, SimConfig
 from repro.core.metrics import compute
+from repro.core.runspec import RunSpec, resolve_spec
 from repro.core.simjax import JaxFleet, simulate_chunked
 from repro.fleet.billing import (BillingProfile, apply_throttle, bill_sim,
                                  bill_summary, resolve_profile)
 from repro.fleet.nodes import NodeFleet, NodeType
 from repro.fleet.policies import UtilizationFleetPolicy
-from repro.fleet.spot import CapacityTier, SpotMarket, SpotNodeFleet
+from repro.fleet.spot import (CapacityTier, SpotMarket, SpotNodeFleet,
+                              get_tier)
+from repro.scenarios.cluster import cluster_functions
 from repro.scenarios.registry import get_scenario
 from repro.scenarios.spec import PolicySpec, Scenario
 
@@ -126,12 +129,14 @@ def _run_eventsim(sc: Scenario, trace, sim: SimConfig, obs=None,
 
 
 def _run_simjax(sc: Scenario, trace, sim: SimConfig, telemetry: int = 0,
-                billing: Optional[BillingProfile] = None) -> dict:
+                billing: Optional[BillingProfile] = None,
+                devices: int = 0) -> dict:
     # dt = the oracle's reconcile tick: both engines share one control period
     row = simulate_chunked(trace, sc.policy.to_jax(), sim=sim,
                            dt=sim.tick_s, num_nodes=sc.num_nodes,
                            fleet=sc.fleet, chunk_ticks=sc.chunk_ticks,
-                           telemetry=telemetry, billing=billing)
+                           spec=RunSpec(telemetry=telemetry, billing=billing,
+                                        devices=devices))
     if billing is not None:
         row = {**row, **bill_summary(row, billing,
                                      node_type=_billing_node_type(sc),
@@ -140,18 +145,34 @@ def _run_simjax(sc: Scenario, trace, sim: SimConfig, telemetry: int = 0,
 
 
 def run_scenario(scenario: Union[str, Scenario],
-                 engines: Sequence[str] = ENGINES, scale: float = 1.0,
+                 engines: Optional[Sequence[str]] = None,
+                 scale: Optional[float] = None,
                  sim: Optional[SimConfig] = None,
-                 force_oracle: bool = False, obs=None, telemetry: int = 0,
+                 force_oracle: Optional[bool] = None, obs=None,
+                 telemetry: Optional[int] = None,
                  detail: Optional[dict] = None,
-                 billing: Union[str, BillingProfile, None] = None
-                 ) -> list[dict]:
+                 billing: Union[str, BillingProfile, None] = None,
+                 *, spec: Optional[RunSpec] = None) -> list[dict]:
     """Build the scenario trace once and replay it through each engine.
+
+    Run configuration lands through ``spec`` (a ``repro.core.runspec
+    .RunSpec``): engines / scale / force_oracle / obs / telemetry /
+    billing, plus the planet-scale knobs — ``devices`` (shard the fluid
+    scan's function axis over that many local devices), ``cluster`` (a
+    mean-rps threshold below which functions are bucketed into weighted
+    super-functions, see ``repro.scenarios.cluster``), and ``tier`` (a
+    capacity-tier name or ``CapacityTier``, applied via ``apply_tier``;
+    a scenario that cannot express a tier raises).  The loose keyword
+    forms remain accepted with a once-per-callsite DeprecationWarning;
+    mixing them with ``spec`` is an error.  ``sim`` and ``detail`` are
+    genuine per-call arguments, not run configuration.
 
     The oracle leg is skipped for scenarios flagged ``oracle_ok=False``
     unless the run is shrunk (scale <= 0.25) or ``force_oracle`` is set —
     replaying ~3.5M discrete events is exactly what the chunked scan exists
-    to avoid.
+    to avoid.  Rate-based runs (``Scenario.rate_trace`` or clustering)
+    have NO event stream for the oracle to replay: the eventsim leg drops
+    silently, ``force_oracle`` notwithstanding.
 
     Observability (repro.obs): pass a ``SpanRecorder`` as ``obs`` to trace
     the oracle leg's request/instance/node lifecycles; ``telemetry=S``
@@ -168,27 +189,47 @@ def run_scenario(scenario: Union[str, Scenario],
     NAME inherits the scenario's spot discount (the tier is workload
     state, not provider semantics); a profile OBJECT is used verbatim.
     """
+    spec = resolve_spec("repro.scenarios.run_scenario", spec,
+                        {"engines": engines, "scale": scale,
+                         "force_oracle": force_oracle, "obs": obs,
+                         "telemetry": telemetry, "billing": billing})
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
-    bp = resolve_profile(billing, sc.billing) if billing is not None else None
+    if spec.tier is not None:
+        tier = (get_tier(spec.tier) if isinstance(spec.tier, str)
+                else spec.tier)
+        tiered = apply_tier(sc, tier)
+        if tiered is None:
+            raise ValueError(
+                f"scenario {sc.name!r} cannot express capacity tier "
+                f"{tier.name!r}: no fleet, or its policy family declares "
+                f"no spot axes")
+        sc = tiered
+    bp = (resolve_profile(spec.billing, sc.billing)
+          if spec.billing is not None else None)
     # both engines run the same control-loop period (see PolicySpec.tick_s)
     sim = sim or SimConfig(tick_s=sc.policy.tick_s)
+    rate_based = sc.rate_trace or spec.cluster > 0
     runnable = []
-    for engine in engines:
+    for engine in spec.engines:
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; pick from {ENGINES}")
-        if engine == "eventsim" and not (sc.oracle_ok or scale <= 0.25
-                                         or force_oracle):
+        if engine == "eventsim" and (rate_based or not (
+                sc.oracle_ok or spec.scale <= 0.25 or spec.force_oracle)):
             continue
         runnable.append(engine)
     if not runnable:       # don't synthesize a multi-million-event trace
         return []          # just to run nothing
-    trace = sc.build_trace(scale)
+    trace = sc.build_trace(spec.scale)
     if bp is not None:
         # the throttled trace is SHARED: both engines replay the same
         # memory-stretched durations, so parity judges the billing model,
         # not a one-sided duration transform (identity under ``ideal``)
         trace = apply_throttle(trace, bp)
-    meta = {"scenario": sc.name, "scale": scale, "figure": sc.figure,
+    if spec.cluster > 0:
+        # cluster AFTER throttling: the throttle stretches durations the
+        # bucket key quantizes on, so the order is load-bearing
+        trace = cluster_functions(trace, spec.cluster, tick_s=sim.tick_s)
+    meta = {"scenario": sc.name, "scale": spec.scale, "figure": sc.figure,
             "num_functions": trace.num_functions, "invocations": len(trace)}
     if bp is not None:
         meta["billing"] = bp.name
@@ -196,11 +237,11 @@ def run_scenario(scenario: Union[str, Scenario],
     for engine in runnable:
         t0 = time.time()
         if engine == "eventsim":
-            metrics = _run_eventsim(sc, trace, sim, obs=obs, detail=detail,
-                                    billing=bp)
+            metrics = _run_eventsim(sc, trace, sim, obs=spec.obs,
+                                    detail=detail, billing=bp)
         else:
-            metrics = _run_simjax(sc, trace, sim, telemetry=telemetry,
-                                  billing=bp)
+            metrics = _run_simjax(sc, trace, sim, telemetry=spec.telemetry,
+                                  billing=bp, devices=spec.devices)
             if detail is not None:
                 detail["fluid_summary"] = metrics
         rows.append({**meta, "engine": engine,
@@ -217,8 +258,9 @@ def billed_parity(scenario: Union[str, Scenario],
     the acceptance gate for the provider-calibrated billing engine (≤15%
     on ``total_cost`` at 0.25x, the scale the parity band is calibrated
     at)."""
-    rows = run_scenario(scenario, scale=scale, sim=sim, force_oracle=True,
-                        billing=billing)
+    rows = run_scenario(scenario, sim=sim,
+                        spec=RunSpec(scale=scale, force_oracle=True,
+                                     billing=billing))
     by = {r["engine"]: r for r in rows}
     if not {"eventsim", "simjax"} <= set(by):
         raise RuntimeError("billed_parity needs both engine legs; got "
@@ -230,20 +272,38 @@ def billed_parity(scenario: Union[str, Scenario],
     return out
 
 
-def frontier(scenarios: Optional[Sequence[str]] = None, scale: float = 1.0,
-             space=None, spot_check: int = 0, log=None, **kw):
+def frontier(scenarios: Optional[Sequence[str]] = None,
+             scale: Optional[float] = None, space=None, spot_check: int = 0,
+             log=None, coarse_frac: float = 0.1, eps: float = 0.15,
+             survivor_cap: int = 12,
+             billing: Union[str, BillingProfile, None] = None,
+             telemetry=None, *, spec: Optional[RunSpec] = None):
     """Scenario-side entry point into the frontier engine: search the joint
-    (policy x fleet) space across the given scenarios (default: the whole
-    registry) with the coarse+refine schedule, optionally oracle-checking
-    ``spot_check`` sampled winners per scenario.
+    (policy x fleet) space across the given scenarios (default: every
+    registered event-level scenario) with the coarse+refine schedule,
+    optionally oracle-checking ``spot_check`` sampled winners per scenario.
+
+    Run configuration (scale / billing / devices / cluster) lands through
+    ``spec``; the loose ``scale=`` / ``billing=`` keywords keep working
+    with a DeprecationWarning.  The search-shape knobs (``space``,
+    ``coarse_frac``, ``eps``, ``survivor_cap``, ``spot_check``) and the
+    sinks (``log``, ``telemetry`` — a ``repro.obs.RunTelemetry``) are
+    genuine parameters of THIS function, spelled out explicitly so a typo
+    fails as a TypeError instead of vanishing into ``**kw``.
 
     Returns ``(FrontierResult, spot_records)``; see ``repro.opt.search``.
     (Imported lazily: ``repro.opt`` builds on this package.)
     """
     from repro.opt.search import (DEFAULT_SPACE, frontier_search,
                                   oracle_spot_check)
+    spec = resolve_spec("repro.scenarios.frontier", spec,
+                        {"scale": scale, "billing": billing})
     result = frontier_search(scenarios, space=space or DEFAULT_SPACE,
-                             scale=scale, log=log, **kw)
+                             scale=spec.scale, coarse_frac=coarse_frac,
+                             eps=eps, survivor_cap=survivor_cap,
+                             billing=spec.billing, log=log,
+                             telemetry=telemetry, devices=spec.devices,
+                             cluster=spec.cluster)
     checks = oracle_spot_check(result, k=spot_check) if spot_check else []
     return result, checks
 

@@ -15,12 +15,13 @@ branchless traced ``JaxPolicy`` on the other.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple, Union
 
 from repro.core.policies import Policy
 from repro.core.policy_api import get_family
 from repro.core.simjax import JaxFleet, JaxPolicy
-from repro.core.trace import Trace, TraceConfig, synthesize
+from repro.core.trace import (RateTrace, Trace, TraceConfig, synthesize,
+                              synthesize_rates)
 from repro.fleet.billing import IDEAL, BillingProfile
 from repro.scenarios.transforms import Transform, apply_transforms
 
@@ -87,6 +88,12 @@ class Scenario:
     # carries the PriceBook knobs PLUS the provider-side semantics
     # (rounding, fees, GB-s metering, warm tier — see repro.fleet.billing)
     billing: BillingProfile = IDEAL
+    # rate-based workload: synthesize per-tick Poisson COUNTS (RateTrace)
+    # instead of a flat event stream — the planet-scale path, where a 50M
+    # event sort would dwarf the simulation itself.  Rate-based scenarios
+    # are fluid-only (no event stream for the oracle to replay) and cannot
+    # stack event-level transforms.
+    rate_trace: bool = False
 
     def scaled_config(self, scale: float = 1.0) -> TraceConfig:
         """Shrink the workload isotropically (functions, duration, load) for
@@ -99,7 +106,13 @@ class Scenario:
             duration_s=max(240.0, self.base.duration_s * scale),
             target_total_rps=max(0.5, self.base.target_total_rps * scale))
 
-    def build_trace(self, scale: float = 1.0) -> Trace:
+    def build_trace(self, scale: float = 1.0) -> Union[Trace, RateTrace]:
         cfg = self.scaled_config(scale)
+        if self.rate_trace:
+            if self.transforms:
+                raise ValueError(
+                    f"scenario {self.name!r}: rate_trace scenarios cannot "
+                    f"apply event-stream transforms")
+            return synthesize_rates(cfg, tick_s=self.policy.tick_s)
         return apply_transforms(synthesize(cfg), cfg, self.transforms,
                                 seed=cfg.seed)

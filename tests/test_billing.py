@@ -255,8 +255,10 @@ def test_billed_parity_cold_tail_quick():
 @pytest.mark.slow
 @pytest.mark.parametrize("provider", ["aws_lambda", "gcr"])
 def test_billed_parity_all_scenarios(provider):
-    from repro.scenarios import list_scenarios
+    from repro.scenarios import get_scenario, list_scenarios
     for name in list_scenarios():
+        if get_scenario(name).rate_trace:
+            continue   # fluid-only by construction: no oracle leg to bill
         gaps = billed_parity(name, provider, scale=0.25)
         assert gaps["total_cost"] <= 0.15, (name, provider, gaps)
 

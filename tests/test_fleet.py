@@ -16,7 +16,9 @@ from repro.core.trace import TraceConfig, synthesize
 from repro.fleet import (FleetManager, NodeFleet, NodeType,
                          ScheduleFleetPolicy, ThresholdFleetPolicy,
                          UtilizationFleetPolicy, cost_from_sim, cost_report)
-from repro.fleet.sweep import grid_points, pareto_front, sweep
+from repro.fleet.sweep import sweep
+from repro.opt.frontier import pareto_front
+from repro.opt.space import grid_points
 from repro.serving.engine import ServeRequest
 
 TC = TraceConfig(num_functions=60, duration_s=900, target_total_rps=10, seed=3)

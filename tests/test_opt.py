@@ -6,8 +6,8 @@ import math
 import numpy as np
 import pytest
 
-# the stable fleet-facing surface re-exports the canonical reducers
-from repro.fleet.sweep import grid_points, pareto_front
+from repro.opt.frontier import pareto_front
+from repro.opt.space import grid_points
 from repro.core.simjax import JaxFleet, JaxPolicy, simulate_chunked
 from repro.core.trace import TraceConfig, synthesize
 from repro.opt import (DEFAULT_SPACE, SearchSpace, active_knobs,
