@@ -1,0 +1,101 @@
+"""Fig 14 (beyond-paper): multi-region cells — the cost of keeping warm
+everywhere.
+
+The paper's overhead characterization is single-cluster; production
+serverless fleets split the same function population across regional
+cells behind a weighted router with scheduled/reactive pre-provisioning
+(``repro.cells``).  This benchmark runs the three cells scenarios through
+BOTH engines:
+
+* ``region_failover`` — a deterministic regional outage at 60% of the run
+  storms the survivors with redirected + re-queued traffic;
+* ``follow_the_sun`` — phase-staggered diurnal waves with cron windows
+  pre-warming each region before its morning;
+* ``cell_hazard_corr`` — correlated spot-reclaim storms across cells;
+
+and reports per-scenario parity (the oracle-vs-fluid acceptance readout,
+slowdown + memory — creation rate is out-of-band for partitioned warped
+traffic, see EXPERIMENTS.md) plus a fluid-only ``cell_count`` sweep of the
+failover scenario: the resilience-vs-overhead frontier as the same
+workload spreads over 1..4 cells (more cells = smaller blast radius but
+more warm pools to keep).
+
+Gate metrics for the quick tier: ``fig14_failover_p99`` (the failover
+scenario's fluid slowdown — deterministic, fixed seed),
+``fig14_cell_parity`` (the worst slowdown gap across the three
+scenarios), and ``fig14_wall_s``.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+from benchmarks.common import emit
+from repro.core.runspec import RunSpec
+from repro.scenarios import parity_report, run_scenario
+
+EVAL_SCALE = 0.25           # the oracle-feasible, parity-calibrated scale
+
+SCENARIOS = ("region_failover", "follow_the_sun", "cell_hazard_corr")
+CELL_COUNTS = (1, 2, 3, 4)  # sweep axis: 1 = no redundancy (outage kills
+                            # everything), 4 = maximal spread
+
+
+def run(scale: float = 1.0, parity: bool = True, sweep: bool = True):
+    """``scale`` multiplies the benchmark's own (already reduced) scale;
+    ``parity=False`` runs the fluid legs only; ``sweep=False`` (the quick
+    tier) skips the cell-count frontier.  Returns ``{"p99": failover
+    fluid p99, "parity": worst slowdown gap, "sweep": rows-or-None,
+    "wall_s": total}``."""
+    t0 = time.time()
+    eval_scale = max(0.05, EVAL_SCALE * scale)
+    engines = ("eventsim", "simjax") if parity else ("simjax",)
+
+    failover_p99 = float("nan")
+    max_gap = 0.0 if parity else float("nan")
+    for name in SCENARIOS:
+        rows = run_scenario(name, spec=RunSpec(scale=eval_scale,
+                                               engines=engines))
+        sim_row = next(r for r in rows if r["engine"] == "simjax")
+        tag = (f"slowdown={sim_row['slowdown_geomean_p99']:.2f};"
+               f"mem={sim_row['normalized_memory']:.2f};"
+               f"nodes={sim_row['nodes_mean']:.2f};"
+               f"n={sim_row['invocations']}")
+        if parity:
+            gaps = parity_report(rows)
+            max_gap = max(max_gap, gaps["slowdown_geomean_p99"])
+            tag += (f";parity_slow={gaps['slowdown_geomean_p99']:.3f};"
+                    f"parity_mem={gaps['normalized_memory']:.3f}")
+        emit(f"fig14_{name}", sim_row["wall_s"] * 1e6, tag)
+        if name == "region_failover":
+            failover_p99 = sim_row["slowdown_geomean_p99"]
+
+    sweep_rows = None
+    if sweep:
+        # resilience-vs-overhead: the SAME failover workload over 1..4
+        # cells (fluid-only; cell_count is a structural sweep axis, so the
+        # search layer batches each partition separately)
+        from repro.opt import evaluate_scenario
+        pts = [{"cell_count": float(c)} for c in CELL_COUNTS]
+        sweep_rows = evaluate_scenario(
+            "region_failover", pts,
+            spec=RunSpec(scale=eval_scale, billing="ideal"))
+        for r in sweep_rows:
+            emit(f"fig14_cells_{int(r['cell_count'])}", 0.0,
+                 f"slowdown={r['slowdown_geomean_p99']:.2f};"
+                 f"mem={r['normalized_memory']:.2f};"
+                 f"cost={r['cost_per_million']:.4g}")
+
+    wall = time.time() - t0
+    emit("fig14_region_failover", wall * 1e6,
+         f"failover_p99={failover_p99:.3f};max_parity={max_gap:.3f};"
+         f"sweep={'1-4' if sweep else 'off'}")
+    if parity and not math.isfinite(max_gap):
+        raise RuntimeError("fig14 parity produced a non-finite gap")
+    return {"p99": failover_p99, "parity": max_gap, "sweep": sweep_rows,
+            "wall_s": wall}
+
+
+if __name__ == "__main__":
+    run()

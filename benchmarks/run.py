@@ -6,8 +6,9 @@ Default: every figure benchmark, printing ``name,us_per_call,derived`` CSV.
 0.1x, the scenario suite at 0.1x (oracle legs included at that scale), the
 per-scenario frontier hypervolumes, the fig12 spot-vs-on-demand cost
 ratio (fluid-only, deterministic), and the fig13 billing-delta gate
-(provider-vs-ideal frontier rank shift + billed oracle parity), collected
-into a flat {metric: value}
+(provider-vs-ideal frontier rank shift + billed oracle parity), and the
+fig14 multi-region cells gate (failover slowdown + the worst cells
+oracle-vs-fluid gap), collected into a flat {metric: value}
 dict where EVERY metric is lower-is-better (wall seconds, p99 slowdown,
 $/1M requests, memory ratio, cost ratio).
 ``--json`` writes it (BENCH_ci.json in CI); ``--baseline`` compares against
@@ -49,6 +50,7 @@ MODULES = [
     "benchmarks.fig11_learned_policy",
     "benchmarks.fig12_spot_frontier",
     "benchmarks.fig13_billing_delta",
+    "benchmarks.fig14_region_failover",
     "benchmarks.scenario_suite",
     "benchmarks.table1_trends",
     "benchmarks.roofline",
@@ -145,6 +147,20 @@ def run_quick() -> dict:
     metrics["fig13_billing_rank_delta"] = (
         1.0 / f13["rank_shift"] if f13["rank_shift"] > 0 else math.inf)
     metrics["fig13_billed_parity"] = f13["parity"]
+
+    # multi-region cells (repro.cells): the three Fig. 14 scenarios
+    # through BOTH engines at the 0.25 parity-calibration point (the
+    # parity band does not hold below ~0.1x, see EXPERIMENTS.md) — gates
+    # the failover scenario's fluid slowdown (deterministic: fixed
+    # seed), the worst oracle-vs-fluid slowdown gap across the cells
+    # family, and the wall clock; the cell-count frontier sweep runs in
+    # the full benchmark only
+    from benchmarks import fig14_region_failover
+    t0 = time.time()
+    f14 = fig14_region_failover.run(sweep=False)
+    metrics["fig14_wall_s"] = round(time.time() - t0, 3)
+    metrics["fig14_failover_p99"] = f14["p99"]
+    metrics["fig14_cell_parity"] = f14["parity"]
 
     # attribution ledger (repro.obs): trace diurnal through BOTH engines at
     # the 0.25 parity-calibration point and gate on (a) attribution-sum

@@ -8,26 +8,19 @@ of them — including the planet-scale knobs (``devices`` for the
 device-sharded scan, ``cluster`` for long-tail super-function bucketing) —
 so new knobs land in exactly one place.
 
-Old call sites keep working: every redesigned entry point accepts its
-legacy kwargs, forwards them into a ``RunSpec`` through
-:func:`resolve_spec`, and emits a ``DeprecationWarning`` once per entry
-point per process.  Passing ``spec=`` together with a legacy kwarg is an
-error (two sources of truth), and unknown kwargs now fail loudly instead
-of being swallowed.
+``spec=RunSpec(...)`` is the ONLY calling convention: the transitional
+loose-kwarg shims (and their once-per-process deprecation machinery) were
+removed after the soak period, so a stale ``run_scenario(scale=0.5)`` call
+now fails with an ordinary ``TypeError`` instead of warning.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
-__all__ = ["RunSpec", "resolve_spec", "warn_once"]
-
-#: entry points that have already emitted their deprecation warning this
-#: process (cleared by tests to re-arm the warning)
-_WARNED: set = set()
+__all__ = ["RunSpec"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,37 +80,3 @@ class RunSpec:
 
     def replace(self, **changes) -> "RunSpec":
         return dataclasses.replace(self, **changes)
-
-
-def warn_once(key: str, message: str, stacklevel: int = 3) -> None:
-    """Emit ``message`` as a DeprecationWarning the first time ``key`` is
-    seen this process; later hits are silent (one nag per entry point, not
-    one per call in a sweep loop)."""
-    if key in _WARNED:
-        return
-    _WARNED.add(key)
-    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
-
-
-def resolve_spec(func: str, spec: Optional[RunSpec], legacy: dict) -> RunSpec:
-    """Merge an entry point's legacy loose kwargs into a RunSpec.
-
-    ``legacy`` maps RunSpec field name -> value-or-None, where None means
-    "caller did not pass it" (every legacy kwarg defaults to None in the
-    redesigned signatures).  Passing both ``spec=`` and a legacy kwarg is
-    ambiguous and raises; legacy-only calls warn once per ``func`` and are
-    forwarded verbatim.
-    """
-    given = {k: v for k, v in legacy.items() if v is not None}
-    if spec is not None:
-        if given:
-            raise TypeError(
-                f"{func}() got both spec= and legacy keyword(s) "
-                f"{sorted(given)}; pass everything through RunSpec")
-        if not isinstance(spec, RunSpec):
-            raise TypeError(f"{func}() spec= must be a RunSpec, got {type(spec).__name__}")
-        return spec
-    if given:
-        warn_once(func, f"{func}(): loose keyword(s) {sorted(given)} are "
-                        f"deprecated; pass spec=RunSpec(...) instead")
-    return RunSpec(**given)

@@ -1216,7 +1216,7 @@ def simulate_chunked(trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
                      dt: float = 1.0, num_nodes: int = 8,
                      fleet: Optional[JaxFleet] = None, chunk_ticks: int = 512,
                      warmup_frac: float = 0.5, nbins: int = 256,
-                     telemetry=None, billing=None, *, spec=None) -> dict:
+                     *, spec=None) -> dict:
     """Memory-bounded twin of ``summarize(simulate(...))``: same step math,
     same metric keys, but summary statistics are accumulated inside a
     segmented scan so arbitrarily long / wide traces (the 2000-function
@@ -1228,8 +1228,8 @@ def simulate_chunked(trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
     ``spec`` (a ``repro.core.runspec.RunSpec``) carries the run knobs this
     engine consumes: ``telemetry`` slots, the ``billing`` profile, and
     ``devices`` for the sharded dispatch (function axis here; see
-    ``_chunked_summaries``).  The loose ``telemetry=`` / ``billing=``
-    kwargs keep working through the once-per-process deprecation shim.
+    ``_chunked_summaries``).  It is the only way to pass them — the loose
+    ``telemetry=`` / ``billing=`` shim kwargs were removed.
 
     ``telemetry=S`` (static, default off) rides S downsampled per-tick
     series slots plus attribution sums in the scan carry — constant memory —
@@ -1238,13 +1238,15 @@ def simulate_chunked(trace, policy: JaxPolicy, sim: SimConfig = SimConfig(),
     program: results are bit-for-bit identical to a build without this
     feature.
 
-    ``billing`` (a ``repro.fleet.billing`` profile or name, default
+    ``spec.billing`` (a ``repro.fleet.billing`` profile or name, default
     ``ideal``) selects the billed-duration expectation the scan's
     ``billed_gb_s`` accumulates — the ONLY knob it touches; every other
     metric is independent of the profile."""
-    from repro.core.runspec import resolve_spec
-    spec = resolve_spec("repro.core.simjax.simulate_chunked", spec,
-                        {"telemetry": telemetry, "billing": billing})
+    from repro.core.runspec import RunSpec
+    spec = spec if spec is not None else RunSpec()
+    if not isinstance(spec, RunSpec):
+        raise TypeError("simulate_chunked() spec= must be a RunSpec, got "
+                        f"{type(spec).__name__}")
     has_fleet = fleet is not None
     pols = stack_params([policy.params()])
     fleets = np.asarray([fleet.params() if has_fleet

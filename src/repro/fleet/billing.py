@@ -10,14 +10,16 @@ every request pays a flat fee, compute is metered in GB-seconds of BILLED
 provisioned-concurrency tier, and CPU share scales with configured memory
 so under-provisioned functions run (and bill) longer.
 
-A ``BillingProfile`` captures all of that as data.  Three are registered:
+A ``BillingProfile`` captures all of that as data.  Four are registered:
 
-* ``ideal``       — bit-for-bit the ``PriceBook`` math in ``costs.py``
-                    (all provider-side rates are exactly 0.0, the
-                    node-hour weight exactly 1.0, so every added term is a
-                    float-identity ``+ 0.0`` / ``* 1.0``);
-* ``aws_lambda``  — AWS Lambda, x86 / us-east-1 public prices;
-* ``gcr``         — Google Cloud Run, request-based billing, tier-1 region.
+* ``ideal``           — bit-for-bit the ``PriceBook`` math in ``costs.py``
+                        (all provider-side rates are exactly 0.0, the
+                        node-hour weight exactly 1.0, so every added term
+                        is a float-identity ``+ 0.0`` / ``* 1.0``);
+* ``aws_lambda``      — AWS Lambda, x86 / us-east-1 public prices;
+* ``gcr``             — Google Cloud Run, request billing, tier-1 region;
+* ``azure_functions`` — Azure Functions Consumption plan (100 ms minimum
+                        bill + per-execution fee).
 
 Both engines bill through one profile: the discrete-event oracle rounds
 each request's recorded duration exactly (``billed_seconds`` over
@@ -402,6 +404,24 @@ GCR = register_profile(BillingProfile(
     rounding_s=0.1, min_billed_s=0.1,
     per_request=4.0e-7, per_gb_s=2.65e-5,
     warm_gb_s_rate=5.0e-6))
+
+# Azure Functions, Consumption plan (azure.microsoft.com/pricing/details/
+# functions, 2025): $0.20 / 1M executions; $0.000016 / GB-s of observed
+# duration, rounded UP to the nearest 1 ms with a 100 ms minimum per
+# execution — the most aggressive minimum-billing censoring of the three
+# providers, so short functions over-bill hardest here.  Memory is rounded
+# to the nearest 128 MB by the platform; we bill the configured MB
+# directly (the rounding is second-order next to the 100 ms floor).  The
+# Consumption plan has no provisioned-concurrency tier (that's Premium)
+# and the host grants a full core per sandbox: no warm rate, no throttle.
+AZURE_FUNCTIONS = register_profile(BillingProfile(
+    name="azure_functions",
+    description="Azure Functions Consumption: per-execution + $/GB-s at "
+                "1 ms round-up with a 100 ms minimum bill, no warm tier, "
+                "full-core host (no throttle)",
+    node_hour_weight=0.0, master_vcpu_per_hour=0.0,
+    rounding_s=0.001, min_billed_s=0.1,
+    per_request=2.0e-7, per_gb_s=1.6e-5))
 
 
 def _require_float_identities() -> None:

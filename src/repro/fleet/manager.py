@@ -46,7 +46,10 @@ class FleetManager:
         self.nodes_up = max(initial_nodes, self.policy.min_nodes)
         # (ready time, is_spot) per provisioning node
         self._pipeline: list[tuple[float, bool]] = []
-        self._cooldown_until = -math.inf
+        # per-decision-source scale-down cooldown (see NodeFleet): policies
+        # exposing ``last_source`` get one clock per trigger; plain
+        # policies key on None — identical to the old single timer
+        self._cooldown_until: dict = {}
         self._pressure = 0                    # denied creates since last tick
         self._last_bill_t: float | None = None
         self.provisions = 0
@@ -126,16 +129,22 @@ class FleetManager:
                 self._pipeline.append((now + self.node_type.provision_s,
                                        is_spot))
                 self.provisions += 1
-        elif desired < self.nodes_total and now >= self._cooldown_until:
-            floor = math.ceil(live_instances / self.instances_per_node)
-            down = min(self.nodes_total - desired, max(self.nodes_up - floor, 0))
-            if down > 0:
-                self.nodes_up -= down
-                # shed the preemptible tier first: it is the flexible share
-                shed_spot = min(down, self.nodes_up_spot)
-                self.nodes_up_spot -= shed_spot
-                self.terminations += down
-                self._cooldown_until = now + self.cooldown_s
+        elif desired < self.nodes_total:
+            key = getattr(self.policy, "last_source", None)
+            if now >= self._cooldown_until.get(key, -math.inf):
+                floor = math.ceil(live_instances / self.instances_per_node)
+                down = min(self.nodes_total - desired,
+                           max(self.nodes_up - floor, 0))
+                if down > 0:
+                    self.nodes_up -= down
+                    # shed the preemptible tier first: it is the flexible
+                    # share
+                    shed_spot = min(down, self.nodes_up_spot)
+                    self.nodes_up_spot -= shed_spot
+                    self.terminations += down
+                    cool = getattr(self.policy, "last_cooldown_s", None)
+                    self._cooldown_until[key] = now + (
+                        cool if cool is not None else self.cooldown_s)
 
     def snapshot(self) -> dict:
         return {

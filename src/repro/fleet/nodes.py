@@ -46,7 +46,12 @@ class NodeFleet:
         self.policy = policy or UtilizationFleetPolicy()
         self.node_type = node_type
         self.cooldown_s = cooldown_s
-        self._cooldown_until = -math.inf
+        # scale-down cooldown PER decision source: a policy that exposes
+        # ``last_source`` (e.g. a reactive trigger name on a convergence
+        # policy) gets its own clock, so two triggers with different
+        # cooldowns never suppress each other; plain policies all key on
+        # None and behave exactly as the old single-fleet timer did
+        self._cooldown_until: dict = {}
         self._pressure_mb = 0.0
         self.provisions = 0
         self.terminations = 0
@@ -84,14 +89,19 @@ class NodeFleet:
         if desired > have:
             provisioned = self._provision(cluster, desired - have)
             self.provisions += len(provisioned)
-        elif desired < have and t >= self._cooldown_until:
-            # drain the emptiest up-nodes first so reclamation is fast
-            up = sorted(cluster.nodes_in(UP), key=lambda n: n.used_mb)
-            for node in up[:have - desired]:
-                cluster.start_drain(node)
-                draining.append(node)
-            if draining:
-                self._cooldown_until = t + self.cooldown_s
+        else:
+            key = getattr(self.policy, "last_source", None)
+            if desired < have \
+                    and t >= self._cooldown_until.get(key, -math.inf):
+                # drain the emptiest up-nodes first so reclamation is fast
+                up = sorted(cluster.nodes_in(UP), key=lambda n: n.used_mb)
+                for node in up[:have - desired]:
+                    cluster.start_drain(node)
+                    draining.append(node)
+                if draining:
+                    cool = getattr(self.policy, "last_cooldown_s", None)
+                    self._cooldown_until[key] = t + (cool if cool is not None
+                                                     else self.cooldown_s)
         return provisioned, draining
 
     def _provision(self, cluster: Cluster, count: int) -> list[Node]:

@@ -23,41 +23,21 @@ in ``repro.opt`` (``opt.search.evaluate_points`` generalizes it so EVERY
 policy axis a registered ``repro.core.policy_api`` family declares
 sweepable — keepalive, utilization target, container concurrency, pre-warm
 lead, and whatever future families declare — is a traced batch axis, which
-is what the frontier engine sweeps).  The old ``grid_points`` /
-``pareto_front`` / ``SWEEPABLE`` re-exports still resolve here, with a
-once-per-name DeprecationWarning pointing at their canonical homes.
+is what the frontier engine sweeps).  ``grid_points`` / ``pareto_front`` /
+``SWEEPABLE`` live at their canonical homes in ``repro.opt``; the lazy
+deprecation re-exports that used to resolve here were removed.
 """
 
 from __future__ import annotations
 
-import importlib
 from typing import Optional, Sequence, Union
 
 from repro.core.eventsim import SimConfig
-from repro.core.runspec import warn_once
 from repro.core.simjax import JaxFleet, JaxPolicy
 from repro.core.trace import Trace
 from repro.fleet.billing import BillingProfile
 from repro.fleet.nodes import NodeType
 from repro.opt.search import evaluate_points
-
-# names that used to be re-exported here verbatim; resolve them lazily
-# (PEP 562) through ONE deprecation path instead of three silent aliases
-_LEGACY = {
-    "pareto_front": ("repro.opt.frontier", "pareto_front"),
-    "grid_points": ("repro.opt.space", "grid_points"),
-    "SWEEPABLE": ("repro.opt.space", "SWEEPABLE"),
-}
-
-
-def __getattr__(name: str):
-    if name in _LEGACY:
-        mod, attr = _LEGACY[name]
-        warn_once(f"repro.fleet.sweep.{name}",
-                  f"repro.fleet.sweep.{name} is deprecated; import "
-                  f"{attr} from {mod} instead")
-        return getattr(importlib.import_module(mod), attr)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def sweep(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,

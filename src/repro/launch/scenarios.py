@@ -76,6 +76,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--force-oracle", action="store_true",
                     help="run the discrete-event oracle even for scenarios "
                          "flagged infeasible at this scale")
+    ap.add_argument("--cells", type=int, default=None, metavar="N",
+                    help="override a cells scenario's cell count (ignored "
+                         "with a note for scenarios without a topology)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record the oracle leg's request/instance/node "
                          "lifecycle spans and write a Chrome-trace JSON "
@@ -156,6 +159,19 @@ def main(argv=None) -> int:
                       f"--tier {tier.name} ignored for it", file=sys.stderr)
             else:
                 target = tiered
+        if args.cells is not None:
+            sc_obj = get_scenario(target) if isinstance(target, str) \
+                else target
+            if sc_obj.cells is None:
+                print(f"note: {name} has no cell topology; --cells ignored "
+                      f"for it", file=sys.stderr)
+            else:
+                import dataclasses
+                # the topology re-validates, so a fail_cell or trigger
+                # aimed at a now-missing cell errors loudly here
+                target = dataclasses.replace(
+                    sc_obj, cells=dataclasses.replace(
+                        sc_obj.cells, cell_count=args.cells))
         detail: dict = {}
         sc_rows = run_scenario(target, detail=detail,
                                spec=RunSpec(engines=engines,

@@ -35,7 +35,7 @@ import numpy as np
 
 from repro.core.eventsim import SimConfig
 from repro.core.policy_api import get_family
-from repro.core.runspec import RunSpec, resolve_spec
+from repro.core.runspec import RunSpec
 from repro.core.simjax import (_PFLEET, JaxFleet, JaxPolicy,
                                _chunked_summaries, stack_params)
 from repro.core.trace import Trace
@@ -55,7 +55,8 @@ def evaluate_points(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
                     dt: float = 1.0, node_type: Optional[NodeType] = None,
                     billing: Union[str, BillingProfile, None] = None,
                     warmup_frac: float = 0.5,
-                    chunk_ticks: int = 512, devices: int = 0) -> list[dict]:
+                    chunk_ticks: int = 512, devices: int = 0, *,
+                    cells=None) -> list[dict]:
     """Run every parameter point through one vmapped chunked scan; return
     one row per point: {params..., metrics..., cost fields...}.  Rows are
     billed through the ``billing`` profile (``repro.fleet.billing``;
@@ -73,6 +74,15 @@ def evaluate_points(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
     vector behaved; ``evaluate_scenario`` collapses such duplicates before
     simulating.  Every override is bounds-checked against its declaration,
     so a NaN or out-of-range sweep value fails loudly here.
+
+    ``cells`` switches the batch to the multi-region engine: a
+    ``(traces, topology)`` pair (per-cell trace partition +
+    ``repro.cells.CellTopology``) routes the whole point batch through
+    ``repro.cells.fluid.cells_chunked_summaries`` instead of the
+    single-cell scan.  ``trace`` is then only consulted for metadata; all
+    points share ONE topology — ``evaluate_scenario`` groups points by
+    their (structural) ``cell_count`` before calling here.  Incompatible
+    with ``devices`` sharding.
     """
     pts = list(points) if points else [{}]
     # validate against the LIVE registry (sweepable_knobs()), not the
@@ -111,11 +121,23 @@ def evaluate_points(trace: Trace, policy: JaxPolicy, fleet: JaxFleet,
     pols = stack_params(trees)
 
     prof = resolve_profile(billing)
-    summaries = _chunked_summaries(
-        trace, policy, pols, fleets, sim=sim, dt=dt, num_nodes=0,
-        provision_s=fleet.provision_s, has_fleet=True,
-        chunk_ticks=chunk_ticks, warmup_frac=warmup_frac, nbins=256,
-        billing=prof, devices=devices)
+    if cells is not None:
+        if devices > 0:
+            raise ValueError("cells sweeps do not shard over devices: the "
+                             "cell axis owns the scan's leading dimension")
+        from repro.cells.fluid import cells_chunked_summaries
+        cell_traces, topo = cells
+        summaries = cells_chunked_summaries(
+            cell_traces, topo, policy, pols, fleets, sim=sim, dt=dt,
+            num_nodes=0, provision_s=fleet.provision_s, has_fleet=True,
+            chunk_ticks=chunk_ticks, warmup_frac=warmup_frac, nbins=256,
+            billing=prof)
+    else:
+        summaries = _chunked_summaries(
+            trace, policy, pols, fleets, sim=sim, dt=dt, num_nodes=0,
+            provision_s=fleet.provision_s, has_fleet=True,
+            chunk_ticks=chunk_ticks, warmup_frac=warmup_frac, nbins=256,
+            billing=prof, devices=devices)
 
     if node_type is None:
         # derive a shape from the fleet's node size at the default $/GB-hour
@@ -164,9 +186,7 @@ def _effective_key(point: dict, family: str) -> tuple:
 
 
 def evaluate_scenario(scenario: Union[str, Scenario], points: Sequence[dict],
-                      scale: Optional[float] = None,
                       sim: Optional[SimConfig] = None,
-                      billing: Union[str, BillingProfile, None] = None,
                       dedupe: bool = True, *,
                       spec: Optional[RunSpec] = None) -> list[dict]:
     """Evaluate every point against one scenario's workload; one row per
@@ -174,30 +194,33 @@ def evaluate_scenario(scenario: Union[str, Scenario], points: Sequence[dict],
     scenario identity so downstream reducers can join across scenarios.
 
     Run configuration (scale / billing / devices / cluster) lands through
-    ``spec`` (``repro.core.runspec.RunSpec``); the loose ``scale=`` /
-    ``billing=`` keywords keep working with a once-per-callsite
-    DeprecationWarning.  ``sim`` and ``dedupe`` are genuine per-call
-    arguments.  ``spec.cluster`` > 0 buckets the long tail into weighted
-    super-functions before the sweep (throttle-then-cluster); ``devices``
-    shards the point batch (see ``evaluate_points``).
+    ``spec`` (``repro.core.runspec.RunSpec``) only — the loose ``scale=``
+    / ``billing=`` shim keywords were removed.  ``sim`` and ``dedupe``
+    are genuine per-call arguments.  ``spec.cluster`` > 0 buckets the
+    long tail into weighted super-functions before the sweep
+    (throttle-then-cluster); ``devices`` shards the point batch (see
+    ``evaluate_points``).
 
-    ``billing`` defaults to the scenario's own profile (a spot scenario
-    carries its tier discount there); a profile given by name inherits
-    that discount.  The profile's cpu-throttle term stretches the trace
-    BEFORE simulation, so a provider profile is a different workload, not
-    just a different invoice."""
-    spec = resolve_spec("repro.opt.evaluate_scenario", spec,
-                        {"scale": scale, "billing": billing})
+    ``spec.billing`` defaults to the scenario's own profile (a spot
+    scenario carries its tier discount there); a profile given by name
+    inherits that discount.  The profile's cpu-throttle term stretches
+    the trace BEFORE simulation, so a provider profile is a different
+    workload, not just a different invoice."""
+    spec = spec if spec is not None else RunSpec()
+    if not isinstance(spec, RunSpec):
+        raise TypeError("evaluate_scenario() spec= must be a RunSpec, got "
+                        f"{type(spec).__name__}")
     scale = spec.scale
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     sim = sim or SimConfig(tick_s=sc.policy.tick_s)
     prof = resolve_profile(spec.billing, sc.billing)
     policy = sc.policy.to_jax()
     fleet = default_fleet(sc)
-    trace = apply_throttle(sc.build_trace(scale), prof)
-    if spec.cluster > 0:
-        from repro.scenarios.cluster import cluster_functions
-        trace = cluster_functions(trace, spec.cluster, tick_s=sim.tick_s)
+    cells_active = sc.cells is not None and not sc.cells.is_trivial
+    if cells_active and spec.cluster > 0:
+        raise ValueError(f"scenario {sc.name!r}: cells topologies partition "
+                         f"an event stream — clustered sweeps cannot carry "
+                         f"them")
 
     pts = list(points)
     if dedupe:
@@ -214,17 +237,52 @@ def evaluate_scenario(scenario: Union[str, Scenario], points: Sequence[dict],
         order, backing = pts, list(range(len(pts)))
 
     t0 = time.time()
-    uniq_rows = evaluate_points(trace, policy, fleet, order, sim=sim,
-                                dt=sim.tick_s, billing=prof,
-                                chunk_ticks=sc.chunk_ticks,
-                                devices=spec.devices)
+    if cells_active:
+        # ``cell_count`` is STRUCTURAL: it changes the trace partition, not
+        # just traced math, so points are grouped by its rounded value and
+        # each group runs one batched multi-cell scan over its own
+        # partition.  (``route_skew`` overrides stay traced — they steer
+        # failover/spill preference; the origin partition keeps the
+        # topology's static skew.)
+        from repro.cells.topology import build_cell_traces
+        uniq_rows: list = [None] * len(order)
+        base_count = sc.cells.cell_count
+        groups: dict[int, list[int]] = {}
+        for i, p in enumerate(order):
+            c = int(round(p.get("cell_count", base_count)))
+            groups.setdefault(c, []).append(i)
+        n_functions = 0
+        for c, idxs in sorted(groups.items()):
+            topo = (sc.cells if c == base_count
+                    else dataclasses.replace(sc.cells, cell_count=c))
+            cell_traces = [apply_throttle(t, prof) for t in
+                           build_cell_traces(dataclasses.replace(
+                               sc, cells=topo), scale)]
+            n_functions = cell_traces[0].num_functions
+            sub = evaluate_points(cell_traces[0], policy, fleet,
+                                  [order[i] for i in idxs], sim=sim,
+                                  dt=sim.tick_s, billing=prof,
+                                  chunk_ticks=sc.chunk_ticks,
+                                  cells=(cell_traces, topo))
+            for i, r in zip(idxs, sub):
+                uniq_rows[i] = r
+    else:
+        trace = apply_throttle(sc.build_trace(scale), prof)
+        if spec.cluster > 0:
+            from repro.scenarios.cluster import cluster_functions
+            trace = cluster_functions(trace, spec.cluster, tick_s=sim.tick_s)
+        n_functions = trace.num_functions
+        uniq_rows = evaluate_points(trace, policy, fleet, order, sim=sim,
+                                    dt=sim.tick_s, billing=prof,
+                                    chunk_ticks=sc.chunk_ticks,
+                                    devices=spec.devices)
     wall = time.time() - t0
     rows = []
     for pid, p in enumerate(pts):
         base = uniq_rows[backing[pid]]
         rows.append({**base, **p, "point_id": pid, "scenario": sc.name,
                      "scale": scale, "policy_kind": sc.policy.kind,
-                     "num_functions": trace.num_functions,
+                     "num_functions": n_functions,
                      "sims": len(order), "stage_wall_s": round(wall, 3)})
     return rows
 

@@ -6,11 +6,15 @@ flash crowds, multi-tenant interference, the paper's own 2000-function /
 ~3.5M-invocation KWOK-scale replay (Fig. 9), a 100k-function rate-based
 planet-scale push of the same figure, a fleet-cost stress run
 for the two-level autoscaling layer (Fig. 10 territory), and a spot-fleet
-preemption storm for the capacity-tier layer (Fig. 12 territory).
+preemption storm for the capacity-tier layer (Fig. 12 territory) — plus
+the multi-region cells family (``repro.cells``, Fig. 14 territory): a
+regional failover storm, a follow-the-sun scheduled-trigger rotation, and
+a correlated cross-region spot-reclaim storm.
 """
 
 from __future__ import annotations
 
+from repro.cells import CellTopology, ScheduledTrigger
 from repro.core.simjax import JaxFleet
 from repro.core.trace import TraceConfig
 from repro.fleet.billing import IDEAL
@@ -169,5 +173,86 @@ register(Scenario(
                    max_nodes=64, util_target=0.7, warm_frac=0.25,
                    cooldown_s=120.0,
                    reclaim_notice_s=SPOT_DEFAULT.reclaim_notice_s),
+    billing=IDEAL.with_spot_discount(SPOT_DEFAULT.discount),
+))
+
+register(Scenario(
+    name="region_failover",
+    description="Three routed cells (skewed origin weights) and the "
+                "largest one dies 60% into the run: its queued + in-flight "
+                "work re-queues on the survivors and its later traffic "
+                "redirects along the failover preference — the "
+                "failover-storm cost of multi-region warm pools.",
+    figure="new Fig. 14 (failover-storm overhead)",
+    # 120 functions (not 240): the skewed partition makes the smallest
+    # cell's per-function traffic ~6x sparser than the single-cell
+    # scenarios, and the keepalive renewal model's sparse-regime error
+    # compounds with the failover transient.  Denser per-function rates +
+    # a mild warp keep the seed-averaged p99/memory parity inside the 15%
+    # band (creation rate is out-of-band for partitioned warped traffic —
+    # the fig9_production limitation, see EXPERIMENTS.md).
+    base=TraceConfig(num_functions=120, duration_s=3600,
+                     target_total_rps=36.0, burst_amp=0.0, seed=31),
+    transforms=(TimeWarp(period_frac=0.5, depth=0.4),),
+    policy=PolicySpec(kind="cells", keepalive_s=600,
+                      extra={"spot_fraction": 0.0, "hazard_per_hour": 0.0,
+                             "cell_count": 3.0, "spill_threshold": 0.0,
+                             "route_skew": 0.5}),
+    fleet=JaxFleet(node_memory_mb=16_384.0, provision_s=60.0, min_nodes=1,
+                   max_nodes=32, util_target=0.7, warm_frac=0.25,
+                   cooldown_s=120.0),
+    cells=CellTopology(cell_count=3, route_skew=0.5, fail_cell=0,
+                       fail_frac=0.6),
+))
+
+register(Scenario(
+    name="follow_the_sun",
+    description="Three equal cells, one diurnal wave phase-staggered a "
+                "third of a cycle apart, and a scheduled (cron-style) "
+                "trigger pre-provisioning each region before its morning: "
+                "the otter-style scheduled-scaling layer, measured as "
+                "keeping-warm overhead.",
+    figure="new Fig. 14 (scheduled pre-provisioning)",
+    base=TraceConfig(num_functions=240, duration_s=3600,
+                     target_total_rps=36.0, burst_amp=0.0, seed=32),
+    transforms=(TimeWarp(period_frac=1.0, depth=0.7),),
+    policy=PolicySpec(kind="cells", keepalive_s=600,
+                      extra={"spot_fraction": 0.0, "hazard_per_hour": 0.0,
+                             "cell_count": 3.0, "spill_threshold": 0.0,
+                             "route_skew": 0.0}),
+    fleet=JaxFleet(node_memory_mb=16_384.0, provision_s=60.0, min_nodes=1,
+                   max_nodes=32, util_target=0.7, warm_frac=0.25,
+                   cooldown_s=120.0),
+    cells=CellTopology(
+        cell_count=3, phase_spread=1.0,
+        scheduled=(ScheduledTrigger(cell=0, start_frac=0.00,
+                                    end_frac=0.35, floor=6),
+                   ScheduledTrigger(cell=1, start_frac=0.30,
+                                    end_frac=0.65, floor=6),
+                   ScheduledTrigger(cell=2, start_frac=0.60,
+                                    end_frac=0.95, floor=6))),
+))
+
+register(Scenario(
+    name="cell_hazard_corr",
+    description="Four cells buying 60% spot capacity under a reclaim "
+                "hazard that is 70% CORRELATED across regions: one shared "
+                "storm process reclaims every cell's spot nodes together, "
+                "so failover headroom planned against independent hazards "
+                "meets simultaneous cross-region eviction storms.",
+    figure="new Fig. 14 (correlated reclaim storms)",
+    base=TraceConfig(num_functions=240, duration_s=3600,
+                     target_total_rps=36.0, burst_amp=0.0, seed=33),
+    transforms=(RateScale(1.1),),
+    policy=PolicySpec(kind="cells", keepalive_s=600,
+                      extra={"spot_fraction": 0.6,
+                             "hazard_per_hour": SPOT_DEFAULT.hazard_per_hour,
+                             "cell_count": 4.0, "spill_threshold": 0.0,
+                             "route_skew": 0.0}),
+    fleet=JaxFleet(node_memory_mb=16_384.0, provision_s=60.0, min_nodes=1,
+                   max_nodes=48, util_target=0.7, warm_frac=0.25,
+                   cooldown_s=120.0,
+                   reclaim_notice_s=SPOT_DEFAULT.reclaim_notice_s),
+    cells=CellTopology(cell_count=4, hazard_corr=0.7),
     billing=IDEAL.with_spot_discount(SPOT_DEFAULT.discount),
 ))

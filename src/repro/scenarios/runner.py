@@ -22,7 +22,7 @@ from typing import Optional, Sequence, Union
 from repro.core.cluster import Cluster
 from repro.core.eventsim import EventSim, SimConfig
 from repro.core.metrics import compute
-from repro.core.runspec import RunSpec, resolve_spec
+from repro.core.runspec import RunSpec
 from repro.core.simjax import JaxFleet, simulate_chunked
 from repro.fleet.billing import (BillingProfile, apply_throttle, bill_sim,
                                  bill_summary, resolve_profile)
@@ -109,6 +109,13 @@ def _billing_node_type(sc: Scenario) -> NodeType:
 def _run_eventsim(sc: Scenario, trace, sim: SimConfig, obs=None,
                   detail: Optional[dict] = None,
                   billing: Optional[BillingProfile] = None) -> dict:
+    if isinstance(trace, list):
+        # multi-region cells: per-cell EventSim replicas + failover
+        # (lifecycle tracing via ``obs`` is a single-cluster feature and
+        # is not threaded through the cell replicas)
+        from repro.cells.oracle import run_cells_eventsim
+        return run_cells_eventsim(sc, trace, sim, detail=detail,
+                                  billing=billing)
     if sc.fleet is not None:
         cluster = Cluster(max(1, int(sc.fleet.min_nodes)),
                           node_memory_mb=sc.fleet.node_memory_mb)
@@ -130,13 +137,27 @@ def _run_eventsim(sc: Scenario, trace, sim: SimConfig, obs=None,
 
 def _run_simjax(sc: Scenario, trace, sim: SimConfig, telemetry: int = 0,
                 billing: Optional[BillingProfile] = None,
-                devices: int = 0) -> dict:
-    # dt = the oracle's reconcile tick: both engines share one control period
-    row = simulate_chunked(trace, sc.policy.to_jax(), sim=sim,
-                           dt=sim.tick_s, num_nodes=sc.num_nodes,
-                           fleet=sc.fleet, chunk_ticks=sc.chunk_ticks,
-                           spec=RunSpec(telemetry=telemetry, billing=billing,
-                                        devices=devices))
+                devices: int = 0, detail: Optional[dict] = None) -> dict:
+    if isinstance(trace, list):
+        # multi-region cells: a leading cell axis in the chunked scan
+        # (telemetry slots are a single-cluster feature; per-cell
+        # attribution lands in detail["cell_rows"] instead)
+        if devices > 0:
+            raise ValueError("cells scenarios do not shard over devices "
+                             "yet: the cell axis owns the scan's batch "
+                             "leading dimension")
+        from repro.cells.fluid import run_cells_fluid
+        row = run_cells_fluid(sc, trace, sim, billing=billing,
+                              detail=detail)
+    else:
+        # dt = the oracle's reconcile tick: both engines share one control
+        # period
+        row = simulate_chunked(trace, sc.policy.to_jax(), sim=sim,
+                               dt=sim.tick_s, num_nodes=sc.num_nodes,
+                               fleet=sc.fleet, chunk_ticks=sc.chunk_ticks,
+                               spec=RunSpec(telemetry=telemetry,
+                                            billing=billing,
+                                            devices=devices))
     if billing is not None:
         row = {**row, **bill_summary(row, billing,
                                      node_type=_billing_node_type(sc),
@@ -145,13 +166,8 @@ def _run_simjax(sc: Scenario, trace, sim: SimConfig, telemetry: int = 0,
 
 
 def run_scenario(scenario: Union[str, Scenario],
-                 engines: Optional[Sequence[str]] = None,
-                 scale: Optional[float] = None,
                  sim: Optional[SimConfig] = None,
-                 force_oracle: Optional[bool] = None, obs=None,
-                 telemetry: Optional[int] = None,
                  detail: Optional[dict] = None,
-                 billing: Union[str, BillingProfile, None] = None,
                  *, spec: Optional[RunSpec] = None) -> list[dict]:
     """Build the scenario trace once and replay it through each engine.
 
@@ -162,10 +178,10 @@ def run_scenario(scenario: Union[str, Scenario],
     mean-rps threshold below which functions are bucketed into weighted
     super-functions, see ``repro.scenarios.cluster``), and ``tier`` (a
     capacity-tier name or ``CapacityTier``, applied via ``apply_tier``;
-    a scenario that cannot express a tier raises).  The loose keyword
-    forms remain accepted with a once-per-callsite DeprecationWarning;
-    mixing them with ``spec`` is an error.  ``sim`` and ``detail`` are
-    genuine per-call arguments, not run configuration.
+    a scenario that cannot express a tier raises).  ``spec`` is the ONLY
+    way to pass run configuration — the transitional loose keyword forms
+    were removed.  ``sim`` and ``detail`` are genuine per-call arguments,
+    not run configuration.
 
     The oracle leg is skipped for scenarios flagged ``oracle_ok=False``
     unless the run is shrunk (scale <= 0.25) or ``force_oracle`` is set —
@@ -189,10 +205,10 @@ def run_scenario(scenario: Union[str, Scenario],
     NAME inherits the scenario's spot discount (the tier is workload
     state, not provider semantics); a profile OBJECT is used verbatim.
     """
-    spec = resolve_spec("repro.scenarios.run_scenario", spec,
-                        {"engines": engines, "scale": scale,
-                         "force_oracle": force_oracle, "obs": obs,
-                         "telemetry": telemetry, "billing": billing})
+    spec = spec if spec is not None else RunSpec()
+    if not isinstance(spec, RunSpec):
+        raise TypeError("run_scenario() spec= must be a RunSpec, got "
+                        f"{type(spec).__name__}")
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if spec.tier is not None:
         tier = (get_tier(spec.tier) if isinstance(spec.tier, str)
@@ -209,6 +225,13 @@ def run_scenario(scenario: Union[str, Scenario],
     # both engines run the same control-loop period (see PolicySpec.tick_s)
     sim = sim or SimConfig(tick_s=sc.policy.tick_s)
     rate_based = sc.rate_trace or spec.cluster > 0
+    # a trivial topology (one cell, no failure/triggers/correlation) runs
+    # the plain single-cluster path — byte-identical to cells=None
+    cells_active = sc.cells is not None and not sc.cells.is_trivial
+    if cells_active and rate_based:
+        raise ValueError(
+            f"scenario {sc.name!r}: cells topologies partition an event "
+            f"stream — rate_trace / clustered runs cannot carry them")
     runnable = []
     for engine in spec.engines:
         if engine not in ENGINES:
@@ -219,18 +242,27 @@ def run_scenario(scenario: Union[str, Scenario],
         runnable.append(engine)
     if not runnable:       # don't synthesize a multi-million-event trace
         return []          # just to run nothing
-    trace = sc.build_trace(spec.scale)
-    if bp is not None:
-        # the throttled trace is SHARED: both engines replay the same
-        # memory-stretched durations, so parity judges the billing model,
-        # not a one-sided duration transform (identity under ``ideal``)
-        trace = apply_throttle(trace, bp)
-    if spec.cluster > 0:
-        # cluster AFTER throttling: the throttle stretches durations the
-        # bucket key quantizes on, so the order is load-bearing
-        trace = cluster_functions(trace, spec.cluster, tick_s=sim.tick_s)
+    if cells_active:
+        from repro.cells.topology import build_cell_traces
+        trace = build_cell_traces(sc, spec.scale)
+        if bp is not None:
+            trace = [apply_throttle(t, bp) for t in trace]
+        meta_fns, meta_inv = trace[0].num_functions, sum(map(len, trace))
+    else:
+        trace = sc.build_trace(spec.scale)
+        if bp is not None:
+            # the throttled trace is SHARED: both engines replay the same
+            # memory-stretched durations, so parity judges the billing
+            # model, not a one-sided duration transform (identity under
+            # ``ideal``)
+            trace = apply_throttle(trace, bp)
+        if spec.cluster > 0:
+            # cluster AFTER throttling: the throttle stretches durations
+            # the bucket key quantizes on, so the order is load-bearing
+            trace = cluster_functions(trace, spec.cluster, tick_s=sim.tick_s)
+        meta_fns, meta_inv = trace.num_functions, len(trace)
     meta = {"scenario": sc.name, "scale": spec.scale, "figure": sc.figure,
-            "num_functions": trace.num_functions, "invocations": len(trace)}
+            "num_functions": meta_fns, "invocations": meta_inv}
     if bp is not None:
         meta["billing"] = bp.name
     rows = []
@@ -241,7 +273,8 @@ def run_scenario(scenario: Union[str, Scenario],
                                     detail=detail, billing=bp)
         else:
             metrics = _run_simjax(sc, trace, sim, telemetry=spec.telemetry,
-                                  billing=bp, devices=spec.devices)
+                                  billing=bp, devices=spec.devices,
+                                  detail=detail)
             if detail is not None:
                 detail["fluid_summary"] = metrics
         rows.append({**meta, "engine": engine,
@@ -273,10 +306,9 @@ def billed_parity(scenario: Union[str, Scenario],
 
 
 def frontier(scenarios: Optional[Sequence[str]] = None,
-             scale: Optional[float] = None, space=None, spot_check: int = 0,
+             space=None, spot_check: int = 0,
              log=None, coarse_frac: float = 0.1, eps: float = 0.15,
              survivor_cap: int = 12,
-             billing: Union[str, BillingProfile, None] = None,
              telemetry=None, *, spec: Optional[RunSpec] = None):
     """Scenario-side entry point into the frontier engine: search the joint
     (policy x fleet) space across the given scenarios (default: every
@@ -284,20 +316,22 @@ def frontier(scenarios: Optional[Sequence[str]] = None,
     optionally oracle-checking ``spot_check`` sampled winners per scenario.
 
     Run configuration (scale / billing / devices / cluster) lands through
-    ``spec``; the loose ``scale=`` / ``billing=`` keywords keep working
-    with a DeprecationWarning.  The search-shape knobs (``space``,
-    ``coarse_frac``, ``eps``, ``survivor_cap``, ``spot_check``) and the
-    sinks (``log``, ``telemetry`` — a ``repro.obs.RunTelemetry``) are
-    genuine parameters of THIS function, spelled out explicitly so a typo
-    fails as a TypeError instead of vanishing into ``**kw``.
+    ``spec`` only — the loose ``scale=`` / ``billing=`` shim keywords were
+    removed.  The search-shape knobs (``space``, ``coarse_frac``, ``eps``,
+    ``survivor_cap``, ``spot_check``) and the sinks (``log``,
+    ``telemetry`` — a ``repro.obs.RunTelemetry``) are genuine parameters
+    of THIS function, spelled out explicitly so a typo fails as a
+    TypeError instead of vanishing into ``**kw``.
 
     Returns ``(FrontierResult, spot_records)``; see ``repro.opt.search``.
     (Imported lazily: ``repro.opt`` builds on this package.)
     """
     from repro.opt.search import (DEFAULT_SPACE, frontier_search,
                                   oracle_spot_check)
-    spec = resolve_spec("repro.scenarios.frontier", spec,
-                        {"scale": scale, "billing": billing})
+    spec = spec if spec is not None else RunSpec()
+    if not isinstance(spec, RunSpec):
+        raise TypeError("frontier() spec= must be a RunSpec, got "
+                        f"{type(spec).__name__}")
     result = frontier_search(scenarios, space=space or DEFAULT_SPACE,
                              scale=spec.scale, coarse_frac=coarse_frac,
                              eps=eps, survivor_cap=survivor_cap,

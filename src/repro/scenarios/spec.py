@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Optional, Tuple, Union
 
+from repro.cells.topology import CellTopology
 from repro.core.policies import Policy
 from repro.core.policy_api import get_family
 from repro.core.simjax import JaxFleet, JaxPolicy
@@ -94,6 +95,11 @@ class Scenario:
     # are fluid-only (no event stream for the oracle to replay) and cannot
     # stack event-level transforms.
     rate_trace: bool = False
+    # multi-region cells: a non-trivial topology partitions the workload
+    # across N routed cells with failover + trigger semantics; both engines
+    # dispatch to repro.cells (mutually exclusive with rate_trace and the
+    # sharded-cluster path — the runner enforces this)
+    cells: Optional[CellTopology] = None
 
     def scaled_config(self, scale: float = 1.0) -> TraceConfig:
         """Shrink the workload isotropically (functions, duration, load) for

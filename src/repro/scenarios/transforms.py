@@ -38,17 +38,21 @@ def _resorted(trace: Trace, t, fn, dur, duration_s=None) -> Trace:
 
 @dataclasses.dataclass(frozen=True)
 class TimeWarp(Transform):
-    """Monotone remap of arrival times g(t) = t - A sin(2πt/period): local
-    arrival rate is multiplied by 1/g'(t) ∈ [1/(1+depth), 1/(1-depth)], so
-    the SAME invocations arrive in diurnal waves — total load is preserved,
-    only its placement in time changes (Shahrad'20's diurnal cycles)."""
+    """Monotone remap of arrival times g(t) = t - A sin(2πt/period + φ):
+    local arrival rate is multiplied by 1/g'(t) ∈ [1/(1+depth), 1/(1-depth)],
+    so the SAME invocations arrive in diurnal waves — total load is
+    preserved, only its placement in time changes (Shahrad'20's diurnal
+    cycles).  ``phase`` shifts where in the cycle the run starts; the
+    multi-region cells layer (repro.cells) staggers it per cell to model
+    follow-the-sun offsets.  phase=0 is the historical transform exactly."""
     period_frac: float = 0.5       # cycle length as a fraction of duration
     depth: float = 0.8             # 0 = identity; must stay < 1 for monotone g
+    phase: float = 0.0             # radians; per-cell follow-the-sun offset
 
     def __call__(self, trace, cfg, rng):
         period = max(self.period_frac * trace.duration_s, 1e-9)
         amp = self.depth * period / (2 * np.pi)
-        t = trace.t - amp * np.sin(2 * np.pi * trace.t / period)
+        t = trace.t - amp * np.sin(2 * np.pi * trace.t / period + self.phase)
         t = np.clip(t, 0.0, trace.duration_s)
         return _resorted(trace, t, trace.fn, trace.dur)
 

@@ -10,6 +10,7 @@ import pytest
 
 from repro.core.cluster import Cluster
 from repro.core.eventsim import EventSim, SimConfig
+from repro.core.runspec import RunSpec
 from repro.core.trace import TraceConfig, synthesize
 from repro.fleet import (AWS_LAMBDA, GCR, IDEAL, BillingProfile, NodeType,
                          apply_throttle, bill_sim, cost_from_sim,
@@ -101,7 +102,37 @@ def test_norm_ppf_matches_standard_quantiles():
                                                             abs=1e-5)
 
 
-@pytest.mark.parametrize("profile", [AWS_LAMBDA, GCR])
+def test_azure_minimum_bill_censors_hard():
+    # the Consumption plan's 100 ms floor on 1 ms granularity: a 3 ms
+    # execution bills 100 ms, a 101 ms one bills exactly 101 ms
+    azure = get_profile("azure_functions")
+    assert azure.min_billed_s == pytest.approx(0.1)
+    assert azure.billed_seconds(0.003) == pytest.approx(0.1)
+    assert azure.billed_seconds(0.101) == pytest.approx(0.101)
+    assert azure.per_request > 0.0 and azure.per_gb_s > 0.0
+    # no warm tier and no throttle on the Consumption plan
+    assert azure.warm_gb_s_rate == 0.0 and azure.throttle_full_mb == 0.0
+
+
+def test_azure_registration_leaves_ideal_bitwise(trace):
+    # bitwise-ideal regression guard: registering azure_functions must not
+    # perturb the ideal profile's bill by a single ulp
+    kw = dict(node_seconds=5432.1, cpu_worker_overhead_s=321.0,
+              cpu_master_overhead_s=77.7, idle_node_share=0.4,
+              completed=1234, node_type=NodeType(price_per_hour=0.7),
+              spot_node_seconds=1000.0)
+    base = cost_report(**kw)
+    bill = IDEAL.with_spot_discount(0.0).bill(**kw)
+    for k in ("node_hours", "node_cost", "master_cost", "total_cost",
+              "cost_per_million"):
+        assert getattr(bill, k) == getattr(base, k), k
+    # and ideal duration billing stays the identity
+    d = np.asarray(trace.dur[:64])
+    assert np.array_equal(IDEAL.billed_seconds(d), d)
+
+
+@pytest.mark.parametrize("profile", [AWS_LAMBDA, GCR,
+                                     get_profile("azure_functions")])
 def test_expected_billing_matches_exact_rounding_on_trace(trace, profile):
     # the fluid side's analytic expectation vs the oracle side's exact
     # per-record rounding, on the SAME sampled durations: the trace's
@@ -152,7 +183,8 @@ def test_throttle_stretches_and_caps(trace):
 
 
 def test_registry_lists_and_friendly_error():
-    assert {"ideal", "aws_lambda", "gcr"} <= set(list_profiles())
+    assert {"ideal", "aws_lambda", "gcr",
+            "azure_functions"} <= set(list_profiles())
     with pytest.raises(KeyError, match="registered"):
         get_profile("azure")
 
@@ -174,6 +206,7 @@ def test_cli_unknown_billing_exits_2(capsys):
     assert main(["--scenario", "cold_tail", "--billing", "nope"]) == 2
     err = capsys.readouterr().err
     assert "aws_lambda" in err and "gcr" in err
+    assert "azure_functions" in err    # new profiles list automatically
     from repro.launch.frontier import main as fmain
     assert fmain(["--scenario", "cold_tail", "--billing", "nope"]) == 2
 
@@ -212,9 +245,11 @@ def test_ideal_oracle_bill_is_bitwise_cost_from_sim(trace):
 def test_ideal_billing_leaves_both_engines_bitwise_unchanged():
     # billing="ideal" must not perturb a single metric on either engine:
     # no throttle, weight-1 node bill, zero provider terms
-    plain = run_scenario("cold_tail", scale=0.1, force_oracle=True)
-    billed = run_scenario("cold_tail", scale=0.1, force_oracle=True,
-                          billing="ideal")
+    plain = run_scenario("cold_tail",
+                         spec=RunSpec(scale=0.1, force_oracle=True))
+    billed = run_scenario("cold_tail",
+                          spec=RunSpec(scale=0.1, force_oracle=True,
+                                       billing="ideal"))
     for p, b in zip(plain, billed):
         assert p["engine"] == b["engine"]
         for k in ("slowdown_geomean_p99", "normalized_memory",
@@ -229,8 +264,9 @@ def test_ideal_billing_leaves_both_engines_bitwise_unchanged():
 
 
 def test_provider_billing_emits_provider_terms():
-    rows = run_scenario("cold_tail", scale=0.1, force_oracle=True,
-                        billing="aws_lambda")
+    rows = run_scenario("cold_tail",
+                        spec=RunSpec(scale=0.1, force_oracle=True,
+                                     billing="aws_lambda"))
     assert len(rows) == 2
     for r in rows:
         assert r["billing"] == "aws_lambda"

@@ -1,0 +1,304 @@
+"""Multi-region cells: router flux conservation, topology validation, the
+desired-state convergence policy, trivial-topology equivalence, and the
+oracle-vs-fluid parity band for the three Fig. 14 scenarios."""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.cells import (CellTopology, ConvergenceFleetPolicy,
+                         ReactiveTrigger, ScheduledTrigger, build_cell_traces)
+from repro.cells.traffic import (failover_dist, failover_dist_np,
+                                 flux_matrix, spill_fraction)
+from repro.core.eventsim import SimConfig
+from repro.core.runspec import RunSpec
+from repro.core.simjax import simulate_chunked
+from repro.core.trace import synthesize
+from repro.scenarios import get_scenario, parity_report, run_scenario
+
+
+# ---------------------------------------------------------------------------
+# router flux: mass conservation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alive,spill,free", [
+    ([1, 1, 1], [0.0, 0.0, 0.0], [4.0, 2.0, 1.0]),     # no spill
+    ([1, 1, 1], [0.5, 1.0, 0.2], [4.0, 2.0, 1.0]),     # heavy spill
+    ([1, 1, 1], [0.7, 0.7, 0.7], [0.0, 0.0, 0.0]),     # no free slots: home
+    ([0, 1, 1], [0.0, 0.3, 0.0], [0.0, 3.0, 1.0]),     # one cell dead
+    ([0, 0, 1], [1.0, 1.0, 1.0], [0.0, 0.0, 0.0]),     # only one survivor
+])
+def test_flux_matrix_rows_sum_to_one(alive, spill, free):
+    a = np.asarray(alive, np.float32)
+    fd = failover_dist(a, 0.5)
+    m = np.asarray(flux_matrix(a, np.asarray(spill, np.float32),
+                               np.asarray(free, np.float32), fd))
+    np.testing.assert_allclose(m.sum(axis=1), 1.0, atol=1e-6)
+    # a dead cell's row is exactly the failover distribution
+    for c, al in enumerate(alive):
+        if not al:
+            np.testing.assert_allclose(m[c], np.asarray(fd), atol=1e-6)
+    # routing an arrival matrix conserves total mass
+    arr = np.arange(1.0, 13.0, dtype=np.float32).reshape(3, 4)
+    routed = np.einsum("cd,cf->df", m, arr)
+    assert routed.sum() == pytest.approx(arr.sum(), rel=1e-6)
+
+
+def test_failover_dist_traced_matches_numpy():
+    for alive in ([1, 1, 1, 1], [0, 1, 0, 1], [0, 0, 0, 0]):
+        for skew in (0.0, 0.5, 2.0):
+            a = np.asarray(alive, np.float64)
+            np.testing.assert_allclose(
+                np.asarray(failover_dist(a.astype(np.float32), skew)),
+                failover_dist_np(a, skew), atol=1e-6)
+
+
+def test_spill_fraction_gating():
+    q = np.asarray([0.0, 50.0], np.float32)
+    arr = np.asarray([10.0, 10.0], np.float32)
+    slots = np.asarray([20.0, 20.0], np.float32)
+    # threshold 0 disables spill exactly, even with a huge backlog
+    assert np.asarray(spill_fraction(q, arr, slots, 0.0)).max() == 0.0
+    s = np.asarray(spill_fraction(q, arr, slots, 1.0))
+    assert s[0] == 0.0                       # under threshold: nothing spills
+    assert 0.0 < s[1] <= 1.0                 # overflow spills, clipped
+
+
+# ---------------------------------------------------------------------------
+# topology spec
+# ---------------------------------------------------------------------------
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError):
+        CellTopology(cell_count=0)
+    with pytest.raises(ValueError):
+        CellTopology(cell_count=2, fail_cell=2)
+    with pytest.raises(ValueError):
+        CellTopology(cell_count=2, fail_cell=0, fail_frac=1.5)
+    with pytest.raises(ValueError):
+        CellTopology(cell_count=2, hazard_corr=1.2)
+    with pytest.raises(ValueError):
+        CellTopology(cell_count=2,
+                     scheduled=(ScheduledTrigger(3, 0.1, 0.2, 4),))
+    with pytest.raises(ValueError):
+        ScheduledTrigger(0, 0.5, 0.4, 2)
+    with pytest.raises(ValueError):
+        ReactiveTrigger("t", util_high=0.0, change=2)
+
+
+def test_topology_triviality_and_weights():
+    assert CellTopology(cell_count=1).is_trivial
+    assert not CellTopology(cell_count=2).is_trivial
+    assert not CellTopology(cell_count=1, hazard_corr=0.5).is_trivial
+    assert not CellTopology(
+        cell_count=1,
+        reactive=(ReactiveTrigger("t", 0.9, 2),)).is_trivial
+    w = CellTopology(cell_count=4, route_skew=0.5).weights()
+    assert w.sum() == pytest.approx(1.0)
+    assert (np.diff(w) < 0).all()            # skewed toward low-index cells
+    u = CellTopology(cell_count=4).weights()
+    np.testing.assert_allclose(u, 0.25)
+
+
+def test_floor_schedule_matches_entries():
+    topo = CellTopology(cell_count=3,
+                        scheduled=(ScheduledTrigger(1, 0.25, 0.5, 6),
+                                   ScheduledTrigger(1, 0.40, 0.6, 9),
+                                   ScheduledTrigger(2, 0.00, 0.1, 3)))
+    dur, dt = 1000.0, 1.0
+    floors = topo.floor_schedule(1000, dt, dur)
+    assert floors.shape == (1000, 3)
+    assert floors[:, 0].max() == 0.0
+    assert floors[300, 1] == 6.0             # first window only
+    assert floors[450, 1] == 9.0             # overlap takes the max
+    assert floors[550, 1] == 9.0
+    assert floors[700, 1] == 0.0
+    assert topo.schedule_entries(1, dur) == ((250.0, 500.0, 6),
+                                             (400.0, 600.0, 9))
+    assert topo.schedule_entries(0, dur) == ()
+
+
+def test_build_cell_traces_partitions_exactly():
+    sc = get_scenario("region_failover")
+    traces = build_cell_traces(sc, scale=0.25)
+    assert len(traces) == sc.cells.cell_count
+    cfg = sc.scaled_config(0.25)
+    base = synthesize(cfg)
+    # TimeWarp preserves counts, so the partition conserves every invocation
+    assert sum(len(t) for t in traces) == len(base)
+    for t in traces:
+        assert t.num_functions == base.num_functions    # shared id space
+        assert t.profile is traces[0].profile           # one shared profile
+    # skewed origin weights actually bias the split
+    sizes = np.asarray([len(t) for t in traces], np.float64)
+    assert (np.diff(sizes) < 0).all()
+
+
+# ---------------------------------------------------------------------------
+# convergence policy: scheduled + reactive desired-state sources
+# ---------------------------------------------------------------------------
+
+
+def test_convergence_policy_matches_utilization_when_trigger_free():
+    pol = ConvergenceFleetPolicy(util_target=0.7, warm_frac=0.25)
+    used, node_mb = 40_000.0, 16_384.0
+    needed = math.ceil(used / (0.7 * node_mb) - 1e-9)
+    warm = math.ceil(0.25 * needed - 1e-9)
+    assert pol.desired(0.0, used, node_mb, nodes_now=4) == needed + warm
+    assert pol.last_source is None
+
+
+def test_convergence_policy_schedule_floor_binds():
+    pol = ConvergenceFleetPolicy(util_target=0.7, warm_frac=0.25,
+                                 schedule=((100.0, 200.0, 8),))
+    assert pol.desired(50.0, 0.0, 16_384.0, 1) < 8
+    assert pol.desired(150.0, 0.0, 16_384.0, 1) == 8
+    assert pol.last_source == "schedule"
+    assert pol.desired(250.0, 0.0, 16_384.0, 1) < 8    # window closed
+
+
+def test_convergence_policy_reactive_latch_hold_and_cooldown():
+    trig = ReactiveTrigger("burst", util_high=0.8, change=4, hold_s=50.0,
+                           cooldown_s=200.0)
+    pol = ConvergenceFleetPolicy(util_target=0.7, warm_frac=0.0,
+                                 reactive=(trig,))
+    node_mb = 10_000.0
+    # util = 0.9 >= 0.8: fires, latches nodes_now + change
+    assert pol.desired(10.0, 0.9 * 4 * node_mb, node_mb, 4) == 8
+    assert pol.last_source == "burst"
+    assert pol.last_cooldown_s == 200.0
+    # hold keeps the floor up even after utilization collapses
+    assert pol.desired(40.0, 0.0, node_mb, 8) == 8
+    # hold expired (10 + 50 = 60) and cooldown (until 210) blocks re-fire
+    assert pol.desired(100.0, 0.9 * 4 * node_mb, node_mb, 4) < 8
+    # re-armed after the cooldown: fires again from the current count
+    assert pol.desired(250.0, 0.9 * 6 * node_mb, node_mb, 6) == 10
+
+
+# ---------------------------------------------------------------------------
+# engines: trivial-topology equivalence and the C=1 bitwise guard
+# ---------------------------------------------------------------------------
+
+
+def test_cells_fluid_c1_is_bitwise_plain_scan():
+    """The whole cells machinery (leading cell axis, router einsum, alive
+    masks, per-cell accumulators) collapses EXACTLY to the plain chunked
+    scan at one healthy cell — not approximately: bit-for-bit."""
+    from repro.cells.fluid import run_cells_fluid
+    sc = dataclasses.replace(get_scenario("region_failover"),
+                             cells=CellTopology(cell_count=1))
+    traces = build_cell_traces(sc, scale=0.25)
+    sim = SimConfig(tick_s=sc.policy.tick_s)
+    cells_row = run_cells_fluid(sc, traces, sim)
+    plain_row = simulate_chunked(traces[0], sc.policy.to_jax(), sim=sim,
+                                 dt=sim.tick_s, num_nodes=sc.num_nodes,
+                                 fleet=sc.fleet, chunk_ticks=sc.chunk_ticks,
+                                 spec=RunSpec())
+    for key in ("slowdown_geomean_p99", "normalized_memory", "creation_rate",
+                "nodes_mean", "cpu_overhead", "completed"):
+        assert cells_row[key] == plain_row[key], key
+
+
+def test_trivial_topology_runs_plain_path():
+    """cells=CellTopology(1) with no failure/triggers/correlation is
+    declared trivial, so run_scenario keeps the single-cluster engines."""
+    sc = get_scenario("diurnal")
+    trivial = dataclasses.replace(sc, cells=CellTopology(cell_count=1))
+    rows = run_scenario(trivial, spec=RunSpec(scale=0.1,
+                                              engines=("simjax",)))
+    plain = run_scenario(sc, spec=RunSpec(scale=0.1, engines=("simjax",)))
+    assert rows[0]["slowdown_geomean_p99"] == \
+        plain[0]["slowdown_geomean_p99"]
+
+
+def test_oracle_failover_truncates_dead_cell():
+    """After the regional failure, the dead cell serves nothing: every
+    surviving record of the failed cell ends before the failure time, and
+    the survivors pick up its redirected traffic."""
+    sc = get_scenario("region_failover")
+    detail: dict = {}
+    rows = run_scenario(sc, detail=detail,
+                        spec=RunSpec(scale=0.1, engines=("eventsim",)))
+    assert len(rows) == 1 and rows[0]["engine"] == "eventsim"
+    cell_results = detail["cell_results"]
+    assert len(cell_results) == sc.cells.cell_count
+    duration = sc.scaled_config(0.1).duration_s
+    t_fail = sc.cells.fail_time(duration)
+    dead = cell_results[sc.cells.fail_cell]
+    assert all(r.end <= t_fail + 1e-6 for r in dead.records)
+    # survivors keep serving after the failure
+    assert any(r.end > t_fail
+               for c, res in enumerate(cell_results)
+               if c != sc.cells.fail_cell for r in res.records)
+
+
+# ---------------------------------------------------------------------------
+# oracle-vs-fluid parity (Fig. 14 acceptance band)
+# ---------------------------------------------------------------------------
+
+# NOTE the creation-rate exclusion: like fig9_production, the partitioned
+# warped traffic of region_failover makes per-cell per-function flows
+# sparse, which is out-of-band for the Poisson-renewal expiry model's
+# creation counter (a documented limitation — see EXPERIMENTS.md).  The
+# slowdown and memory gates carry the acceptance criterion.
+
+
+@pytest.mark.parametrize("name", ["follow_the_sun", "cell_hazard_corr"])
+def test_cells_scenario_parity(name):
+    rows = run_scenario(name, spec=RunSpec(scale=0.25))
+    assert {r["engine"] for r in rows} == {"eventsim", "simjax"}
+    gaps = parity_report(rows)
+    assert gaps["slowdown_geomean_p99"] <= 0.15, gaps
+    assert gaps["normalized_memory"] <= 0.15, gaps
+
+
+def test_region_failover_parity_smoke():
+    """One seed, loose band — the tight gate is the slow seed-averaged
+    test below."""
+    rows = run_scenario("region_failover", spec=RunSpec(scale=0.25))
+    gaps = parity_report(rows)
+    assert gaps["slowdown_geomean_p99"] <= 0.30, gaps
+    assert gaps["normalized_memory"] <= 0.30, gaps
+
+
+@pytest.mark.slow
+def test_region_failover_parity_seed_averaged():
+    """Acceptance: the failover-storm scenario holds the 15% band on the
+    SEED-AVERAGED slowdown and memory gaps (single seeds wander a few
+    points either side of the mean under the storm's resequencing)."""
+    sc = get_scenario("region_failover")
+    gaps = []
+    for seed in (31, 131, 231):
+        variant = dataclasses.replace(
+            sc, base=dataclasses.replace(sc.base, seed=seed))
+        gaps.append(parity_report(
+            run_scenario(variant, spec=RunSpec(scale=0.25))))
+    for metric in ("slowdown_geomean_p99", "normalized_memory"):
+        mean = float(np.mean([g[metric] for g in gaps]))
+        assert mean <= 0.15, (metric, gaps)
+
+
+# ---------------------------------------------------------------------------
+# sweeps: cell_count is a structural batch axis in the search layer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_cell_count_sweep_through_search():
+    from repro.opt.search import evaluate_scenario
+    pts = [{"keepalive_s": 300.0},
+           {"keepalive_s": 300.0, "cell_count": 2.0},
+           {"keepalive_s": 300.0, "route_skew": 1.5}]
+    rows = evaluate_scenario("region_failover", pts,
+                             spec=RunSpec(scale=0.25))
+    assert [r["point_id"] for r in rows] == [0, 1, 2]
+    for r in rows:
+        assert np.isfinite(r["slowdown_geomean_p99"])
+    # a different cell count is a genuinely different partition
+    assert rows[1]["slowdown_geomean_p99"] != rows[0]["slowdown_geomean_p99"]
+    # route_skew stays traced within the base cell-count group
+    assert rows[2]["slowdown_geomean_p99"] != rows[0]["slowdown_geomean_p99"]

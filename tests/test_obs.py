@@ -18,6 +18,7 @@ import pytest
 from repro.core.control_plane import ControlPlane, SimWorkerBackend
 from repro.core.metrics import compute, per_function_p99_slowdown
 from repro.core.policies import SyncKeepalivePolicy
+from repro.core.runspec import RunSpec
 from repro.obs import (RunTelemetry, SpanRecorder, check_ledger,
                        ledger_from_chunked, ledger_from_eventsim,
                        ledger_parity, validate)
@@ -34,8 +35,8 @@ def traced_diurnal():
     telemetry on the fluid leg, raw results in ``detail``."""
     obs = SpanRecorder(enabled=True)
     detail = {}
-    rows = run_scenario("diurnal", scale=SCALE, obs=obs, telemetry=16,
-                        detail=detail)
+    rows = run_scenario("diurnal", detail=detail,
+                        spec=RunSpec(scale=SCALE, obs=obs, telemetry=16))
     return obs, detail, rows
 
 
@@ -44,9 +45,11 @@ def traced_diurnal():
 # ---------------------------------------------------------------------------
 
 def test_telemetry_off_is_bit_for_bit():
-    base = run_scenario("diurnal", engines=("simjax",), scale=0.1)[0]
-    telem = run_scenario("diurnal", engines=("simjax",), scale=0.1,
-                         telemetry=8)[0]
+    base = run_scenario("diurnal",
+                        spec=RunSpec(engines=("simjax",), scale=0.1))[0]
+    telem = run_scenario("diurnal",
+                         spec=RunSpec(engines=("simjax",), scale=0.1,
+                                      telemetry=8))[0]
     assert "telemetry" not in base
     for k, v in base.items():
         if k == "wall_s":
@@ -55,10 +58,12 @@ def test_telemetry_off_is_bit_for_bit():
 
 
 def test_spans_off_is_bit_for_bit():
-    base = run_scenario("diurnal", engines=("eventsim",), scale=0.1)[0]
+    base = run_scenario("diurnal",
+                        spec=RunSpec(engines=("eventsim",), scale=0.1))[0]
     obs = SpanRecorder(enabled=True)
-    traced = run_scenario("diurnal", engines=("eventsim",), scale=0.1,
-                          obs=obs)[0]
+    traced = run_scenario("diurnal",
+                          spec=RunSpec(engines=("eventsim",), scale=0.1,
+                                       obs=obs))[0]
     assert len(obs.spans) > 0
     for k, v in base.items():
         if k == "wall_s":
@@ -108,7 +113,8 @@ def test_spans_cover_every_completed_request(traced_diurnal):
 
 def test_node_spans_present_on_fleet_scenario():
     obs = SpanRecorder(enabled=True)
-    run_scenario("spot_storm", engines=("eventsim",), scale=0.1, obs=obs)
+    run_scenario("spot_storm",
+                 spec=RunSpec(engines=("eventsim",), scale=0.1, obs=obs))
     names = {sp.name for sp in obs.spans}
     assert "node_provision" in names
     assert validate(obs) == []
@@ -148,7 +154,8 @@ def test_component_parity_within_band(traced_diurnal):
 
 
 def test_ledger_requires_telemetry():
-    row = run_scenario("cold_tail", engines=("simjax",), scale=0.1)[0]
+    row = run_scenario("cold_tail",
+                       spec=RunSpec(engines=("simjax",), scale=0.1))[0]
     with pytest.raises(ValueError):
         ledger_from_chunked(row)
 

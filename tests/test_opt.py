@@ -8,6 +8,7 @@ import pytest
 
 from repro.opt.frontier import pareto_front
 from repro.opt.space import grid_points
+from repro.core.runspec import RunSpec
 from repro.core.simjax import JaxFleet, JaxPolicy, simulate_chunked
 from repro.core.trace import TraceConfig, synthesize
 from repro.opt import (DEFAULT_SPACE, SearchSpace, active_knobs,
@@ -160,7 +161,7 @@ def test_hybrid_policyspec_bridges_both_engines():
 
 def test_evaluate_scenario_collapses_inert_axes():
     pts = grid_points({"keepalive_s": [60.0, 600.0], "target": [0.5, 1.0]})
-    rows = evaluate_scenario("cold_tail", pts, scale=0.05)
+    rows = evaluate_scenario("cold_tail", pts, spec=RunSpec(scale=0.05))
     assert len(rows) == 4
     assert rows[0]["sims"] == 2            # target is inert for sync
     # inert twins share one simulation bit-for-bit

@@ -8,6 +8,7 @@ import math
 import numpy as np
 import pytest
 
+from repro.core.runspec import RunSpec
 from repro.core.policies import init_theta, learned_keepalive
 from repro.core.policy_api import (AxisSpec, PolicyFamily, get_family,
                                    list_families, sweepable_policy_axes)
@@ -217,7 +218,8 @@ def test_registry_roundtrip_parity_on_diurnal(family):
     spec = dataclasses.replace(sc.policy, kind=family,
                                theta=init_theta(0) if family == "learned"
                                else None)
-    rows = run_scenario(dataclasses.replace(sc, policy=spec), scale=0.25)
+    rows = run_scenario(dataclasses.replace(sc, policy=spec),
+                        spec=RunSpec(scale=0.25))
     assert {r["engine"] for r in rows} == {"eventsim", "simjax"}
     gaps = parity_report(rows)
     waived = _ROUNDTRIP_WAIVED.get(family, {})

@@ -1,24 +1,16 @@
-"""The unified RunSpec API: validation, the deprecation shims on every
-redesigned entry point (run_scenario / evaluate_scenario / simulate_chunked
-/ frontier), and the fleet.sweep legacy re-export path."""
-
-import warnings
+"""The unified RunSpec API: construction/validation, and the post-soak
+contract that ``spec=RunSpec(...)`` is the ONLY calling convention — the
+legacy loose-kwarg shims and the fleet.sweep re-exports are gone, so stale
+call sites fail with ordinary TypeErrors instead of deprecation warnings."""
 
 import pytest
 
-import repro.core.runspec as runspec
-from repro.core.runspec import RunSpec, resolve_spec
+from repro.core.runspec import RunSpec
 from repro.core.simjax import JaxPolicy, simulate_chunked
 from repro.core.trace import TraceConfig, synthesize
 from repro.scenarios import run_scenario
 
 TC = TraceConfig(num_functions=30, duration_s=600, target_total_rps=5, seed=11)
-
-
-def setup_function(_fn):
-    # warn_once keys persist per process; re-arm them so every test sees
-    # the first-hit warning behaviour
-    runspec._WARNED.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -58,110 +50,73 @@ def test_frozen():
 
 
 # ---------------------------------------------------------------------------
-# resolve_spec: the one merge point for every shim
+# the shims are GONE: loose kwargs fail as ordinary TypeErrors
 # ---------------------------------------------------------------------------
 
 
-def test_spec_plus_legacy_is_ambiguous():
-    with pytest.raises(TypeError, match="both spec="):
-        resolve_spec("f", RunSpec(), {"scale": 0.5})
+def test_run_scenario_rejects_legacy_kwargs():
+    with pytest.raises(TypeError):
+        run_scenario("cold_tail", scale=0.05)
+    with pytest.raises(TypeError):
+        run_scenario("cold_tail", engines=("simjax",))
+    with pytest.raises(TypeError):
+        run_scenario("cold_tail", billing="ideal")
 
 
-def test_spec_must_be_a_runspec():
+def test_run_scenario_spec_must_be_a_runspec():
     with pytest.raises(TypeError, match="must be a RunSpec"):
-        resolve_spec("f", {"scale": 0.5}, {"scale": None})
+        run_scenario("cold_tail", spec={"scale": 0.05})
 
 
-def test_legacy_warns_once_per_entry_point():
-    legacy = {"scale": 0.5, "billing": None}
-    with pytest.warns(DeprecationWarning, match="loose keyword"):
-        spec = resolve_spec("f", None, legacy)
-    assert spec == RunSpec(scale=0.5)
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")  # a second hit must stay silent
-        assert resolve_spec("f", None, legacy) == RunSpec(scale=0.5)
-    with pytest.warns(DeprecationWarning):  # distinct entry point re-warns
-        resolve_spec("g", None, legacy)
-
-
-def test_no_kwargs_is_silent_default():
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        assert resolve_spec("f", None, {"scale": None}) == RunSpec()
-
-
-# ---------------------------------------------------------------------------
-# entry-point shims
-# ---------------------------------------------------------------------------
-
-
-def test_run_scenario_legacy_matches_spec():
-    with pytest.warns(DeprecationWarning):
-        old = run_scenario("cold_tail", engines=("simjax",), scale=0.05)
-    new = run_scenario("cold_tail", spec=RunSpec(engines=("simjax",),
-                                                 scale=0.05))
-    assert len(old) == len(new) == 1
-    for k, v in old[0].items():
-        if isinstance(v, float) and k != "wall_s":
-            assert v == new[0][k], k  # bitwise: same code path underneath
-
-
-def test_run_scenario_rejects_spec_plus_legacy():
-    with pytest.raises(TypeError, match="both spec="):
-        run_scenario("cold_tail", scale=0.05, spec=RunSpec(scale=0.05))
-
-
-def test_simulate_chunked_legacy_telemetry_warns():
+def test_simulate_chunked_rejects_legacy_kwargs():
     trace = synthesize(TC)
     pol = JaxPolicy(kind=0, keepalive_s=120)
-    with pytest.warns(DeprecationWarning):
-        old = simulate_chunked(trace, pol, telemetry=0)
-    new = simulate_chunked(trace, pol, spec=RunSpec())
-    for k, v in old.items():
-        if isinstance(v, float):
-            assert v == new[k], k
+    with pytest.raises(TypeError):
+        simulate_chunked(trace, pol, telemetry=0)
+    with pytest.raises(TypeError):
+        simulate_chunked(trace, pol, billing="ideal")
+    with pytest.raises(TypeError, match="must be a RunSpec"):
+        simulate_chunked(trace, pol, spec={"telemetry": 4})
 
 
-def test_evaluate_scenario_legacy_matches_spec():
+def test_evaluate_scenario_rejects_legacy_kwargs():
     from repro.opt import evaluate_scenario
-    pts = [{"keepalive_s": 60.0}, {"keepalive_s": 600.0}]
-    with pytest.warns(DeprecationWarning):
-        old = evaluate_scenario("cold_tail", pts, scale=0.05)
-    new = evaluate_scenario("cold_tail", pts, spec=RunSpec(scale=0.05))
-    assert [r["slowdown_geomean_p99"] for r in old] \
-        == [r["slowdown_geomean_p99"] for r in new]
+    with pytest.raises(TypeError):
+        evaluate_scenario("cold_tail", [{}], scale=0.05)
+    with pytest.raises(TypeError, match="must be a RunSpec"):
+        evaluate_scenario("cold_tail", [{}], spec=0.05)
 
 
-def test_frontier_typo_fails_loudly():
+def test_frontier_rejects_legacy_kwargs_and_typos():
     from repro.scenarios.runner import frontier
     with pytest.raises(TypeError):
-        frontier(scal=0.1)  # the old **kw signature swallowed this
+        frontier(scale=0.1)     # the shim kwarg is gone
+    with pytest.raises(TypeError):
+        frontier(billing="gcr")
+    with pytest.raises(TypeError):
+        frontier(scal=0.1)      # the old **kw signature swallowed this
+
+
+def test_runspec_module_has_no_shim_surface():
+    import repro.core.runspec as runspec
+    for name in ("resolve_spec", "warn_once", "_WARNED"):
+        assert not hasattr(runspec, name), name
+
+
+def test_spec_path_still_runs():
+    rows = run_scenario("cold_tail", spec=RunSpec(engines=("simjax",),
+                                                  scale=0.05))
+    assert len(rows) == 1 and rows[0]["engine"] == "simjax"
 
 
 # ---------------------------------------------------------------------------
-# fleet.sweep legacy re-exports
+# fleet.sweep re-exports are gone
 # ---------------------------------------------------------------------------
 
 
-def test_sweep_legacy_reexports_warn_and_forward():
+def test_sweep_legacy_reexports_removed():
     import repro.fleet.sweep as sweep
-    from repro.opt.frontier import pareto_front
-    from repro.opt.space import SWEEPABLE, grid_points
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        assert getattr(sweep, "pareto_front") is pareto_front
-    # the nag is once per NAME, so each legacy name warns on first access
-    with pytest.warns(DeprecationWarning):
-        assert getattr(sweep, "grid_points") is grid_points
-    with pytest.warns(DeprecationWarning):
-        assert getattr(sweep, "SWEEPABLE") is SWEEPABLE
-    with pytest.raises(AttributeError):
-        sweep.not_a_thing
-
-
-def test_sweep_legacy_warns_once_then_silent():
-    import repro.fleet.sweep as sweep
-    with pytest.warns(DeprecationWarning):
-        sweep.pareto_front
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        sweep.pareto_front
+    for name in ("pareto_front", "grid_points", "SWEEPABLE"):
+        with pytest.raises(AttributeError):
+            getattr(sweep, name)
+    assert callable(sweep.sweep)   # the stable surface remains

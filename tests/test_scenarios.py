@@ -6,6 +6,7 @@ import dataclasses
 import numpy as np
 import pytest
 
+from repro.core.runspec import RunSpec
 from repro.core.simjax import (JaxFleet, JaxPolicy, simulate, simulate_chunked,
                                summarize)
 from repro.core.trace import TraceConfig, merge_traces, synthesize
@@ -191,7 +192,7 @@ def test_scenario_parity_oracle_vs_simjax(name):
     """Each oracle-feasible scenario replays through BOTH engines from one
     spec with <= 15% relative gap on slowdown / normalized memory /
     creation rate (the hybrid-methodology acceptance band)."""
-    rows = run_scenario(name, scale=0.25)
+    rows = run_scenario(name, spec=RunSpec(scale=0.25))
     assert {r["engine"] for r in rows} == {"eventsim", "simjax"}
     gaps = parity_report(rows)
     for metric, gap in gaps.items():
@@ -204,7 +205,7 @@ def test_fig9_scenario_parity_at_reduced_scale():
     memory hold the 15% band there (creation rate is out-of-band for this
     strongly bursty trace under the Poisson-renewal expiry model — a
     documented limitation, see EXPERIMENTS.md)."""
-    rows = run_scenario("fig9_production", scale=0.25)
+    rows = run_scenario("fig9_production", spec=RunSpec(scale=0.25))
     assert {r["engine"] for r in rows} == {"eventsim", "simjax"}
     gaps = parity_report(rows)
     assert gaps["slowdown_geomean_p99"] <= 0.15
@@ -212,7 +213,8 @@ def test_fig9_scenario_parity_at_reduced_scale():
 
 
 def test_fig9_oracle_skipped_at_full_scale():
-    rows = run_scenario("fig9_production", engines=("eventsim",), scale=1.0)
+    rows = run_scenario("fig9_production",
+                        spec=RunSpec(engines=("eventsim",), scale=1.0))
     assert rows == []                  # infeasible leg skipped, not crashed
 
 
@@ -228,7 +230,8 @@ def test_policyspec_bridges_both_engines():
 
 
 def test_runner_row_schema():
-    rows = run_scenario("cold_tail", engines=("simjax",), scale=0.1)
+    rows = run_scenario("cold_tail",
+                        spec=RunSpec(engines=("simjax",), scale=0.1))
     assert len(rows) == 1
     r = rows[0]
     assert {"scenario", "engine", "scale", "invocations", "wall_s",

@@ -10,7 +10,6 @@ this file under XLA_FLAGS=--xla_force_host_platform_device_count=8.
 import numpy as np
 import pytest
 
-import repro.core.runspec as runspec
 from repro.core.runspec import RunSpec
 from repro.core.simjax import JaxFleet, JaxPolicy, simulate_chunked
 from repro.core.trace import (FunctionProfile, RateTrace, TraceConfig,
@@ -256,7 +255,6 @@ def test_unknown_scenarios_exit2(capsys):
 
 def test_runspec_threads_devices_through_runner(trace):
     # run_scenario(devices=1) must agree bitwise with the unsharded run
-    runspec._WARNED.clear()
     base = run_scenario("cold_tail",
                         spec=RunSpec(engines=("simjax",), scale=0.05))
     shard = run_scenario("cold_tail",

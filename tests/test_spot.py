@@ -6,6 +6,7 @@ import math
 
 import pytest
 
+from repro.core.runspec import RunSpec
 from repro.core.cluster import GONE, Cluster
 from repro.core.eventsim import EventSim, SimConfig
 from repro.core.metrics import compute
@@ -242,14 +243,16 @@ def test_spot_storm_parity_oracle_vs_simjax():
     against the oracle's mean, not one Poisson realization)."""
     from repro.scenarios.runner import run_scenario
     sc = "spot_storm"
-    fluid = run_scenario(sc, engines=("simjax",), scale=0.25)[0]
+    fluid = run_scenario(sc, spec=RunSpec(engines=("simjax",),
+                                          scale=0.25))[0]
     keys = ("slowdown_geomean_p99", "normalized_memory", "creation_rate")
     acc = {k: 0.0 for k in keys}
     seeds = (0, 1, 2)
     evictions = 0
     for seed in seeds:
-        row = run_scenario(sc, engines=("eventsim",), scale=0.25,
-                           sim=SimConfig(tick_s=1.0, seed=seed))[0]
+        row = run_scenario(sc, sim=SimConfig(tick_s=1.0, seed=seed),
+                           spec=RunSpec(engines=("eventsim",),
+                                        scale=0.25))[0]
         evictions += row["node_evictions"]
         for k in keys:
             acc[k] += row[k] / len(seeds)
