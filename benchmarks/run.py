@@ -6,9 +6,11 @@ Default: every figure benchmark, printing ``name,us_per_call,derived`` CSV.
 0.1x, the scenario suite at 0.1x (oracle legs included at that scale), the
 per-scenario frontier hypervolumes, the fig12 spot-vs-on-demand cost
 ratio (fluid-only, deterministic), and the fig13 billing-delta gate
-(provider-vs-ideal frontier rank shift + billed oracle parity), and the
+(provider-vs-ideal frontier rank shift + billed oracle parity), the
 fig14 multi-region cells gate (failover slowdown + the worst cells
-oracle-vs-fluid gap), collected into a flat {metric: value}
+oracle-vs-fluid gap), and the fig15 optimizer duel (worst evo-vs-grid
+hypervolume ratio at equal evaluation budget), collected into a flat
+{metric: value}
 dict where EVERY metric is lower-is-better (wall seconds, p99 slowdown,
 $/1M requests, memory ratio, cost ratio).
 ``--json`` writes it (BENCH_ci.json in CI); ``--baseline`` compares against
@@ -51,6 +53,7 @@ MODULES = [
     "benchmarks.fig12_spot_frontier",
     "benchmarks.fig13_billing_delta",
     "benchmarks.fig14_region_failover",
+    "benchmarks.fig15_optimizer",
     "benchmarks.scenario_suite",
     "benchmarks.table1_trends",
     "benchmarks.roofline",
@@ -81,7 +84,11 @@ def quick_hypervolume() -> dict:
         rows = evaluate_scenario(name, points,
                                  spec=RunSpec(scale=QUICK_SCALE))
         hv = hypervolume(rows, *HV_REF)
-        out[f"frontier_hv_inv_{name}"] = 1.0 / hv if hv > 0 else math.inf
+        # hypervolume's no-finite-rows sentinel is NaN (PR 7 convention);
+        # the inverse gate metric must turn that into inf, not NaN, so the
+        # baseline comparison fails loudly instead of comparing False
+        out[f"frontier_hv_inv_{name}"] = (
+            1.0 / hv if math.isfinite(hv) and hv > 0 else math.inf)
     return out
 
 
@@ -161,6 +168,19 @@ def run_quick() -> dict:
     metrics["fig14_wall_s"] = round(time.time() - t0, 3)
     metrics["fig14_failover_p99"] = f14["p99"]
     metrics["fig14_cell_parity"] = f14["parity"]
+
+    # optimizer duel (repro.opt.evo): hypervolume at the grid's own
+    # evaluation budget, population search vs enumeration, on the three
+    # fig15 scenarios (two sync + the structural-gene cells space).  The
+    # gate metric is the WORST grid/evo ratio: <= 1 means evo matched or
+    # beat the grid everywhere at equal spend, so a regression in seeding,
+    # variation, or budget accounting shows up as the ratio rising above
+    # its baseline (deterministic: fixed seed, fluid engine only)
+    from benchmarks import fig15_optimizer
+    t0 = time.time()
+    f15 = fig15_optimizer.run(scale=QUICK_SCALE)
+    metrics["fig15_wall_s"] = round(time.time() - t0, 3)
+    metrics["fig15_hv_at_budget"] = f15["worst_ratio"]
 
     # attribution ledger (repro.obs): trace diurnal through BOTH engines at
     # the 0.25 parity-calibration point and gate on (a) attribution-sum

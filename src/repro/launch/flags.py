@@ -116,6 +116,45 @@ def validate_run_flags(args: argparse.Namespace) -> int:
     return 0
 
 
+def add_search_flags(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """Search-engine selection flags (frontier-style launchers): which
+    engine walks the space (``--algo``), how much simulation it may spend
+    (``--budget``), and the seed behind every stochastic choice
+    (``--seed``) — same shared-vocabulary contract as ``add_run_flags``."""
+    ap.add_argument("--algo", default="grid", metavar="ALGO",
+                    help="search engine: 'grid' enumerates the space's "
+                         "cartesian product; 'evo' runs the NSGA-II "
+                         "population optimizer at the same evaluation "
+                         "budget (repro.opt.evo)")
+    ap.add_argument("--budget", type=int, default=None, metavar="N",
+                    help="evo evaluation budget in simulated candidate-"
+                         "scenario pairs (default: exactly what the grid "
+                         "would cost, for a like-for-like comparison; "
+                         "ignored under --algo grid)")
+    ap.add_argument("--seed", type=int, default=0, metavar="S",
+                    help="seed for every stochastic search choice (evo "
+                         "variation, spot-check winner sampling); a seeded "
+                         "run replays bit-for-bit (default 0)")
+    return ap
+
+
+def validate_search_flags(args: argparse.Namespace) -> int:
+    """Friendly-error validation of the search flags: exit-2 contract,
+    printing the registered engines instead of a traceback."""
+    from repro.opt.search import SEARCH_ALGOS
+    if args.algo not in SEARCH_ALGOS:
+        # a friendly listing, not a ValueError traceback
+        print(f"unknown search algo {args.algo!r}", file=sys.stderr)
+        print(f"registered algos: {', '.join(SEARCH_ALGOS)}",
+              file=sys.stderr)
+        return 2
+    if args.budget is not None and args.budget <= 0:
+        print(f"--budget must be a positive candidate-scenario pair count, "
+              f"got {args.budget}", file=sys.stderr)
+        return 2
+    return 0
+
+
 def unknown_scenarios(names) -> int:
     """Exit-2 helper shared by the launchers: print the friendly listing
     for any unregistered scenario names; 0 when all resolve."""

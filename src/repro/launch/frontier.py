@@ -12,6 +12,14 @@ oracle spot-check verdicts on sampled winners.
   PYTHONPATH=src python -m repro.launch.frontier --scale 1.0 --spot-check 5
   PYTHONPATH=src python -m repro.launch.frontier --scenario cold_tail \\
       --scale 0.25 --learned --learn-steps 60
+  PYTHONPATH=src python -m repro.launch.frontier --scenario fleet_cost_stress \\
+      --scale 0.1 --algo evo --budget 24 --seed 0
+
+``--algo evo`` swaps the exhaustive grid for the NSGA-II population
+optimizer (``repro.opt.evo``) over the same space and scenarios, budgeted
+in simulated candidate-scenario pairs (``--budget``; default: exactly the
+grid's own cost) — everything downstream (spot-checks, demotion, outputs)
+applies unchanged.
 
 ``--learned`` additionally trains the gradient-learned policy family per
 scenario (``repro.opt.learned``: jax.grad through the chunked scan),
@@ -37,8 +45,9 @@ import os
 import sys
 
 from repro.fleet.billing import get_profile, list_profiles
-from repro.launch.flags import (add_run_flags, unknown_scenarios,
-                                validate_run_flags)
+from repro.launch.flags import (add_run_flags, add_search_flags,
+                                unknown_scenarios, validate_run_flags,
+                                validate_search_flags)
 from repro.opt.frontier import frontier_slack
 from repro.opt.search import frontier_search, oracle_spot_check
 from repro.opt.space import SWEEPABLE
@@ -102,6 +111,7 @@ def build_parser() -> argparse.ArgumentParser:
     add_run_flags(ap, scale_default=1.0,
                   scale_help="refine-stage trace scale (default 1.0)",
                   telemetry="flag")
+    add_search_flags(ap)
     return ap
 
 
@@ -132,7 +142,7 @@ def main(argv=None) -> int:
 
     say = (lambda s: None) if args.quiet else \
         (lambda s: print(s, file=sys.stderr))
-    rc = validate_run_flags(args)
+    rc = validate_run_flags(args) or validate_search_flags(args)
     if rc:
         return rc
     if args.scenario:
@@ -178,11 +188,14 @@ def main(argv=None) -> int:
                              coarse_frac=args.coarse_frac, eps=args.eps,
                              survivor_cap=args.cap, billing=args.billing,
                              log=say, telemetry=telem, devices=args.devices,
-                             cluster=args.cluster)
+                             cluster=args.cluster, algo=args.algo,
+                             budget=args.budget, seed=args.seed)
     checks = []
     if spot_check > 0:
+        import numpy as np
         checks = oracle_spot_check(result, k=spot_check, log=say,
-                                   telemetry=telem)
+                                   telemetry=telem,
+                                   rng=np.random.default_rng(args.seed))
 
     learned_records = []
     if args.learned:
@@ -231,7 +244,9 @@ def main(argv=None) -> int:
                         "spot_check": args.spot_check,
                         "learned": args.learned,
                         "billing": args.billing, "tier": args.tier,
-                        "devices": args.devices, "cluster": args.cluster}}
+                        "devices": args.devices, "cluster": args.cluster,
+                        "algo": args.algo, "budget": args.budget,
+                        "seed": args.seed}}
     with open(os.path.join(args.out_dir, "frontier.json"), "w") as fh:
         json.dump(payload, fh, indent=2, default=float)
     if telem is not None:

@@ -1,8 +1,16 @@
 # Frontier engine: cross-scenario multi-objective search over the joint
-# (policy x fleet) parameter space — coarse vmapped grid, successive-halving
-# refine, per-scenario Pareto fronts, the cross-scenario robust frontier,
-# oracle spot-checks on sampled winners, and gradient-learned policies
-# through the differentiable chunked scan.
+# (policy x fleet) parameter space — coarse vmapped grid or the NSGA-II
+# population optimizer (repro.opt.evo), successive-halving refine,
+# per-scenario Pareto fronts, the cross-scenario robust frontier, oracle
+# spot-checks on sampled winners, and gradient-learned policies through
+# the differentiable chunked scan.
+from repro.opt.evo import (  # noqa: F401
+    BudgetExhausted,
+    EvalBudget,
+    EvoConfig,
+    evo_search,
+    grid_budget,
+)
 from repro.opt.frontier import (  # noqa: F401
     epsilon_survivors,
     frontier_slack,
@@ -15,9 +23,11 @@ from repro.opt.learned import (  # noqa: F401
     confirm,
     evaluate_trained,
     make_loss,
+    refine_leaves,
     train_policy,
 )
 from repro.opt.search import (  # noqa: F401
+    SEARCH_ALGOS,
     FrontierResult,
     default_fleet,
     evaluate_points,

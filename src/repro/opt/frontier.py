@@ -26,7 +26,8 @@ Y_DEFAULT = "slowdown_geomean_p99"
 
 def _finite(rows: Sequence[dict], x: str, y: str) -> list[dict]:
     return [r for r in rows
-            if math.isfinite(r[x]) and math.isfinite(r[y])]
+            if math.isfinite(r.get(x, math.nan))
+            and math.isfinite(r.get(y, math.nan))]
 
 
 def pareto_front(rows: Sequence[dict], x: str = X_DEFAULT,
@@ -45,9 +46,12 @@ def frontier_slack(row: dict, front: Sequence[dict], x: str = X_DEFAULT,
     """How far a row sits from a front, as the smallest uniform relative
     inflation that makes some front point dominate it: min over front of
     max(r.x/f.x, r.y/f.y).  1.0 on the front; 1.2 = within 20%.  Assumes
-    positive metrics (cost > 0, slowdown >= 1)."""
+    positive metrics (cost > 0, slowdown >= 1).  An EMPTY front (every
+    candidate demoted or NaN) yields ``inf`` — nothing is "on" a front
+    that does not exist, so downstream on_front checks read False instead
+    of silently passing."""
     if not front:
-        return 1.0
+        return math.inf
     return min(max(row[x] / max(f[x], 1e-12), row[y] / max(f[y], 1e-12))
                for f in front)
 
@@ -77,7 +81,15 @@ def hypervolume(rows: Sequence[dict], x_ref: float, y_ref: float,
     time (ROADMAP: "multi-objective CI tracking"): a point-wise metric gate
     misses a front that got strictly worse in the middle while its
     endpoints held.  Points at or beyond the reference contribute nothing;
-    0.0 means no row dominates the reference point at all."""
+    0.0 means no row dominates the reference point at all.
+
+    An empty or all-non-finite row set returns ``nan`` — PR 7's
+    zero-completion convention: "the measurement does not exist" must
+    stay distinguishable from "a frontier exists but dominates nothing"
+    (a genuine 0.0), or a scenario whose every candidate failed would
+    read as a mere regression instead of a broken run."""
+    if not _finite(rows, x, y):
+        return math.nan
     front = [r for r in pareto_front(rows, x, y)
              if r[x] < x_ref and r[y] < y_ref]
     hv, y_prev = 0.0, y_ref

@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional, Union
+from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -280,6 +280,77 @@ def train_policy(scenario: Union[str, Scenario], family: str = "learned",
     trained = dataclasses.replace(spec, extra=extra_new or None, **rep)
     return TrainResult(policy=trained.to_jax(), scenario=sc.name, scale=scale,
                        history=history, wall_s=time.time() - t0)
+
+
+def refine_leaves(scenario: Union[str, Scenario], point: dict,
+                  axes: Sequence[str], scale: float = 0.25, steps: int = 6,
+                  lr: float = 0.08, w_lat: float = 4.0,
+                  sim: Optional[SimConfig] = None,
+                  billing: Union[str, BillingProfile, None] = None) -> dict:
+    """Gradient-refine the named CONTINUOUS policy axes of one searched
+    point on one scenario: a few Adam steps over ``jax.grad`` of the same
+    surrogate loss ``train_policy`` minimizes, differentiating the scalar
+    leaves (keepalive_s, target, prewarm_s, ...) instead of a weight
+    pytree — the local-polish move the evo engine applies to elite
+    individuals, reaching configurations BETWEEN any grid's rungs.
+
+    Returns a new point dict: ``point`` with each refined axis replaced by
+    its best-loss value, clipped into the family's declared AxisSpec
+    bounds (so a refined elite is always re-evaluable).  Axes the pinned
+    policy's params pytree does not carry are skipped; with nothing to
+    refine the point is returned unchanged."""
+    from repro.opt.search import point_scenario
+    sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    sc_pin = point_scenario(sc, point)
+    fam = get_family(sc_pin.policy.kind)
+    sim = sim or SimConfig(tick_s=sc_pin.policy.tick_s)
+    prof = resolve_profile(billing, sc.billing)
+    policy = sc_pin.policy.to_jax()
+    fleet = default_fleet(sc_pin)
+    fleet = dataclasses.replace(fleet, **{k: float(v)
+                                          for k, v in point.items()
+                                          if k in _PFLEET})
+    trace = apply_throttle(sc_pin.build_trace(scale), prof)
+    loss_fn, params0 = make_loss(trace, policy, sim=sim, dt=sim.tick_s,
+                                 fleet=fleet, w_lat=w_lat, billing=prof)
+    live = [a for a in axes
+            if a in params0 and np.ndim(params0[a]) == 0
+            and a in fam.axis_names()]
+    if not live:
+        return dict(point)
+    frozen = {k: v for k, v in params0.items() if k not in live}
+    theta = {k: jnp.asarray(params0[k], jnp.float32) for k in live}
+
+    @jax.jit
+    def value_and_grad(th):
+        return jax.value_and_grad(lambda t: loss_fn({**frozen, **t}))(th)
+
+    m = jax.tree.map(jnp.zeros_like, theta)
+    v = jax.tree.map(jnp.zeros_like, theta)
+    best, best_theta = float("inf"), theta
+
+    def clip(th):
+        # a gradient step must not leave the declared envelope: clip each
+        # leaf into its AxisSpec bounds after every update
+        return {k: jnp.clip(t, fam.axis(k).lo, fam.axis(k).hi)
+                for k, t in th.items()}
+
+    for t in range(1, steps + 1):
+        val, g = value_and_grad(theta)
+        if float(val) < best:
+            best, best_theta = float(val), theta
+        # relative step: the leaves live on wildly different scales
+        # (keepalive in seconds vs target in [0, 4]), so Adam's unit step
+        # is rescaled by each leaf's magnitude
+        delta, m, v = _adam_update(g, m, v, t, lr)
+        theta = clip({k: theta[k] - delta[k] * jnp.maximum(
+            jnp.abs(theta[k]), 1.0) for k in theta})
+    val, _ = value_and_grad(theta)
+    if float(val) < best:
+        best, best_theta = float(val), theta
+    return {**point, **{k: float(np.clip(float(v_), fam.axis(k).lo,
+                                         fam.axis(k).hi))
+                        for k, v_ in best_theta.items()}}
 
 
 def learned_scenario(sc: Scenario, result: TrainResult) -> Scenario:

@@ -306,6 +306,11 @@ class FrontierResult:
     # the sharding / clustering basis of every row, for the same reason
     devices: int = 0
     cluster: float = 0.0
+    # which search engine produced this result ("grid" enumerates, "evo"
+    # evolves — see repro.opt.evo) and, for evo, the exact evaluation
+    # ledger (an ``repro.opt.evo.EvalBudget``)
+    algo: str = "grid"
+    budget: Optional[object] = None
 
     def robust_rows(self) -> list[dict]:
         """The robust frontier as rows: one per (robust point, scenario),
@@ -320,6 +325,9 @@ class FrontierResult:
 
     def summary(self) -> dict:
         return {
+            "algo": self.algo,
+            "budget": self.budget.summary() if self.budget is not None
+            else None,
             "scale": self.scale, "coarse_scale": self.coarse_scale,
             "n_points": len(self.points), "wall_s": round(self.wall_s, 3),
             "scenarios": {
@@ -354,6 +362,10 @@ def _front_hypervolume(rows: Sequence[dict]) -> float:
 # degenerate workload unrelated to the refine-stage one
 MIN_COARSE_SCALE = 0.05
 
+# the search engines frontier_search can dispatch to; the CLI validates
+# its --algo flag against this tuple (repro.launch.flags)
+SEARCH_ALGOS = ("grid", "evo")
+
 
 def frontier_search(scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
                     space: SearchSpace = DEFAULT_SPACE, scale: float = 1.0,
@@ -362,13 +374,28 @@ def frontier_search(scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
                     billing: Union[str, BillingProfile, None] = None,
                     log: Optional[Callable[[str], None]] = None,
                     telemetry=None, devices: int = 0,
-                    cluster: float = 0.0) -> FrontierResult:
+                    cluster: float = 0.0, *, algo: str = "grid",
+                    budget: Optional[int] = None, seed: int = 0,
+                    forbidden: Sequence[dict] = (),
+                    evo_config=None) -> FrontierResult:
     """The coarse -> survive -> refine -> reduce pipeline over every given
     scenario (default: every registered event-level scenario).  ``scale``
     is the refine-stage trace scale; the coarse grid runs at
     ``coarse_frac * scale``, clamped to [MIN_COARSE_SCALE, scale] so a
     small search scale never pushes the coarse traces onto their
     degenerate size floors.
+
+    ``algo`` picks the search engine over the SAME space and contract:
+    ``"grid"`` (default) enumerates the cartesian product as described
+    above; ``"evo"`` dispatches to the population optimizer
+    (``repro.opt.evo.evo_search`` — NSGA-II selection over the same
+    coarse scale, budgeted in simulated candidate-scenario pairs, grid
+    parity by default via ``grid_budget``).  ``budget`` / ``seed`` /
+    ``forbidden`` / ``evo_config`` parameterize the evo engine and are
+    ignored by the grid (enumeration has no stochastic state and always
+    costs exactly its deduped product).  Both engines return the same
+    ``FrontierResult`` (tagged ``algo``), so ``oracle_spot_check`` and
+    the CLI output paths apply unchanged.
 
     ``devices`` shards each stage's candidate batch over local devices
     (the point axis, see ``evaluate_points``); ``cluster`` buckets each
@@ -380,6 +407,16 @@ def frontier_search(scenarios: Optional[Sequence[Union[str, Scenario]]] = None,
 
     ``telemetry`` (a ``repro.obs.RunTelemetry``) receives one event per
     stage x scenario carrying sims / wall / front size / hypervolume."""
+    if algo not in SEARCH_ALGOS:
+        raise ValueError(f"unknown search algo {algo!r}; "
+                         f"choose from {list(SEARCH_ALGOS)}")
+    if algo == "evo":
+        from repro.opt.evo.engine import EvoConfig, evo_search
+        return evo_search(scenarios, space, scale, coarse_frac, eps,
+                          survivor_cap, billing, log, telemetry, devices,
+                          cluster, budget=budget, seed=seed,
+                          config=evo_config or EvoConfig(),
+                          forbidden=forbidden)
     t_start = time.time()
     say = log or (lambda s: None)
     tel = telemetry.emit if telemetry is not None else (lambda *a, **k: None)
@@ -523,13 +560,28 @@ def hazard_parity_gaps(sc_point: Scenario, scale: float,
             for m in PARITY_KEYS}
 
 
-def sample_front(front: Sequence[dict], k: int) -> list[dict]:
-    """Up to ``k`` evenly spaced winners along a (cost-sorted) front."""
+def sample_front(front: Sequence[dict], k: int,
+                 rng: Optional[np.random.Generator] = None) -> list[dict]:
+    """Up to ``k`` winners along a (cost-sorted) front: evenly spaced by
+    default, or — given an explicit seeded ``rng`` — a reproducible draw
+    that keeps both endpoints and samples the interior without
+    replacement.  All randomness on the spot-check path is INJECTED
+    through this parameter; there is no module-level RNG to make two
+    "identical" runs sample different winners."""
     if not front or k <= 0:
         return []
     if len(front) <= k:
         return list(front)
-    idx = np.unique(np.linspace(0, len(front) - 1, k).round().astype(int))
+    if rng is None:
+        idx = np.unique(np.linspace(0, len(front) - 1, k).round().astype(int))
+    elif k == 1:
+        idx = np.asarray([rng.integers(0, len(front))])
+    else:
+        interior = rng.choice(len(front) - 2,
+                              size=min(k - 2, len(front) - 2),
+                              replace=False) + 1
+        idx = np.unique(np.concatenate(
+            ([0, len(front) - 1], interior))).astype(int)
     return [front[i] for i in idx]
 
 
@@ -537,7 +589,9 @@ def oracle_spot_check(result: FrontierResult, k: int = 3,
                       scale: Optional[float] = None, tol: float = 0.15,
                       demote: bool = True, include_infeasible: bool = False,
                       log: Optional[Callable[[str], None]] = None,
-                      telemetry=None) -> list[dict]:
+                      telemetry=None,
+                      rng: Optional[np.random.Generator] = None
+                      ) -> list[dict]:
     """Replay sampled frontier winners per oracle-feasible scenario through
     BOTH engines and judge the oracle-vs-fluid gap against the parity band.
 
@@ -565,6 +619,10 @@ def oracle_spot_check(result: FrontierResult, k: int = 3,
     (``hazard_parity_gaps``): the fluid model is the hazard process's
     expectation, and a handful of Poisson reclaim draws at 0.25x would
     otherwise dominate the verdict.
+
+    ``rng`` (a seeded ``numpy.random.Generator``) randomizes which front
+    winners are sampled, reproducibly; the default keeps the historical
+    deterministic even spacing (see ``sample_front``).
     """
     check_scale = 0.25 if scale is None else scale
     say = log or (lambda s: None)
@@ -609,7 +667,7 @@ def oracle_spot_check(result: FrontierResult, k: int = 3,
                 if key not in seen:
                     seen.add(key)
                     classes.append(r)
-            todo = sample_front(classes, k - passed)
+            todo = sample_front(classes, k - passed, rng=rng)
             if not todo:
                 if any(check_key(r["point_id"]) not in checked for r in rows):
                     # unchecked classes remain but are dominated by already

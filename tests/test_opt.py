@@ -71,6 +71,32 @@ def test_epsilon_survivors_band_and_cap():
     assert len(epsilon_survivors(rows, eps=5.0, cap=2)) == 2
 
 
+def test_epsilon_survivors_empty_and_all_nan():
+    assert epsilon_survivors([]) == []
+    nan_rows = [{"cost_per_million": math.nan,
+                 "slowdown_geomean_p99": math.nan, "point_id": 0}]
+    assert epsilon_survivors(nan_rows) == []
+
+
+def test_hypervolume_sentinels():
+    from repro.opt.frontier import hypervolume
+    # labeled sentinel, not a silent 0.0: no finite rows means the metric
+    # is undefined (PR 7 zero-completion convention)
+    assert math.isnan(hypervolume([], 2000.0, 50.0))
+    assert math.isnan(hypervolume(
+        [{"cost_per_million": math.nan, "slowdown_geomean_p99": 1.0}],
+        2000.0, 50.0))
+    hv = hypervolume(_rows([(1000.0, 25.0)]), 2000.0, 50.0)
+    assert hv == pytest.approx(1000.0 * 25.0)
+
+
+def test_frontier_slack_empty_front_is_inf():
+    from repro.opt.frontier import frontier_slack
+    row = {"cost_per_million": 1.0, "slowdown_geomean_p99": 1.0}
+    assert math.isinf(frontier_slack(row, []))
+    assert not (frontier_slack(row, []) <= 1.0 + 1e-9)   # on_front stays False
+
+
 # ---------------------------------------------------------------------------
 # robust-frontier reducer
 # ---------------------------------------------------------------------------
